@@ -1,0 +1,42 @@
+"""Shared benchmark utilities: wall-clock timing of jitted callables +
+CSV row emission."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List
+
+import jax
+
+ROWS: List[Dict] = []
+
+
+def emit(bench: str, name: str, value, unit: str, **extra):
+    row = {"bench": bench, "name": name, "value": value, "unit": unit}
+    row.update(extra)
+    ROWS.append(row)
+    tail = " ".join(f"{k}={v}" for k, v in extra.items())
+    print(f"[{bench}] {name}: {value} {unit} {tail}".rstrip())
+
+
+def time_fn(fn: Callable, *args, warmup: int = 1, iters: int = 3) -> float:
+    """Median wall time (s) of fn(*args) with block_until_ready."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def dump_csv(path: str):
+    import csv
+    keys = ["bench", "name", "value", "unit"]
+    extra = sorted({k for r in ROWS for k in r} - set(keys))
+    with open(path, "w", newline="") as f:
+        w = csv.DictWriter(f, fieldnames=keys + extra)
+        w.writeheader()
+        w.writerows(ROWS)
+    print(f"[benchmarks] wrote {len(ROWS)} rows to {path}")

@@ -1,0 +1,49 @@
+"""Paper Fig. 6 — GEMM performance across data types at 512².
+
+Model layer: speedups per dtype/backend with the paper's MAC-unit PPA
+constraints (Table 2: int @1 GHz, fp @600 MHz; fp16 CPU penalty §4.3.2).
+Host layer: Pallas kernel (interpret) per dtype vs oracle for throughput
+sanity + correctness.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+from repro.core import sysmodel as SM
+from repro.kernels.matrixflow_gemm import matrixflow_gemm
+
+
+def run():
+    wl = ((SM.Gemm(512, 512, 512),), ())
+    for dt in ("int8", "int16", "int32", "fp16", "fp32"):
+        t = SM.speedup_table(wl, dt)
+        emit("fig6_dtype", f"accel_dc_{dt}", round(t["mf_dc"], 1), "x")
+        emit("fig6_dtype", f"neon_{dt}", round(t["neon"], 1), "x")
+        emit("fig6_dtype", f"omp_{dt}", round(t["omp"], 1), "x")
+
+    # host-side kernel sweep (correctness + relative cost)
+    rng = np.random.default_rng(0)
+    for dt, tol in ((jnp.float32, 1e-4), (jnp.bfloat16, 5e-2),
+                    (jnp.int8, 0)):
+        if dt == jnp.int8:
+            a = jnp.asarray(rng.integers(-8, 8, (256, 256)).astype(np.int8))
+            b = jnp.asarray(rng.integers(-8, 8, (256, 256)).astype(np.int8))
+        else:
+            a = jnp.asarray(rng.standard_normal((256, 256),
+                                                np.float32)).astype(dt)
+            b = jnp.asarray(rng.standard_normal((256, 256),
+                                                np.float32)).astype(dt)
+        t = time_fn(lambda a=a, b=b: matrixflow_gemm(a, b, interpret=True),
+                    warmup=1, iters=2)
+        ref = jnp.dot(a.astype(jnp.float32), b.astype(jnp.float32))
+        out = matrixflow_gemm(a, b, interpret=True).astype(jnp.float32)
+        err = float(jnp.abs(out - ref).max())
+        ok = err <= max(tol * float(jnp.abs(ref).max()), 1e-3)
+        emit("fig6_dtype", f"kernel_interpret_{jnp.dtype(dt).name}",
+             round(t * 1e3, 1), "ms", max_err=f"{err:.1e}", ok=ok)
+
+
+if __name__ == "__main__":
+    run()

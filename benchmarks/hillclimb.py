@@ -1,0 +1,123 @@
+"""§Perf hillclimb driver: run a dry-run cell under a named variant and
+report the roofline-term deltas vs baseline.
+
+Variants are the experiment arms of EXPERIMENTS.md §Perf:
+
+  baseline      the paper-faithful configuration as swept
+  seqpar        activation sequence parallelism (act_seq → model axis)
+  kvseq         KV-cache sequence sharding (act_kv_seq → model axis):
+                flash-decode-style partial-softmax with small all-reduces
+  dots          remat policy 'dots' (save MXU outputs, recompute elementwise)
+  noremat       remat off (memory-for-traffic trade)
+  mb4 / mb8     gradient-accumulation microbatching (train cells)
+  batch2d       batch sharded over (data × model) (frees the model axis
+                for archs whose heads don't divide it)
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.hillclimb --arch smollm-135m \
+      --shape train_4k --variants baseline seqpar batch2d
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+
+VARIANTS = ("baseline", "seqpar", "kvseq", "dots", "noremat", "mb4", "mb8",
+            "batch2d", "seqpar_dots", "kvseq_batch2d")
+
+
+def run_variant(arch: str, shape: str, variant: str, multi_pod: bool = False):
+    # import inside: dryrun sets XLA_FLAGS at import time
+    import repro.launch.dryrun as DR
+    import repro.configs.registry as REG
+    import repro.launch.steps as ST
+
+    overrides = {}
+    cfg_patch = {}
+    microbatches = 1
+    for piece in variant.split("_"):
+        if piece == "seqpar":
+            overrides["act_seq"] = "model"
+        elif piece == "kvseq":
+            overrides["act_kv_seq"] = "model"
+        elif piece == "dots":
+            cfg_patch["remat_policy"] = "dots"
+        elif piece == "noremat":
+            cfg_patch["remat"] = False
+        elif piece.startswith("mb"):
+            microbatches = int(piece[2:])
+        elif piece == "batch2d":
+            overrides["act_batch"] = ("pod", "data", "model")
+        elif piece == "baseline":
+            pass
+        else:
+            raise ValueError(piece)
+
+    orig_get = REG.get_config
+    orig_step = ST.make_train_step_fn
+
+    def patched_get(a):
+        c = orig_get(a)
+        return dataclasses.replace(c, **cfg_patch) if cfg_patch else c
+
+    def patched_step(cfg, opt_cfg=None, total_steps=10000, **kw):
+        kw.setdefault("microbatches", microbatches)
+        return orig_step(cfg, opt_cfg, total_steps, **kw)
+
+    DR.get_config = patched_get
+    ST_make = ST.make_train_step_fn
+    ST.make_train_step_fn = patched_step
+    DR.ST.make_train_step_fn = patched_step
+    try:
+        r = DR.dryrun_cell(arch, shape, multi_pod=multi_pod,
+                           rules_overrides=overrides or None, verbose=False)
+    finally:
+        DR.get_config = orig_get
+        ST.make_train_step_fn = ST_make
+        DR.ST.make_train_step_fn = ST_make
+    r["variant"] = variant
+    return r
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--variants", nargs="+", default=["baseline"])
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args(argv)
+
+    base = None
+    for v in args.variants:
+        try:
+            r = run_variant(args.arch, args.shape, v, args.multi_pod)
+        except Exception as e:
+            import traceback
+            traceback.print_exc()
+            print(f"[hillclimb] {v}: FAILED {type(e).__name__}: {e}")
+            continue
+        t = r["roofline"]
+        if base is None and v == "baseline":
+            base = t
+        def rel(key):
+            if base is None or base[key] == 0:
+                return ""
+            return f" ({t[key] / base[key]:.2f}x)"
+        print(f"[hillclimb] {args.arch}×{args.shape} [{v}]: "
+              f"bottleneck={t['bottleneck']} "
+              f"tc={t['t_compute_s']:.3e}{rel('t_compute_s')} "
+              f"tm={t['t_memory_s']:.3e}{rel('t_memory_s')} "
+              f"tx={t['t_collective_s']:.3e}{rel('t_collective_s')} "
+              f"frac={t['roofline_fraction']:.3f} "
+              f"mem={r['memory'].get('total_gb_per_device', '?')}GB "
+              f"compile={r['compile_s']}s")
+        if args.out:
+            with open(args.out, "a") as f:
+                f.write(json.dumps(r) + "\n")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,64 @@
+"""Paper Fig. 9 — interconnect bandwidth sensitivity.
+
+Two halves:
+  * the paper's experiment: GEMM-1024 runtime under PCIe 16L-64Gbps /
+    4L-16Gbps / 4L-5Gbps (calibrated system model);
+  * the TPU translation: the same sensitivity applied to the *collective*
+    roofline term of the dry-run cells — ICI link bandwidth is the TPU's
+    "PCIe", so we sweep it and report how each mesh-level workload's
+    bottleneck moves (reads dryrun_single.jsonl when present).
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import emit
+from repro.core import sysmodel as SM
+from repro.roofline.analysis import HW
+
+
+def run():
+    # -- paper experiment ----------------------------------------------------
+    base = None
+    for label, gbps in (("16L_64G", 64.0), ("4L_16G", 16.0), ("4L_5G", 5.0)):
+        sys = SM.SystemConfig(pcie_total_gbps=gbps)
+        t = SM.workload_time(((SM.Gemm(1024, 1024, 1024),), ()),
+                             "int32", "mf_dc", sys)["total"]
+        base = base or t
+        emit("fig9_interconnect", f"gemm1024_{label}",
+             round(t * 1e3, 2), "ms", slowdown=round(t / base, 2),
+             paper="~2.3x worst/best" if label == "4L_5G" else "")
+
+    # -- TPU translation: ICI bandwidth sweep over dry-run cells -------------
+    repo = os.path.join(os.path.dirname(__file__), "..")
+    rows = []
+    for fname in ("dryrun_final.jsonl", "dryrun_both.jsonl",
+                  "dryrun_single.jsonl"):
+        path = os.path.join(repo, fname)
+        if os.path.exists(path):
+            rows = [json.loads(l) for l in open(path) if l.strip()]
+            break
+    rows = [r for r in rows
+            if "roofline" in r and r.get("mesh", "16x16") == "16x16"]
+    if not rows:
+        emit("fig9_interconnect", "ici_sweep", "skipped (no dryrun jsonl)", "")
+        return
+    for factor, label in ((1.0, "ici_50GBps"), (0.25, "ici_12.5GBps"),
+                          (4.0, "ici_200GBps")):
+        moved = 0
+        coll_bound = 0
+        for r in rows:
+            t = r["roofline"]
+            tc, tm = t["t_compute_s"], t["t_memory_s"]
+            tx = t["t_collective_s"] / factor
+            new_b = max(("compute", tc), ("memory", tm),
+                        ("collective", tx), key=lambda kv: kv[1])[0]
+            coll_bound += new_b == "collective"
+            moved += new_b != t["bottleneck"]
+        emit("fig9_interconnect", f"{label}_collective_bound_cells",
+             coll_bound, f"/{len(rows)}", bottleneck_moved=moved)
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,75 @@
+"""§Roofline — the 40-cell (arch × shape) roofline table from the dry-run
+artifacts (dryrun_single.jsonl / dryrun_multi.jsonl, produced by
+``python -m repro.launch.dryrun --all [--multi-pod] --out <file>``).
+
+Per cell: the three terms (compute/memory/collective, seconds), the
+dominant bottleneck, MODEL_FLOPS/HLO_FLOPS, and bytes/device.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import emit
+
+REPO = os.path.join(os.path.dirname(__file__), "..")
+
+
+def _load_rows(mesh_label):
+    """Rows for a mesh from dryrun_both.jsonl or the per-mesh legacy files."""
+    for fname in ("dryrun_final.jsonl", "dryrun_both.jsonl",
+                  "dryrun_single.jsonl", "dryrun_multi.jsonl"):
+        path = os.path.join(REPO, fname)
+        if not os.path.exists(path):
+            continue
+        rows = [json.loads(l) for l in open(path) if l.strip()]
+        rows = [r for r in rows
+                if r.get("mesh", mesh_label) == mesh_label or r.get("skipped")]
+        if rows:
+            return rows
+    return None
+
+
+def run():
+    for mesh_label in ("16x16", "2x16x16"):
+        rows = _load_rows(mesh_label)
+        if rows is None:
+            emit("roofline", f"{mesh_label}", "skipped (no dryrun jsonl)", "")
+            continue
+        n_ok = n_skip = 0
+        worst = None
+        seen = set()
+        for r in rows:
+            key = (r.get("arch"), r.get("shape"))
+            if key in seen:
+                continue
+            seen.add(key)
+            if r.get("skipped"):
+                n_skip += 1
+                continue
+            if "error" in r:
+                emit("roofline", f"{r['arch']}x{r['shape']}@{mesh_label}",
+                     "ERROR", "", detail=r["error"][:80])
+                continue
+            n_ok += 1
+            t = r["roofline"]
+            name = f"{r['arch']}×{r['shape']}@{mesh_label}"
+            emit("roofline", name,
+                 t["bottleneck"], "bottleneck",
+                 t_compute=f"{t['t_compute_s']:.2e}",
+                 t_memory=f"{t['t_memory_s']:.2e}",
+                 t_collective=f"{t['t_collective_s']:.2e}",
+                 roofline_fraction=round(t["roofline_fraction"], 3),
+                 useful_flops=round(t.get("useful_flops_ratio", 0), 3),
+                 gb_per_device=r["memory"].get("total_gb_per_device"))
+            if worst is None or (t["roofline_fraction"]
+                                 < worst[1]):
+                worst = (name, t["roofline_fraction"])
+        emit("roofline", f"summary_{mesh_label}",
+             f"{n_ok} cells ok, {n_skip} skipped (long_500k non-SSM)", "",
+             worst_cell=worst[0] if worst else "",
+             worst_fraction=round(worst[1], 4) if worst else "")
+
+
+if __name__ == "__main__":
+    run()

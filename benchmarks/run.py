@@ -1,0 +1,38 @@
+"""Benchmark driver: one module per paper table/figure, plus the roofline
+table from the dry-run artifacts. Emits benchmarks/results.csv.
+
+  python -m benchmarks.run               # all
+  python -m benchmarks.run fig7 table3   # subset
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+from benchmarks import (gemm_dtype_sweep, gemm_size_sweep, interconnect_sweep,
+                        roofline_table, runtime_breakdown, transformer_e2e)
+from benchmarks.common import dump_csv
+
+SUITES = {
+    "fig7": gemm_size_sweep.run,
+    "fig6": gemm_dtype_sweep.run,
+    "table3": transformer_e2e.run,
+    "fig8": runtime_breakdown.run,
+    "fig9": interconnect_sweep.run,
+    "roofline": roofline_table.run,
+}
+
+
+def main(argv=None) -> int:
+    argv = argv if argv is not None else sys.argv[1:]
+    picks = [a for a in argv if not a.startswith("-")] or list(SUITES)
+    for name in picks:
+        print(f"\n===== {name} =====")
+        SUITES[name]()
+    out = os.path.join(os.path.dirname(__file__), "results.csv")
+    dump_csv(out)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,43 @@
+"""Paper Fig. 8 — runtime breakdown by layer class (QKV / scores / attn·V /
+proj / FF1 / FF2 / non-GEMM / control) for baseline, Neon, TiC-SAT and
+MatrixFlow on BERT-base.
+
+Paper anchors (§4.5): baseline GEMM ≈ 99 % (FF > 87.7 % of it);
+MatrixFlow non-GEMM ≈ 13.3 %, control ≈ 24.25 %.
+"""
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.core import sysmodel as SM
+from repro.core.workloads import paper_workload
+
+
+def run():
+    wl = paper_workload("bert-base")
+    for backend in ("cpu1", "neon", "ticsat", "mf_dc"):
+        r = SM.workload_time(wl, "int32", backend)
+        total = r["total"]
+        shares = {k: v / total for k, v in r["parts"].items()}
+        gemm_share = r["gemm"] / total
+        nongemm_share = r["nongemm"] / total
+        control_share = r["control"] / total
+        ff_share = (r["parts"].get("FF1", 0) + r["parts"].get("FF2", 0)) / total
+        emit("fig8_breakdown", f"{backend}_gemm_share",
+             round(gemm_share * 100, 1), "%",
+             paper="99%" if backend == "cpu1" else "")
+        emit("fig8_breakdown", f"{backend}_ff_share",
+             round(ff_share * 100, 1), "%",
+             paper=">87.7% of GEMM" if backend == "cpu1" else "")
+        emit("fig8_breakdown", f"{backend}_nongemm_share",
+             round(nongemm_share * 100, 1), "%",
+             paper="13.32%" if backend == "mf_dc" else "")
+        if backend == "mf_dc":
+            emit("fig8_breakdown", f"{backend}_control_share",
+                 round(control_share * 100, 1), "%", paper="24.25%")
+        top = sorted(shares.items(), key=lambda kv: -kv[1])[:3]
+        emit("fig8_breakdown", f"{backend}_top_classes",
+             "; ".join(f"{k}:{v * 100:.0f}%" for k, v in top), "")
+
+
+if __name__ == "__main__":
+    run()

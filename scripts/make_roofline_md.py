@@ -1,0 +1,35 @@
+"""Render EXPERIMENTS.md §Roofline tables from the merged dry-run jsonl."""
+import json
+import sys
+
+
+def main(path="dryrun_final.jsonl"):
+    rows = [json.loads(l) for l in open(path) if l.strip()]
+    for mesh in ("16x16", "2x16x16"):
+        sel = [r for r in rows if r.get("mesh") == mesh and "roofline" in r]
+        print(f"\n### Mesh {mesh} ({sel[0]['n_chips'] if sel else '?'} chips)\n")
+        print("| arch | shape | t_compute (s) | t_memory (s) | t_collective"
+              " (s) | bottleneck | MODEL/HLO flops | GB/dev | one-line fix |")
+        print("|---|---|---|---|---|---|---|---|---|")
+        fixes = {
+            "compute": "more chips / lower precision",
+            "memory": "fuse attention (flash) + cut remat re-reads",
+            "collective": "shard KV seq (kvseq) / EP all-to-all overlap",
+        }
+        for r in sel:
+            t = r["roofline"]
+            fix = fixes[t["bottleneck"]]
+            if r["arch"] == "smollm-135m" and r["shape"] == "train_4k":
+                fix = "seqpar: attention idle on model axis (H1)"
+            if r["shape"] == "decode_32k" and t["bottleneck"] == "collective":
+                fix = "kvseq partial-softmax decode (H2)"
+            print(f"| {r['arch']} | {r['shape']} | {t['t_compute_s']:.2e} "
+                  f"| {t['t_memory_s']:.2e} | {t['t_collective_s']:.2e} "
+                  f"| **{t['bottleneck']}** "
+                  f"| {t.get('useful_flops_ratio', 0):.2f} "
+                  f"| {r['memory'].get('total_gb_per_device', '?')} "
+                  f"| {fix} |")
+
+
+if __name__ == "__main__":
+    main(*sys.argv[1:])

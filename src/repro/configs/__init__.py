@@ -1,0 +1,2 @@
+"""Assigned-architecture configs (one module per arch) + paper models."""
+from repro.configs.registry import ARCHS, get_config, get_smoke_config  # noqa: F401

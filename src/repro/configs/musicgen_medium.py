@@ -1,0 +1,23 @@
+"""MusicGen-medium — decoder-only over EnCodec tokens [arXiv:2306.05284; hf].
+
+48L d_model=1536 24H (MHA) d_ff=6144 vocab=2048 per codebook × 4 codebooks.
+The EnCodec frontend is a stub: input_specs() provides the 4-stream token
+ids; the model embeds each stream and sums (the MusicGen token interleave)."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="musicgen-medium",
+    family="audio",
+    n_layers=48,
+    d_model=1536,
+    n_heads=24,
+    n_kv_heads=24,
+    d_ff=6144,
+    vocab=2048,
+    n_codebooks=4,
+    mlp_act="gelu",
+    norm="layernorm",
+    # 24 heads not divisible by TP=16 → replicate head projections
+    sharding_overrides=(("heads", None), ("kv_heads", None)),
+    source="arXiv:2306.05284; hf",
+)

@@ -1,0 +1,73 @@
+"""Architecture registry + input-shape cells (the 40-cell assignment grid)."""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Dict, Optional, Tuple
+
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig, reduced
+
+ARCHS = {
+    "deepseek-v2-236b": "repro.configs.deepseek_v2_236b",
+    "dbrx-132b": "repro.configs.dbrx_132b",
+    "mamba2-1.3b": "repro.configs.mamba2_1_3b",
+    "musicgen-medium": "repro.configs.musicgen_medium",
+    "qwen3-8b": "repro.configs.qwen3_8b",
+    "smollm-135m": "repro.configs.smollm_135m",
+    "granite-20b": "repro.configs.granite_20b",
+    "qwen2-1.5b": "repro.configs.qwen2_1_5b",
+    "internvl2-76b": "repro.configs.internvl2_76b",
+    "zamba2-2.7b": "repro.configs.zamba2_2_7b",
+}
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch.startswith("bert-") or arch.startswith("vit-"):
+        from repro.models import transformer as T
+        kind, variant = arch.split("-", 1)
+        return (T.bert_config if kind == "bert" else T.vit_config)(variant)
+    return importlib.import_module(ARCHS[arch]).CONFIG
+
+
+def get_smoke_config(arch: str, **kw) -> ModelConfig:
+    return reduced(get_config(arch), **kw)
+
+
+# ---------------------------------------------------------------------------
+# Input-shape cells
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    kind: str          # "train" | "prefill" | "decode"
+    seq: int           # train/prefill: sequence length; decode: KV context
+    batch: int         # global batch
+
+
+SHAPES: Dict[str, ShapeCell] = {
+    "train_4k": ShapeCell("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeCell("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeCell("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeCell("long_500k", "decode", 524288, 1),
+}
+
+# long_500k requires sub-quadratic sequence mixing: only SSM/hybrid archs
+# run it; pure full-attention archs skip (recorded in DESIGN.md §3).
+LONG_CONTEXT_FAMILIES = ("ssm", "hybrid")
+
+
+def cell_applicable(cfg: ModelConfig, shape: ShapeCell) -> bool:
+    if shape.name == "long_500k":
+        return cfg.family in LONG_CONTEXT_FAMILIES
+    return True
+
+
+def all_cells():
+    for arch in ARCHS:
+        cfg = get_config(arch)
+        for shape in SHAPES.values():
+            if cell_applicable(cfg, shape):
+                yield arch, shape

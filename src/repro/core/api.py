@@ -1,0 +1,99 @@
+"""Public MatrixFlow API: backend policy + matmul/linear entry points.
+
+Every GEMM in the model substrate routes through :func:`matmul`, which
+dispatches on the active backend:
+
+  "xla"               jnp.dot — used for distributed dry-run lowering and CPU
+                      training examples (XLA already tiles for the MXU; the
+                      MatrixFlow schedule is a kernel-level concern).
+  "pallas"            the MatrixFlow Pallas kernel (TPU target).
+  "pallas_interpret"  same kernel, interpret mode (CPU validation).
+  "blockflow"         the faithful Algorithm-1 lax rendering (paper baseline).
+
+The default is "pallas" on TPU and "xla" elsewhere, matching how the
+framework would deploy. Tests/benchmarks use `gemm_backend(...)` to pin.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import blockflow, layout as L
+
+_state = threading.local()
+
+
+def _default_backend() -> str:
+    try:
+        plat = jax.default_backend()
+    except Exception:  # pragma: no cover
+        plat = "cpu"
+    return "pallas" if plat == "tpu" else "xla"
+
+
+def current_backend() -> str:
+    return getattr(_state, "backend", None) or _default_backend()
+
+
+@contextlib.contextmanager
+def gemm_backend(name: str):
+    """Context manager pinning the GEMM backend ("xla"|"pallas"|"pallas_interpret"|"blockflow")."""
+    prev = getattr(_state, "backend", None)
+    _state.backend = name
+    try:
+        yield
+    finally:
+        _state.backend = prev
+
+
+def matmul(a: jax.Array, b: jax.Array, *, mode: str = "dm",
+           out_dtype: Optional[jnp.dtype] = None) -> jax.Array:
+    """C = A @ B through the active MatrixFlow backend.
+
+    a: (..., M, K); b: (K, N) or (..., K, N). Output dtype defaults to the
+    promoted input dtype (not the accumulator) to keep model code natural.
+    """
+    backend = current_backend()
+    out_dtype = out_dtype or jnp.promote_types(a.dtype, b.dtype)
+    if backend == "xla":
+        acc = blockflow.acc_dtype_for(a.dtype)
+        return jnp.matmul(a, b, preferred_element_type=acc).astype(out_dtype)
+
+    # Collapse leading dims to a single M for the 2-D kernels.
+    if b.ndim != 2:
+        # batched rhs: vmap over shared leading dims
+        assert a.shape[:-2] == b.shape[:-2], (a.shape, b.shape)
+        lead = a.shape[:-2]
+        a2 = a.reshape((-1,) + a.shape[-2:])
+        b2 = b.reshape((-1,) + b.shape[-2:])
+        out = jax.vmap(lambda x, y: matmul(x, y, mode=mode, out_dtype=out_dtype))(a2, b2)
+        return out.reshape(lead + out.shape[-2:])
+    lead = a.shape[:-1]
+    a2 = a.reshape(-1, a.shape[-1])
+    M, K = a2.shape
+    N = b.shape[-1]
+
+    if backend == "blockflow":
+        c = blockflow.block_matmul(a2, b, out_dtype=out_dtype)
+    elif backend in ("pallas", "pallas_interpret"):
+        from repro.kernels import matrixflow_gemm as mf  # lazy: pallas import
+        interpret = backend == "pallas_interpret"
+        blk = L.choose_layout(M, N, K, a2.dtype, mode=mode)
+        c = mf.matrixflow_gemm(a2, b, blk=blk, out_dtype=out_dtype,
+                               interpret=interpret)
+    else:
+        raise ValueError(f"unknown GEMM backend {backend!r}")
+    return c.reshape(lead + (N,)).astype(out_dtype)
+
+
+def linear(x: jax.Array, w: jax.Array, bias: Optional[jax.Array] = None,
+           *, mode: str = "dm") -> jax.Array:
+    """y = x @ w (+ bias): the layer-level entry point used by models."""
+    y = matmul(x, w, mode=mode)
+    if bias is not None:
+        y = y + bias
+    return y

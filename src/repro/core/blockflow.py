@@ -1,0 +1,88 @@
+"""Algorithm 1 (Optimized Block Matrix Multiplication) in pure JAX.
+
+This is the *faithful* software rendering of the paper's dataflow: iterate
+over output blocks (i, j), stream the K-blocks of A and B through MultiAcc,
+and write each finished C block exactly once (paper §3.3, Algorithm 1).
+
+It serves three roles:
+  1. the paper-faithful baseline (lax control flow, block-major operands);
+  2. the oracle for the Pallas kernel (kernels/ref.py re-exports it);
+  3. the op the analytic sysmodel instruments for DMA-descriptor counting.
+
+The Pallas kernel in kernels/matrixflow_gemm.py executes the same schedule
+on the TPU grid; XLA on CPU executes this one.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import layout as L
+
+
+def acc_dtype_for(dtype: jnp.dtype) -> jnp.dtype:
+    """Accumulator policy mirroring the paper's MAC units (Table 2)."""
+    d = jnp.dtype(dtype)
+    if d in (jnp.dtype(jnp.int8), jnp.dtype(jnp.int16), jnp.dtype(jnp.int32)):
+        return jnp.dtype(jnp.int32)
+    return jnp.dtype(jnp.float32)
+
+
+def multi_acc(a_blk: jax.Array, b_blk: jax.Array, c_blk: jax.Array) -> jax.Array:
+    """MultiAcc(A_block, B_block, Res_block): one SA pass, accumulate into C."""
+    acc = jnp.dot(a_blk, b_blk, preferred_element_type=c_blk.dtype)
+    return c_blk + acc
+
+
+def block_matmul(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    blk: Optional[L.BlockLayout] = None,
+    out_dtype: Optional[jnp.dtype] = None,
+) -> jax.Array:
+    """C = A @ B via the paper's Algorithm 1 over block-major operands.
+
+    a: (M, K), b: (K, N) in conventional row-major; the function performs the
+    MatrixFlow re-layout (the paper's data-structure step), then the blocked
+    dataflow with lax.fori_loop as the K-stream.
+    """
+    M, K = a.shape
+    K2, N = b.shape
+    assert K == K2, (a.shape, b.shape)
+    if blk is None:
+        blk = L.choose_layout(M, N, K, a.dtype)
+    acc_dtype = acc_dtype_for(a.dtype)
+    out_dtype = out_dtype or acc_dtype
+
+    a_bm = L.to_block_major_a(a, blk.bm, blk.bk)      # (nbm, nbk, bm, bk)
+    b_bm = L.to_block_major_b(b, blk.bk, blk.bn)      # (nbn, nbk, bk, bn)
+    nbm, nbk = a_bm.shape[0], a_bm.shape[1]
+    nbn = b_bm.shape[0]
+
+    def out_block(i: jax.Array, j: jax.Array) -> jax.Array:
+        c0 = jnp.zeros((blk.bm, blk.bn), acc_dtype)
+
+        def body(k, c_blk):
+            a_blk = jax.lax.dynamic_index_in_dim(
+                jax.lax.dynamic_index_in_dim(a_bm, i, 0, keepdims=False),
+                k, 0, keepdims=False)
+            b_blk = jax.lax.dynamic_index_in_dim(
+                jax.lax.dynamic_index_in_dim(b_bm, j, 0, keepdims=False),
+                k, 0, keepdims=False)
+            return multi_acc(a_blk.astype(acc_dtype), b_blk.astype(acc_dtype), c_blk)
+
+        return jax.lax.fori_loop(0, nbk, body, c0)
+
+    ii, jj = jnp.meshgrid(jnp.arange(nbm), jnp.arange(nbn), indexing="ij")
+    c_bm = jax.vmap(jax.vmap(out_block))(ii, jj)       # (nbm, nbn, bm, bn)
+    c = L.from_block_major_c(c_bm, M, N)
+    return c.astype(out_dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("blk", "out_dtype"))
+def block_matmul_jit(a, b, blk=None, out_dtype=None):
+    return block_matmul(a, b, blk=blk, out_dtype=out_dtype)

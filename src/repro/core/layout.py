@@ -1,0 +1,220 @@
+"""MatrixFlow block-major layouts (paper §3.3, contribution C1).
+
+The paper's core data-structure insight: store each GEMM operand as
+*rectangular blocks sized to one transfer unit* so that every block the
+accelerator consumes is a single contiguous region in memory — one DMA
+descriptor, one address translation, no fragmentation.
+
+On TPU the transfer unit is the HBM→VMEM DMA tile rather than a 4 KB page.
+We realize the paper's layout as an explicit 4-D "block-major" array:
+
+    A : (M, K)  row-major        →  A_bm : (M//bm, K//bk, bm, bk)
+    B : (K, N)  row-major        →  B_bm : (N//bn, K//bk, bk, bn)   ("horizontal split")
+    C : (M, N)                   ←  C_bm : (M//bm, N//bn, bm, bn)
+
+A_bm[i, k] is the (bm × bk) block the kernel consumes at grid step (i, ·, k),
+stored contiguously (last two axes are minor).  B is *horizontally split*
+exactly as in Fig. 4 (bottom): the K-walk for one output column-block
+(B_bm[j, 0], B_bm[j, 1], ...) is a contiguous streak, resolving the
+column-read fragmentation of conventional layouts.
+
+`PAGE_BYTES = 4096` retained for fidelity experiments: `page_block_shape`
+returns the paper-exact block geometry where a block is one 4 KB page.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PAGE_BYTES = 4096          # the paper's memory-page transfer unit
+MXU_DIM = 128              # TPU MXU systolic dimension (paper's SA is 16×16)
+SUBLANE = 8                # TPU VREG sublane granularity
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockLayout:
+    """Geometry of a MatrixFlow block decomposition for C = A @ B.
+
+    bm/bn/bk are the block dims. ``mode`` follows the paper's two access
+    policies: ``dc`` (direct-cache: fine-grained K, deeper pipeline) and
+    ``dm`` (direct-memory: large bursts, fewer grid steps).
+    """
+
+    bm: int
+    bn: int
+    bk: int
+    mode: str = "dm"
+
+    def grid(self, M: int, N: int, K: int) -> Tuple[int, int, int]:
+        return (cdiv(M, self.bm), cdiv(N, self.bn), cdiv(K, self.bk))
+
+    def vmem_bytes(self, dtype_bytes: int, acc_bytes: int = 4) -> int:
+        """Working set claimed in VMEM: double-buffered A/B windows + C accum.
+
+        Mirrors the paper's three-local-buffer design (A, B, C); the factor 2
+        on A/B is the Pallas pipeline's double buffering.
+        """
+        a = self.bm * self.bk * dtype_bytes
+        b = self.bk * self.bn * dtype_bytes
+        c = self.bm * self.bn * acc_bytes
+        return 2 * (a + b) + c
+
+
+def cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def round_up(a: int, b: int) -> int:
+    return cdiv(a, b) * b
+
+
+def page_block_shape(dtype: jnp.dtype, *, lanes: int = MXU_DIM) -> Tuple[int, int]:
+    """Paper-exact geometry: one block == one 4 KB page.
+
+    Rows are chosen so rows*lanes*itemsize == PAGE_BYTES (e.g. int8 → 32×128,
+    fp32 → 8×128). Used by the fidelity benchmarks; production kernels use
+    MXU-aligned 128×…×128 blocks.
+    """
+    itemsize = jnp.dtype(dtype).itemsize
+    rows = PAGE_BYTES // (lanes * itemsize)
+    if rows < 1:
+        raise ValueError(f"lane count {lanes} too wide for 4KB page at {dtype}")
+    return rows, lanes
+
+
+def choose_layout(
+    M: int,
+    N: int,
+    K: int,
+    dtype: jnp.dtype = jnp.bfloat16,
+    *,
+    mode: str = "dm",
+    vmem_budget: int = 96 * 1024 * 1024,
+) -> BlockLayout:
+    """Pick MXU-aligned block dims for the given problem and access mode.
+
+    ``dm`` takes the largest K-burst that fits the VMEM budget; ``dc`` uses a
+    fine K granularity (256) for maximal pipeline overlap — the TPU analogue
+    of the paper's 64 B cache-line-granularity DC mode.
+    """
+    itemsize = jnp.dtype(dtype).itemsize
+    bm = min(round_up(M, SUBLANE), 512 if M >= 512 else round_up(M, SUBLANE))
+    bm = min(bm, 512)
+    bn = min(round_up(N, MXU_DIM), 512)
+    if mode == "dc":
+        bk = min(round_up(K, MXU_DIM), 256)
+    elif mode == "dm":
+        bk = min(round_up(K, MXU_DIM), 2048)
+    else:
+        raise ValueError(f"unknown access mode: {mode!r}")
+    # Shrink until the double-buffered working set fits the budget.
+    layout = BlockLayout(bm, bn, bk, mode)
+    while layout.vmem_bytes(itemsize) > vmem_budget and layout.bk > MXU_DIM:
+        layout = BlockLayout(layout.bm, layout.bn, layout.bk // 2, mode)
+    while layout.vmem_bytes(itemsize) > vmem_budget and layout.bn > MXU_DIM:
+        layout = BlockLayout(layout.bm, layout.bn // 2, layout.bk, mode)
+    while layout.vmem_bytes(itemsize) > vmem_budget and layout.bm > SUBLANE:
+        layout = BlockLayout(layout.bm // 2, layout.bn, layout.bk, mode)
+    return layout
+
+
+# ---------------------------------------------------------------------------
+# Layout transforms (pure, invertible; property-tested in tests/test_layout.py)
+# ---------------------------------------------------------------------------
+
+def pad_to_blocks(x: jax.Array, b0: int, b1: int) -> jax.Array:
+    """Zero-pad trailing 2 dims of ``x`` up to multiples of (b0, b1)."""
+    *lead, m, n = x.shape
+    pm, pn = round_up(m, b0) - m, round_up(n, b1) - n
+    if pm == 0 and pn == 0:
+        return x
+    pad = [(0, 0)] * len(lead) + [(0, pm), (0, pn)]
+    return jnp.pad(x, pad)
+
+
+def to_block_major_a(a: jax.Array, bm: int, bk: int) -> jax.Array:
+    """(…, M, K) row-major → (…, M/bm, K/bk, bm, bk) block-major.
+
+    Paper Fig. 4 (bottom-left): A's blocks aligned with the SA input dims,
+    each block contiguous.
+    """
+    a = pad_to_blocks(a, bm, bk)
+    *lead, M, K = a.shape
+    a = a.reshape(*lead, M // bm, bm, K // bk, bk)
+    return jnp.moveaxis(a, -3, -2)  # (…, M/bm, K/bk, bm, bk)
+
+
+def from_block_major_a(a_bm: jax.Array, M: int, K: int) -> jax.Array:
+    *lead, nbm, nbk, bm, bk = a_bm.shape
+    a = jnp.moveaxis(a_bm, -2, -3).reshape(*lead, nbm * bm, nbk * bk)
+    return a[..., :M, :K]
+
+
+def to_block_major_b(b: jax.Array, bk: int, bn: int) -> jax.Array:
+    """(…, K, N) row-major → (…, N/bn, K/bk, bk, bn) block-major.
+
+    The paper's *horizontal split* of B: blocks are indexed output-column-
+    major so the K-walk for a fixed output tile j is contiguous in memory —
+    this is the transform that removes the column-read page fragmentation.
+    """
+    b = pad_to_blocks(b, bk, bn)
+    *lead, K, N = b.shape
+    b = b.reshape(*lead, K // bk, bk, N // bn, bn)
+    # (…, K/bk, bk, N/bn, bn) → (…, N/bn, K/bk, bk, bn)
+    b = jnp.moveaxis(b, -2, -4)
+    return b
+
+
+def from_block_major_b(b_bm: jax.Array, K: int, N: int) -> jax.Array:
+    *lead, nbn, nbk, bk, bn = b_bm.shape
+    b = jnp.moveaxis(b_bm, -4, -2).reshape(*lead, nbk * bk, nbn * bn)
+    return b[..., :K, :N]
+
+
+def to_block_major_c(c: jax.Array, bm: int, bn: int) -> jax.Array:
+    c = pad_to_blocks(c, bm, bn)
+    *lead, M, N = c.shape
+    c = c.reshape(*lead, M // bm, bm, N // bn, bn)
+    return jnp.moveaxis(c, -3, -2)
+
+
+def from_block_major_c(c_bm: jax.Array, M: int, N: int) -> jax.Array:
+    *lead, nbm, nbn, bm, bn = c_bm.shape
+    c = jnp.moveaxis(c_bm, -2, -3).reshape(*lead, nbm * bm, nbn * bn)
+    return c[..., :M, :N]
+
+
+# ---------------------------------------------------------------------------
+# Transfer-contiguity accounting (feeds core/sysmodel.py)
+# ---------------------------------------------------------------------------
+
+def descriptors_per_block_conventional(
+    rows: int, cols: int, row_stride_bytes: int, itemsize: int,
+    page_bytes: int = PAGE_BYTES,
+) -> int:
+    """DMA descriptors to fetch a (rows × cols) block from a *row-major* matrix.
+
+    Each row of the block is a separate contiguous segment; a segment that
+    crosses a page boundary costs an extra translation/descriptor. This is the
+    fragmentation the paper's Fig. 4 (top) illustrates.
+    """
+    seg_bytes = cols * itemsize
+    total = 0
+    for r in range(rows):
+        start = r * row_stride_bytes
+        first_page = start // page_bytes
+        last_page = (start + seg_bytes - 1) // page_bytes
+        total += 1 + (last_page - first_page)
+    return total
+
+
+def descriptors_per_block_matrixflow(
+    rows: int, cols: int, itemsize: int, page_bytes: int = PAGE_BYTES,
+) -> int:
+    """Block-major: the block is one contiguous region → ceil(bytes / page)."""
+    return cdiv(rows * cols * itemsize, page_bytes)

@@ -1,0 +1,148 @@
+"""Fused (flash) attention as a Pallas TPU kernel — beyond-paper optimization.
+
+The paper keeps softmax on the CPU and runs QKᵀ / PV as separate accelerator
+GEMMs (§4.4), and measures 13.3 % non-GEMM + 24.25 % control overhead left
+on the table (§4.5). On TPU we can close that gap by fusing the whole
+attention inner loop into one kernel: the MatrixFlow insight (stream
+page/block-sized operand tiles through the systolic datapath, never spill
+the intermediate) applies directly — the (bq × bk) score tile lives only in
+VMEM, exactly like the paper's Buffer C, and is consumed by the online
+softmax before the next block arrives.
+
+Layout: grid = (B, H, nQ, nK), K innermost ("arbitrary" = sequential), with
+running max / denominator / output accumulator in VMEM scratch (the flash
+recurrence). GQA is expressed in the BlockSpec index map (kv head = h//rep),
+so no repeated K/V materialization in HBM — the MatrixFlow-style "fetch the
+block you need, once" property.
+
+Validated in interpret mode against kernels/ref.py::mha_ref.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:
+    from jax.experimental.pallas import tpu as pltpu
+    _CompilerParams = getattr(pltpu, "CompilerParams", None) or getattr(
+        pltpu, "TPUCompilerParams", None)
+except ImportError:  # pragma: no cover
+    pltpu = None
+    _CompilerParams = None
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            scale: float, causal: bool, bq: int, bk: int, nk: int):
+    iq, ik = pl.program_id(2), pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # causal: skip key blocks strictly in the future of the whole q block
+    run = (iq * bq + bq - 1 >= ik * bk) if causal else True
+
+    @pl.when(run)
+    def _step():
+        q = q_ref[0, 0]                                   # (bq, d)
+        k = k_ref[0, 0]                                   # (bk, d)
+        v = v_ref[0, 0]                                   # (bk, dv)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale   # (bq, bk)
+        if causal:
+            rows = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            cols = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            s = jnp.where(cols <= rows, s, NEG_INF)
+        m_prev = m_ref[...]                               # (bq, 1)
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)                            # (bq, bk)
+        corr = jnp.exp(m_prev - m_new)                    # (bq, 1)
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _flush():
+        o_ref[0, 0] = (acc_ref[...]
+                       / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "scale", "block_q", "block_k", "interpret"),
+)
+def flash_attention(
+    q: jax.Array,             # (B, H, Sq, D)
+    k: jax.Array,             # (B, Hkv, Sk, D)
+    v: jax.Array,             # (B, Hkv, Sk, Dv)
+    *,
+    causal: bool = True,
+    scale: Optional[float] = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    B, H, Sq, D = q.shape
+    _, Hkv, Sk, Dv = v.shape
+    assert H % Hkv == 0, (H, Hkv)
+    rep = H // Hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    bq, bk = min(block_q, Sq), min(block_k, Sk)
+    # pad S to block multiples (masked out by the causal/validity logic)
+    pq = (-Sq) % bq
+    pk = (-Sk) % bk
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pq), (0, 0)))
+    if pk:
+        # padded keys get +inf-masked via causality only when causal; for
+        # non-causal, mask by padding k with NEG_INF-producing zeros and
+        # relying on the extra keys' scores: instead explicitly disallow.
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pk), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pk), (0, 0)))
+    Sq_p, Sk_p = Sq + pq, Sk + pk
+    nq, nk = Sq_p // bq, Sk_p // bk
+
+    if pk and not causal:
+        raise ValueError("non-causal flash requires Sk % block_k == 0")
+
+    grid = (B, H, nq, nk)
+    kernel = functools.partial(_kernel, scale=scale, causal=causal,
+                               bq=bq, bk=bk, nk=nk)
+    kwargs = {}
+    if _CompilerParams is not None and not interpret:
+        kwargs["compiler_params"] = _CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary"))
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, D), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bk, D),
+                         lambda b, h, i, j, rep=rep: (b, h // rep, j, 0)),
+            pl.BlockSpec((1, 1, bk, Dv),
+                         lambda b, h, i, j, rep=rep: (b, h // rep, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, Dv), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq_p, Dv), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, Dv), jnp.float32),
+        ],
+        interpret=interpret,
+        **kwargs,
+    )(q, k, v)
+    return out[:, :, :Sq]

@@ -1,0 +1,82 @@
+"""jit'd dispatch wrappers over the Pallas kernels.
+
+One entry point per kernel, handling:
+  * backend policy (real TPU pallas vs CPU interpret vs pure-jnp oracle),
+  * the paper's DC/DM access-mode block geometries,
+  * layout plumbing (row-major model tensors ↔ kernel-native layouts).
+
+Models call repro.core.api (which routes GEMMs here under the pallas
+backends); tests call these directly for shape/dtype sweeps.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import layout as L
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.matrixflow_gemm import (matrixflow_gemm,
+                                           matrixflow_gemm_block_major)
+from repro.kernels.ssd_scan import ssd_scan
+
+
+def _on_tpu() -> bool:
+    try:
+        return jax.default_backend() == "tpu"
+    except Exception:  # pragma: no cover
+        return False
+
+
+def gemm(a: jax.Array, b: jax.Array, *, mode: str = "dm",
+         out_dtype: Optional[jnp.dtype] = None,
+         impl: Optional[str] = None) -> jax.Array:
+    """MatrixFlow GEMM. impl: None (auto) | 'pallas' | 'interpret' | 'ref'."""
+    impl = impl or ("pallas" if _on_tpu() else "interpret")
+    if impl == "ref":
+        return ref.matmul_ref(a, b, out_dtype)
+    return matrixflow_gemm(a, b, mode=mode, out_dtype=out_dtype,
+                           interpret=(impl == "interpret"))
+
+
+def gemm_preformatted(a_bm: jax.Array, b_bm: jax.Array, *, blk: L.BlockLayout,
+                      out_dtype: Optional[jnp.dtype] = None,
+                      impl: Optional[str] = None) -> jax.Array:
+    """Deploy path: operands already block-major (weights formatted once at
+    load; activations produced block-major by the previous GEMM — Fig. 5)."""
+    impl = impl or ("pallas" if _on_tpu() else "interpret")
+    return matrixflow_gemm_block_major(a_bm, b_bm, blk=blk,
+                                       out_dtype=out_dtype,
+                                       interpret=(impl == "interpret"))
+
+
+def mha(q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool = True,
+        scale: Optional[float] = None, impl: Optional[str] = None,
+        block_q: int = 128, block_k: int = 128) -> jax.Array:
+    """Fused attention over (B, S, H, D)-layout tensors (model layout).
+
+    impl 'ref' uses the pure-jnp oracle; otherwise the Pallas flash kernel
+    (interpret mode off-TPU)."""
+    impl = impl or ("pallas" if _on_tpu() else "interpret")
+    if impl == "ref":
+        return ref.mha_ref(q, k, v, causal=causal, scale=scale)
+    out = flash_attention(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3), causal=causal, scale=scale,
+        block_q=block_q, block_k=block_k,
+        interpret=(impl == "interpret"))
+    return out.transpose(0, 2, 1, 3)
+
+
+def ssd(x: jax.Array, dt: jax.Array, A: jax.Array, Bc: jax.Array,
+        Cc: jax.Array, *, chunk: int = 128,
+        impl: Optional[str] = None) -> jax.Array:
+    """Chunked SSD scan (B, S, H, P). impl as in mha()."""
+    impl = impl or ("pallas" if _on_tpu() else "interpret")
+    if impl == "ref":
+        return ref.ssd_ref(x, dt, A, Bc, Cc)
+    return ssd_scan(x, dt, A, Bc, Cc, chunk=chunk,
+                    interpret=(impl == "interpret"))

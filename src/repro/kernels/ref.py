@@ -1,0 +1,96 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each oracle is the semantic ground truth the kernels are allclose-tested
+against (tests/test_kernels.py sweeps shapes × dtypes in interpret mode).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import blockflow
+
+# ---------------------------------------------------------------------------
+# MatrixFlow GEMM
+# ---------------------------------------------------------------------------
+
+def matmul_ref(a: jax.Array, b: jax.Array, out_dtype=None) -> jax.Array:
+    """Plain jnp oracle with the paper's accumulator policy (int32/fp32)."""
+    acc = blockflow.acc_dtype_for(a.dtype)
+    c = jnp.dot(a.astype(acc), b.astype(acc), preferred_element_type=acc)
+    return c.astype(out_dtype or acc)
+
+
+# Faithful Algorithm-1 rendering (block-major, lax control flow); also an oracle.
+block_matmul_ref = blockflow.block_matmul
+
+
+# ---------------------------------------------------------------------------
+# Flash attention (beyond-paper fusion; faithful mode uses separate GEMMs)
+# ---------------------------------------------------------------------------
+
+def mha_ref(
+    q: jax.Array,            # (B, Sq, H, D)
+    k: jax.Array,            # (B, Sk, Hkv, D)
+    v: jax.Array,            # (B, Sk, Hkv, D)
+    *,
+    causal: bool = True,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    """Reference grouped-query attention, fp32 softmax."""
+    B, Sq, H, D = q.shape
+    Hkv = k.shape[2]
+    assert H % Hkv == 0
+    rep = H // Hkv
+    if rep > 1:
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    scale = scale if scale is not None else D ** -0.5
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+    if causal:
+        Sk = k.shape[1]
+        mask = jnp.tril(jnp.ones((Sq, Sk), bool), k=Sk - Sq)
+        logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p.astype(v.dtype), v)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 SSD (state-space duality) chunked scan
+# ---------------------------------------------------------------------------
+
+def ssd_ref(
+    x: jax.Array,        # (B, S, H, P)   heads × head-dim
+    dt: jax.Array,       # (B, S, H)      softplus-ed step sizes
+    A: jax.Array,        # (H,)           negative decay rates
+    Bc: jax.Array,       # (B, S, N)      input projection (shared across heads)
+    Cc: jax.Array,       # (B, S, N)      output projection
+) -> jax.Array:
+    """Sequential-scan oracle of the SSD recurrence (Mamba-2 §3, minimal form).
+
+    h_t = exp(A * dt_t) * h_{t-1} + dt_t * B_t x_t ;  y_t = C_t · h_t
+    State h: (H, P, N).
+    """
+    Bsz, S, H, P = x.shape
+    N = Bc.shape[-1]
+
+    def step(h, inp):
+        x_t, dt_t, b_t, c_t = inp
+        decay = jnp.exp(A[:, None, None] * dt_t[:, None, None])   # (H,1,1)
+        dBx = (dt_t[:, None, None] * x_t[:, :, None]) * b_t[None, None, :]
+        h = decay * h + dBx                                        # (H,P,N)
+        y = jnp.einsum("hpn,n->hp", h, c_t)
+        return h, y
+
+    def per_batch(xb, dtb, bb, cb):
+        h0 = jnp.zeros((H, P, N), jnp.float32)
+        _, ys = jax.lax.scan(step, h0, (xb.astype(jnp.float32),
+                                        dtb.astype(jnp.float32),
+                                        bb.astype(jnp.float32),
+                                        cb.astype(jnp.float32)))
+        return ys                                                  # (S,H,P)
+
+    return jax.vmap(per_batch)(x, dt, Bc, Cc).astype(x.dtype)

@@ -1,0 +1,135 @@
+"""Mamba-2 SSD chunked scan as a Pallas TPU kernel.
+
+The SSD "state-space duality" (arXiv:2405.21060) decomposes the linear
+recurrence into block-matrix GEMMs — structurally the same move as the
+paper's Algorithm 1 (stream block operands, accumulate block outputs). This
+kernel maps it onto the TPU grid:
+
+  grid = (B, H, n_chunks); the chunk axis is sequential ("arbitrary") and
+  carries the running (P × N) state in VMEM scratch — the direct analogue of
+  the paper's Buffer-C accumulator that lives on-accelerator across the
+  K-stream. Per chunk, all heavy ops are MXU matmuls:
+
+    CBᵀ  : (Q,N)@(N,Q)    intra-chunk scores
+    ·L   : causal decay mask (elementwise, VPU)
+    @dtx : (Q,Q)@(Q,P)    intra-chunk output
+    Cᵀh  : (Q,N)@(N,P)    inter-chunk contribution from carried state
+    Bᵀx  : (N,Q)@(Q,P)    state update GEMM
+
+Validated in interpret mode against kernels/ref.py::ssd_ref and
+models/ssm.py::ssd_chunked.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:
+    from jax.experimental.pallas import tpu as pltpu
+    _CompilerParams = getattr(pltpu, "CompilerParams", None) or getattr(
+        pltpu, "TPUCompilerParams", None)
+except ImportError:  # pragma: no cover
+    pltpu = None
+    _CompilerParams = None
+
+
+def _kernel(x_ref, a_ref, b_ref, c_ref, o_ref, state_ref, *, nc: int, Q: int):
+    """One (batch, head, chunk) step. Block shapes:
+    x (1,1,Q,P) pre-scaled by dt; a (1,1,Q) per-step log-decay dt·A;
+    b/c (1,1,Q,N); carried state scratch (P,N) fp32."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    x = x_ref[0, 0, 0].astype(jnp.float32)       # (Q, P)  = dt_j * x_j
+    a = a_ref[0, 0, 0].astype(jnp.float32)       # (Q,)
+    bmat = b_ref[0, 0].astype(jnp.float32)       # (Q, N)
+    cmat = c_ref[0, 0].astype(jnp.float32)       # (Q, N)
+
+    cum = jnp.cumsum(a)                          # (Q,)
+    # L[i,j] = exp(cum_i - cum_j) for j <= i  (segment-sum decay)
+    diff = cum[:, None] - cum[None, :]
+    ii = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    Lmask = jnp.where(jj <= ii, jnp.exp(diff), 0.0)
+
+    # intra-chunk: Y = (L ∘ C Bᵀ) (dt x)
+    cb = jax.lax.dot_general(cmat, bmat, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (Q,Q)
+    y_intra = jax.lax.dot_general(Lmask * cb, x, (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+
+    # inter-chunk: Y += diag(exp(cum)) C h_prevᵀ        h_prev: (P,N)
+    y_inter = jax.lax.dot_general(
+        cmat, state_ref[...], (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * jnp.exp(cum)[:, None]
+
+    # state update: h = exp(sum a) h_prev + (decay_end ∘ x)ᵀ B
+    decay_end = jnp.exp(cum[-1] - cum)           # (Q,)
+    xw = x * decay_end[:, None]                  # (Q, P)
+    dstate = jax.lax.dot_general(xw, bmat, (((0,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)  # (P,N)
+    state_ref[...] = state_ref[...] * jnp.exp(cum[-1]) + dstate
+
+    o_ref[0, 0, 0] = (y_intra + y_inter).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(
+    x: jax.Array,      # (B, S, H, P)
+    dt: jax.Array,     # (B, S, H)  (softplus-ed step sizes)
+    A: jax.Array,      # (H,)       negative decay rates
+    Bc: jax.Array,     # (B, S, N)
+    Cc: jax.Array,     # (B, S, N)
+    *,
+    chunk: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """Pallas SSD: returns y (B, S, H, P). Head-major grid; B/C shared
+    across heads via the BlockSpec index map (fetched once per (b, chunk))."""
+    B, S, H, P = x.shape
+    N = Bc.shape[-1]
+    Q = min(chunk, S)
+    while S % Q:
+        Q -= 1
+    nc = S // Q
+
+    # pre-scale x by dt and form per-step log-decay a = dt * A
+    dtx = (x.astype(jnp.float32) * dt.astype(jnp.float32)[..., None])
+    a = dt.astype(jnp.float32) * A[None, None, :]
+
+    # head-major layouts: (B, H, nc, Q, ·)
+    xq = dtx.reshape(B, nc, Q, H, P).transpose(0, 3, 1, 2, 4)
+    aq = a.reshape(B, nc, Q, H).transpose(0, 3, 1, 2)
+    bq = Bc.astype(jnp.float32).reshape(B, nc, Q, N)
+    cq = Cc.astype(jnp.float32).reshape(B, nc, Q, N)
+
+    grid = (B, H, nc)
+    kernel = functools.partial(_kernel, nc=nc, Q=Q)
+    kwargs = {}
+    if _CompilerParams is not None and not interpret:
+        kwargs["compiler_params"] = _CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"))
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, Q, P), lambda b, h, k: (b, h, k, 0, 0)),
+            pl.BlockSpec((1, 1, 1, Q), lambda b, h, k: (b, h, k, 0)),
+            pl.BlockSpec((1, 1, Q, N), lambda b, h, k: (b, k, 0, 0)),
+            pl.BlockSpec((1, 1, Q, N), lambda b, h, k: (b, k, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, Q, P), lambda b, h, k: (b, h, k, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, nc, Q, P), x.dtype),
+        scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
+        interpret=interpret,
+        **kwargs,
+    )(xq, aq, bq, cq)
+    # (B, H, nc, Q, P) → (B, S, H, P)
+    return out.reshape(B, H, S, P).transpose(0, 2, 1, 3)

@@ -1,0 +1,288 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+Proves the distribution config is coherent without hardware: the 512
+placeholder host devices build the production meshes (16×16 single-pod,
+2×16×16 multi-pod); every cell must lower and compile, and the compiled
+artifact yields memory_analysis / cost_analysis / the collective schedule
+for §Dry-run and §Roofline.
+
+Cost-accounting methodology (see DESIGN.md §Roofline-methodology): XLA's
+cost_analysis counts a while-loop (lax.scan) body ONCE regardless of trip
+count, so a scanned-layers lowering under-reports flops/bytes/collectives
+by ~n_layers. Each cell therefore compiles three programs:
+
+  1. the production (scanned) step — compile proof + memory_analysis
+     (buffer reuse across layers is real there);
+  2. an unrolled depth-1 and
+  3. an unrolled depth-2 variant at FULL width on the same mesh —
+     their cost difference is the exact per-layer-body cost, and
+
+     true_cost = scan_cost + (n_body_units − 1) × body_cost
+
+  composes the exact full-depth accounting (the scanned program already
+  contains the body once). For hybrid archs the body unit is one
+  (attn_every SSD + shared-attn) group.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-8b --shape train_4k [--multi-pod]
+  python -m repro.launch.dryrun --all [--multi-pod] [--out results.jsonl]
+"""
+import argparse
+import dataclasses
+import json
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.registry import (SHAPES, all_cells, cell_applicable,
+                                    get_config)
+from repro.distributed import sharding as shd
+from repro.launch import specs as SP
+from repro.launch import steps as ST
+from repro.launch.mesh import make_production_mesh
+from repro.models import transformer as T
+from repro.models.module import count_params
+from repro.optim import adamw_init
+from repro.roofline import analysis as RA
+from repro.serving.engine import make_decode_step, make_prefill_step
+
+
+def _lower_step(cfg, shape, mesh, rules_overrides=None):
+    """Lower + compile the cell's step for ``cfg`` as-is. Returns
+    (compiled, lower_s, compile_s)."""
+    shape_kind = shape.kind
+    rules = ST.make_rules(cfg, mesh, shape, rules_overrides)
+    params_abs, axes = SP.abstract_params_and_axes(cfg)
+    p_shard = ST.model_shardings(cfg, params_abs, axes, rules)
+    t0 = time.time()
+    with shd.use_rules(rules):
+        if shape_kind == "train":
+            step = ST.make_train_step_fn(cfg, grad_shardings=p_shard)
+            opt_abs = jax.eval_shape(adamw_init, params_abs)
+            o_shard = ST.opt_shardings(p_shard, rules)
+            in_specs = SP.input_specs(cfg, shape)
+            b_shard = ST.batch_shardings(in_specs["batch"], rules)
+            jitted = jax.jit(step,
+                             in_shardings=(p_shard, o_shard, b_shard),
+                             out_shardings=(p_shard, o_shard, None),
+                             donate_argnums=(0, 1))
+            lowered = jitted.lower(params_abs, opt_abs, in_specs["batch"])
+        elif shape_kind == "prefill":
+            step = make_prefill_step(cfg)
+            in_specs = SP.input_specs(cfg, shape)
+            b_shard = ST.batch_shardings(in_specs["batch"], rules)
+            c_shard = ST.cache_shardings(in_specs["caches"], rules)
+            jitted = jax.jit(step,
+                             in_shardings=(p_shard, b_shard, c_shard),
+                             out_shardings=(None, c_shard),
+                             donate_argnums=(2,))
+            lowered = jitted.lower(params_abs, in_specs["batch"],
+                                   in_specs["caches"])
+        else:  # decode
+            step = make_decode_step(cfg)
+            in_specs = SP.input_specs(cfg, shape)
+            tok_shard = ST.batch_shardings(in_specs["tokens"], rules)
+            pos_shard = ST.batch_shardings(in_specs["positions"], rules)
+            c_shard = ST.cache_shardings(in_specs["caches"], rules)
+            jitted = jax.jit(step,
+                             in_shardings=(p_shard, tok_shard, pos_shard,
+                                           c_shard),
+                             donate_argnums=(3,),
+                             out_shardings=(None, c_shard))
+            lowered = jitted.lower(params_abs, in_specs["tokens"],
+                                   in_specs["positions"], in_specs["caches"])
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+    return compiled, t_lower, t_compile
+
+
+def _cost_vector(compiled):
+    """(flops, bytes_accessed, collective_bytes) per partition."""
+    cost = compiled.cost_analysis() or {}
+    coll = RA.collective_bytes_from_hlo(compiled.as_text())
+    return (float(cost.get("flops", 0.0)),
+            float(cost.get("bytes accessed", 0.0)),
+            float(coll["total"]), coll)
+
+
+def _body_unit(cfg) -> int:
+    """Layers per scan step: one hybrid group for zamba-style archs."""
+    return cfg.attn_every if cfg.attn_every else 1
+
+
+def _depth_cfg(cfg, n_units: int):
+    """Full-width config with ``n_units`` unrolled body units (and the
+    dense lead layers dropped — they are already unrolled, hence exactly
+    counted, in the scanned program). Keeps the config's remat setting so
+    the body diff includes remat recompute — required for remat-policy
+    A/B arms to be visible in the composed accounting."""
+    g = _body_unit(cfg)
+    return dataclasses.replace(
+        cfg, n_layers=n_units * g, first_dense_layers=0, scan_layers=False)
+
+
+def dryrun_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+                rules_overrides=None, verbose: bool = True,
+                skip_body_probe: bool = False):
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    if not cell_applicable(cfg, shape):
+        return {"arch": arch, "shape": shape_name, "skipped": True,
+                "reason": "full-attention arch at 500k decode (DESIGN §3)"}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.devices.size
+
+    # ---- 1. production (scanned) program: compile proof + memory ----------
+    compiled, t_lower, t_compile = _lower_step(cfg, shape, mesh,
+                                               rules_overrides)
+    mem = compiled.memory_analysis()
+    f_scan, b_scan, x_scan, coll_detail = _cost_vector(compiled)
+
+    # ---- 2/3. per-layer body cost via depth-1 vs depth-2 unrolled ----------
+    g = _body_unit(cfg)
+    n_units = (cfg.n_layers - cfg.first_dense_layers) // g
+    if skip_body_probe or n_units <= 1:
+        f_body = b_body = x_body = 0.0
+        n_units = max(n_units, 1)
+    else:
+        c1, _, t_c1 = _lower_step(_depth_cfg(cfg, 1), shape, mesh,
+                                  rules_overrides)
+        c2, _, t_c2 = _lower_step(_depth_cfg(cfg, 2), shape, mesh,
+                                  rules_overrides)
+        f1, b1, x1, _ = _cost_vector(c1)
+        f2, b2, x2, _ = _cost_vector(c2)
+        f_body, b_body = max(f2 - f1, 0.0), max(b2 - b1, 0.0)
+        x_body = max(x2 - x1, 0.0)
+
+    # The probes inherit the config's remat setting, so the per-body diff
+    # includes remat recompute exactly. Composition:
+    flops = f_scan + (n_units - 1) * f_body
+    bytes_acc = b_scan + (n_units - 1) * b_body
+    coll_bytes = x_scan + (n_units - 1) * x_body
+
+    n_params = count_params_abstract_cfg(cfg)
+    tokens = shape.batch * (shape.seq if shape.kind != "decode" else 1)
+    mf = RA.model_flops_estimate(
+        active_params(cfg, n_params), tokens,
+        "train" if shape.kind == "train" else "infer")
+    terms = RA.roofline_terms({"flops": flops, "bytes accessed": bytes_acc},
+                              coll_bytes, model_flops=mf / n_chips)
+
+    result = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "kind": shape.kind, "n_chips": n_chips,
+        "n_params": n_params,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "memory": describe_memory(mem),
+        "cost": {"flops": flops, "bytes accessed": bytes_acc,
+                 "scan_flops": f_scan, "body_flops": f_body,
+                 "n_body_units": n_units},
+        "collectives": {"total": coll_bytes, "scan_total": x_scan,
+                        "body_total": x_body},
+        "collective_counts": coll_detail["counts"],
+        "roofline": {k: v for k, v in terms.items()},
+    }
+    if verbose:
+        print(f"[dryrun] {arch} × {shape_name} × {result['mesh']}: "
+              f"compile {t_compile:.1f}s, "
+              f"bottleneck={terms['bottleneck']}, "
+              f"t=({terms['t_compute_s']:.2e},{terms['t_memory_s']:.2e},"
+              f"{terms['t_collective_s']:.2e})s "
+              f"frac={terms['roofline_fraction']:.3f}")
+        if mem is not None:
+            print(f"  memory_analysis: {result['memory']}")
+        print(f"  cost: flops={flops:.3e}/chip bytes={bytes_acc:.3e}/chip "
+              f"coll={coll_bytes:.3e}B/chip")
+    return result
+
+
+def count_params_abstract_cfg(cfg) -> int:
+    import numpy as np
+    params_abs, _ = SP.abstract_params_and_axes(cfg)
+    return int(sum(np.prod(l.shape) for l in
+                   jax.tree_util.tree_leaves(params_abs)))
+
+
+def count_params_abstract(params_abs) -> int:
+    import numpy as np
+    return int(sum(np.prod(l.shape) for l in
+                   jax.tree_util.tree_leaves(params_abs)))
+
+
+def active_params(cfg, n_params: int) -> float:
+    """6·N_active·D for MoE: discount inactive routed experts."""
+    if not cfg.is_moe:
+        return float(n_params)
+    per_expert = 3 * cfg.d_model * (cfg.moe_d_ff or cfg.d_ff)
+    n_moe_layers = cfg.n_layers - cfg.first_dense_layers
+    routed = n_moe_layers * cfg.n_experts * per_expert
+    active = n_moe_layers * cfg.n_experts_active * per_expert
+    return float(n_params - routed + active)
+
+
+def describe_memory(mem) -> dict:
+    if mem is None:
+        return {}
+    out = {}
+    for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes", "generated_code_size_in_bytes"):
+        v = getattr(mem, attr, None)
+        if v is not None:
+            out[attr] = int(v)
+    out["total_gb_per_device"] = round(
+        (out.get("argument_size_in_bytes", 0)
+         + out.get("temp_size_in_bytes", 0)) / 2**30, 3)
+    return out
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--skip-body-probe", action="store_true",
+                    help="compile only the scanned program (fast sanity)")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args(argv)
+
+    results = []
+    if args.all:
+        cells = [(a, s.name) for a, s in all_cells()]
+    else:
+        assert args.arch and args.shape, "--arch and --shape (or --all)"
+        cells = [(args.arch, args.shape)]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    failures = 0
+    for arch, shape_name in cells:
+        for mp in meshes:
+            try:
+                r = dryrun_cell(arch, shape_name, multi_pod=mp,
+                                skip_body_probe=args.skip_body_probe)
+            except Exception as e:  # a failure here is a bug in the system
+                traceback.print_exc()
+                r = {"arch": arch, "shape": shape_name,
+                     "mesh": "2x16x16" if mp else "16x16",
+                     "error": f"{type(e).__name__}: {e}"}
+                failures += 1
+            results.append(r)
+            if args.out:
+                with open(args.out, "a") as f:
+                    f.write(json.dumps(r) + "\n")
+    print(f"[dryrun] {len(results)} cells, {failures} failures")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

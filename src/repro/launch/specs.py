@@ -1,0 +1,79 @@
+"""ShapeDtypeStruct input stand-ins for every (arch × shape) cell.
+
+No device allocation: the dry-run lowers against these abstract values.
+Modality frontends are stubs per the assignment — musicgen gets 4-stream
+EnCodec token ids, internvl2 gets 256 precomputed patch embeddings.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import ShapeCell
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+
+SDS = jax.ShapeDtypeStruct
+
+
+def token_specs(cfg: ModelConfig, batch: int, seq: int) -> Dict[str, SDS]:
+    if cfg.n_codebooks:
+        return {"tokens": SDS((batch, seq, cfg.n_codebooks), jnp.int32)}
+    if cfg.family == "vlm":
+        from repro.configs.internvl2_76b import N_IMAGE_TOKENS
+        n_img = min(N_IMAGE_TOKENS, max(seq // 2, 1))
+        return {
+            "tokens": SDS((batch, seq - n_img), jnp.int32),
+            "embeds": SDS((batch, n_img, cfg.d_model), cfg.param_dtype),
+        }
+    if cfg.family == "vit":
+        return {"embeds": SDS((batch, seq, cfg.d_model), cfg.param_dtype)}
+    return {"tokens": SDS((batch, seq), jnp.int32)}
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_len: int) -> Dict:
+    """Abstract cache pytree matching models.transformer.init_caches."""
+    caches = jax.eval_shape(
+        lambda: T.init_caches(cfg, batch, max_len, cfg.param_dtype))
+    return caches
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeCell) -> Dict:
+    """Returns the kwargs pytree for the step function of the cell's kind.
+
+    train   → {"batch": {tokens,...}}
+    prefill → {"batch": ..., "caches": ...}
+    decode  → {"tokens": (B,1), "positions": (B,1), "caches": ...}
+    """
+    B, S = shape.batch, shape.seq
+    if shape.kind == "train":
+        return {"batch": token_specs(cfg, B, S)}
+    if shape.kind == "prefill":
+        out = {"batch": dict(token_specs(cfg, B, S)), "caches": None}
+        out["batch"]["positions"] = SDS((B, S), jnp.int32)
+        out["caches"] = cache_specs(cfg, B, S)
+        return out
+    if shape.kind == "decode":
+        return {
+            "tokens": SDS((B, 1, cfg.n_codebooks), jnp.int32)
+            if cfg.n_codebooks else SDS((B, 1), jnp.int32),
+            "positions": SDS((B, 1), jnp.int32),
+            "caches": cache_specs(cfg, B, S),
+        }
+    raise ValueError(shape.kind)
+
+
+def abstract_params_and_axes(cfg: ModelConfig):
+    """(param ShapeDtypeStructs, logical-axes tree) with no allocation.
+
+    Param shapes come from eval_shape on the full config; the axes tree is
+    structure-only (no arrays), so it is taken from a concrete init of the
+    *reduced* config, which shares the exact tree topology.
+    """
+    from repro.models.config import reduced
+    params = jax.eval_shape(
+        lambda k: T.init_model(k, cfg)[0], jax.random.PRNGKey(0))
+    _, axes = T.init_model(jax.random.PRNGKey(0), reduced(cfg))
+    return params, axes

@@ -1,0 +1,436 @@
+"""Transformer layer zoo: norms, RoPE, GQA/MQA/MLA attention, MLP, MoE.
+
+Every projection GEMM routes through repro.core.api (the MatrixFlow path);
+attention score/value contractions go through einsum under the "xla"
+backend and through the batched MatrixFlow kernel otherwise — mirroring the
+paper's split where the accelerator takes all GEMMs and the host keeps
+softmax/norm/transpose (§4.4).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import api
+from repro.distributed.sharding import shard
+from repro.models.config import ModelConfig
+from repro.models.module import ax, dense_init, fold, norm_init
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm(p, x, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm(p, x, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    y = y * p["scale"].astype(jnp.float32)
+    if "bias" in p:
+        y = y + p["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def apply_norm(cfg: ModelConfig, p, x):
+    return rmsnorm(p, x) if cfg.norm == "rmsnorm" else layernorm(p, x)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, S, H, D) with even D; positions: (B, S)."""
+    d = x.shape[-1]
+    freqs = theta ** (-jnp.arange(0, d, 2, dtype=jnp.float32) / d)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (B,S,D/2)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention core (shared by GQA and MLA): grouped scores + weighted values
+# ---------------------------------------------------------------------------
+
+def _attn_core(q, k, v, *, q_positions, kv_valid_len, causal, scale,
+               soft_cap: Optional[float] = None):
+    """q: (B,Sq,H,Dk); k: (B,T,Hkv,Dk); v: (B,T,Hkv,Dv); GQA via reshape.
+
+    q_positions: (B,Sq) absolute positions of the queries.
+    kv_valid_len: number of populated cache slots (T for pure prefill).
+    """
+    B, Sq, H, Dk = q.shape
+    T, Hkv = k.shape[1], k.shape[2]
+    rep = H // Hkv
+    qg = q.reshape(B, Sq, Hkv, rep, Dk)
+    if api.current_backend() == "xla":
+        logits = jnp.einsum("bqgrd,bkgd->bgrqk", qg, k,
+                            preferred_element_type=jnp.float32)
+    else:  # MatrixFlow path: fold (B,Hkv,rep) into the vmapped batch
+        qm = qg.transpose(0, 2, 3, 1, 4).reshape(B * Hkv * rep, Sq, Dk)
+        km = (jnp.repeat(k.transpose(0, 2, 1, 3), rep, axis=1)
+              .reshape(B * Hkv * rep, T, Dk))
+        logits = api.matmul(qm, km.transpose(0, 2, 1),
+                            out_dtype=jnp.float32)
+        logits = logits.reshape(B, Hkv, rep, Sq, T)
+    logits = logits.astype(jnp.float32) * scale
+    if soft_cap:
+        logits = soft_cap * jnp.tanh(logits / soft_cap)
+    kv_pos = jnp.arange(T)[None, None, :]                     # (1,1,T)
+    valid = kv_pos < kv_valid_len[:, None, None]              # (B,1,T)
+    if causal:
+        valid = valid & (kv_pos <= q_positions[:, :, None])   # (B,Sq,T)
+    logits = jnp.where(valid[:, None, None, :, :] if valid.ndim == 3
+                       else valid, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)                   # host-side op
+    if api.current_backend() == "xla":
+        out = jnp.einsum("bgrqk,bkgd->bqgrd", probs.astype(v.dtype), v)
+    else:
+        pm = probs.reshape(B * Hkv * rep, Sq, T).astype(v.dtype)
+        vm = (jnp.repeat(v.transpose(0, 2, 1, 3), rep, axis=1)
+              .reshape(B * Hkv * rep, T, v.shape[-1]))
+        out = api.matmul(pm, vm)
+        out = (out.reshape(B, Hkv, rep, Sq, v.shape[-1])
+               .transpose(0, 3, 1, 2, 4))
+    return out.reshape(B, Sq, H, v.shape[-1])
+
+
+# ---------------------------------------------------------------------------
+# GQA / MQA attention with KV cache
+# ---------------------------------------------------------------------------
+
+def init_attention(key, cfg: ModelConfig, dtype):
+    d, H, Hkv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    p, a = {}, {}
+    p["wq"], a["wq"] = dense_init(fold(key, 1), d, H * dh, dtype,
+                                  ("embed", "heads"))
+    p["wk"], a["wk"] = dense_init(fold(key, 2), d, Hkv * dh, dtype,
+                                  ("embed", "kv_heads"))
+    p["wv"], a["wv"] = dense_init(fold(key, 3), d, Hkv * dh, dtype,
+                                  ("embed", "kv_heads"))
+    p["wo"], a["wo"] = dense_init(fold(key, 4), H * dh, d, dtype,
+                                  ("heads", "embed"))
+    if cfg.qkv_bias:
+        for nm, width in (("bq", H * dh), ("bk", Hkv * dh), ("bv", Hkv * dh)):
+            p[nm] = jnp.zeros((width,), dtype)
+            a[nm] = ax("heads" if nm == "bq" else "kv_heads")
+    if cfg.qk_norm:
+        p["q_norm"], a["q_norm"] = norm_init(dh, dtype)
+        p["k_norm"], a["k_norm"] = norm_init(dh, dtype)
+    return p, a
+
+
+def attention(p, cfg: ModelConfig, x, *, positions, cache=None):
+    """x: (B,S,D). cache: {"k","v": (B,Smax,Hkv,dh), "len": (B,)} or None.
+
+    Returns (y, new_cache). Without a cache, self-attention over x
+    (causal per cfg). With a cache, writes K/V at ``positions`` then
+    attends over the cache (prefill chunks and single-token decode).
+    """
+    B, S, D = x.shape
+    H, Hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = api.linear(x, p["wq"], p.get("bq")).reshape(B, S, H, dh)
+    k = api.linear(x, p["wk"], p.get("bk")).reshape(B, S, Hkv, dh)
+    v = api.linear(x, p["wv"], p.get("bv")).reshape(B, S, Hkv, dh)
+    if cfg.qk_norm:
+        q, k = rmsnorm(p["q_norm"], q), rmsnorm(p["k_norm"], k)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    q = shard(q, "act_batch", "act_seq", "act_heads", None)
+    k = shard(k, "act_batch", "act_seq", "act_kv_heads", None)
+    v = shard(v, "act_batch", "act_seq", "act_kv_heads", None)
+
+    if cache is None:
+        kv_k, kv_v = k, v
+        kv_valid = jnp.full((B,), S)
+    else:
+        if S > 1:  # prefill chunk: rows share the write offset
+            idx = positions[0, 0]
+            kv_k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, idx, 1)
+            kv_v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, idx, 1)
+        else:      # decode: per-row offsets (continuous batching slots).
+            # One-hot masked update, NOT a scatter: a (B,·) scatter makes
+            # GSPMD replicate-then-repartition the whole cache when its seq
+            # dim is sharded (§Perf H2); the mask-select keeps every shard
+            # local — two cache passes, no collective.
+            T = cache["k"].shape[1]
+            at_pos = (jnp.arange(T)[None, :] == positions)[..., None, None]
+            kv_k = jnp.where(at_pos, k[:, 0][:, None], cache["k"])
+            kv_v = jnp.where(at_pos, v[:, 0][:, None], cache["v"])
+        cache = {"k": kv_k, "v": kv_v, "len": cache["len"] + S}
+        kv_valid = cache["len"]
+
+    out = _attn_core(q, kv_k, kv_v, q_positions=positions,
+                     kv_valid_len=kv_valid, causal=cfg.causal,
+                     scale=1.0 / math.sqrt(dh))
+    y = api.linear(out.reshape(B, S, H * dh), p["wo"])
+    return shard(y, "act_batch", "act_seq", "act_embed"), cache
+
+
+def init_attention_cache(cfg: ModelConfig, batch: int, max_len: int, dtype):
+    Hkv, dh = cfg.n_kv_heads, cfg.head_dim
+    return {
+        "k": jnp.zeros((batch, max_len, Hkv, dh), dtype),
+        "v": jnp.zeros((batch, max_len, Hkv, dh), dtype),
+        "len": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# MLA — multi-head latent attention (DeepSeek-V2, arXiv:2405.04434)
+# ---------------------------------------------------------------------------
+
+def init_mla(key, cfg: ModelConfig, dtype):
+    d, H = cfg.d_model, cfg.n_heads
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    r, rq = cfg.kv_lora_rank, cfg.q_lora_rank
+    p, a = {}, {}
+    p["wq_a"], a["wq_a"] = dense_init(fold(key, 1), d, rq, dtype,
+                                      ("embed", "kv_lora"))
+    p["q_norm"], a["q_norm"] = norm_init(rq, dtype)
+    p["wq_b"], a["wq_b"] = dense_init(fold(key, 2), rq, H * (dn + dr), dtype,
+                                      ("kv_lora", "heads"))
+    p["wkv_a"], a["wkv_a"] = dense_init(fold(key, 3), d, r + dr, dtype,
+                                        ("embed", "kv_lora"))
+    p["kv_norm"], a["kv_norm"] = norm_init(r, dtype)
+    p["wkv_b"], a["wkv_b"] = dense_init(fold(key, 4), r, H * (dn + dv), dtype,
+                                        ("kv_lora", "heads"))
+    p["wo"], a["wo"] = dense_init(fold(key, 5), H * dv, d, dtype,
+                                  ("heads", "embed"))
+    return p, a
+
+
+def mla_attention(p, cfg: ModelConfig, x, *, positions, cache=None):
+    """MLA with latent KV cache. cache: {"ckv": (B,Smax,r), "krope":
+    (B,Smax,dr), "len": (B,)}. Prefill materializes K/V per head; the cache
+    itself stays compressed (the MLA memory saving)."""
+    B, S, D = x.shape
+    H = cfg.n_heads
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    r = cfg.kv_lora_rank
+
+    q = api.linear(x, p["wq_a"])
+    q = rmsnorm(p["q_norm"], q)
+    q = api.linear(q, p["wq_b"]).reshape(B, S, H, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = rope(q_rope, positions, cfg.rope_theta)
+
+    ckv = api.linear(x, p["wkv_a"])                       # (B,S,r+dr)
+    c_kv, k_rope = ckv[..., :r], ckv[..., r:]
+    c_kv = rmsnorm(p["kv_norm"], c_kv)
+    k_rope = rope(k_rope[:, :, None, :], positions, cfg.rope_theta)[:, :, 0]
+
+    if cache is not None:
+        if S > 1:
+            idx = positions[0, 0]
+            up = lambda buf, new: jax.lax.dynamic_update_slice_in_dim(
+                buf, new, idx, 1)
+        else:
+            # masked update, not scatter — shard-local under seq sharding
+            # (same rationale as the GQA path, §Perf H2)
+            T = cache["ckv"].shape[1]
+            at_pos = (jnp.arange(T)[None, :] == positions)[..., None]
+            up = lambda buf, new: jnp.where(at_pos, new[:, 0][:, None], buf)
+        cache = {"ckv": up(cache["ckv"], c_kv),
+                 "krope": up(cache["krope"], k_rope),
+                 "len": cache["len"] + S}
+        c_all, kr_all, kv_valid = cache["ckv"], cache["krope"], cache["len"]
+    else:
+        c_all, kr_all, kv_valid = c_kv, k_rope, jnp.full((B,), S)
+
+    # Up-project the latent cache to per-head K (nope) and V. (The fully
+    # "absorbed" decode path is a §Perf optimization — see serving/engine.)
+    kv = api.linear(c_all, p["wkv_b"]).reshape(B, -1, H, dn + dv)
+    k_nope, v = kv[..., :dn], kv[..., dn:]
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(kr_all[:, :, None, :],
+                                  (*k_nope.shape[:3], dr))], axis=-1)
+    q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+    out = _attn_core(q_full, k, v, q_positions=positions,
+                     kv_valid_len=kv_valid, causal=True,
+                     scale=1.0 / math.sqrt(dn + dr))
+    y = api.linear(out.reshape(B, S, H * dv), p["wo"])
+    return shard(y, "act_batch", "act_seq", "act_embed"), cache
+
+
+def init_mla_cache(cfg: ModelConfig, batch: int, max_len: int, dtype):
+    return {
+        "ckv": jnp.zeros((batch, max_len, cfg.kv_lora_rank), dtype),
+        "krope": jnp.zeros((batch, max_len, cfg.qk_rope_head_dim), dtype),
+        "len": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, cfg: ModelConfig, dtype, d_ff: Optional[int] = None,
+             d_in: Optional[int] = None):
+    d = d_in or cfg.d_model
+    f = d_ff or cfg.d_ff
+    p, a = {}, {}
+    if cfg.mlp_act == "swiglu":
+        p["wi"], a["wi"] = dense_init(fold(key, 1), d, 2 * f, dtype,
+                                      ("embed", "mlp"))
+    else:
+        p["wi"], a["wi"] = dense_init(fold(key, 1), d, f, dtype,
+                                      ("embed", "mlp"))
+        p["bi"] = jnp.zeros((f,), dtype); a["bi"] = ax("mlp")
+    p["wo"], a["wo"] = dense_init(fold(key, 2), f, d, dtype,
+                                  ("mlp", "embed"))
+    if cfg.mlp_act != "swiglu":
+        p["bo"] = jnp.zeros((d,), dtype); a["bo"] = ax("embed")
+    return p, a
+
+
+def mlp(p, cfg: ModelConfig, x):
+    if cfg.mlp_act == "swiglu":
+        h = api.linear(x, p["wi"])
+        gate, up = jnp.split(h, 2, axis=-1)
+        h = jax.nn.silu(gate) * up
+    else:
+        h = api.linear(x, p["wi"], p.get("bi"))
+        h = jax.nn.gelu(h)
+    h = shard(h, "act_batch", "act_seq", "act_mlp")
+    return api.linear(h, p["wo"], p.get("bo"))
+
+
+# ---------------------------------------------------------------------------
+# MoE — capacity-based sort/scatter dispatch (EP over the "experts" axis)
+# ---------------------------------------------------------------------------
+
+def init_moe(key, cfg: ModelConfig, dtype):
+    d, E, f = cfg.d_model, cfg.n_experts, cfg.moe_d_ff or cfg.d_ff
+    p, a = {}, {}
+    p["router"], a["router"] = dense_init(fold(key, 1), d, E, dtype,
+                                          ("embed", None), scale=0.02)
+    def expert_bank(k2, d_in, d_out):
+        w = (jax.random.normal(k2, (E, d_in, d_out), jnp.float32)
+             / math.sqrt(d_in)).astype(dtype)
+        return w, ax("experts", "embed" if d_in == d else None,
+                     None if d_out == d else None)
+    p["wi"], a["wi"] = expert_bank(fold(key, 2), d, 2 * f)
+    p["wo"], a["wo"] = expert_bank(fold(key, 3), f, d)
+    if cfg.n_shared_experts:
+        sh, sha = init_mlp(fold(key, 4), cfg, dtype,
+                           d_ff=cfg.n_shared_experts * f)
+        p["shared"], a["shared"] = sh, sha
+    return p, a
+
+
+def _moe_groups(T: int, target: int = 32) -> int:
+    """Token groups for local dispatch — the largest divisor of T ≤ target.
+    Groups align with data shards so sort/scatter stay shard-local and the
+    (group, expert) buffer resharding is the canonical MoE all-to-all."""
+    g = min(target, T)
+    while T % g:
+        g -= 1
+    return max(g, 1)
+
+
+def moe(p, cfg: ModelConfig, x):
+    """x: (B,S,D) → (B,S,D), plus load-balance aux loss.
+
+    Grouped sort-based capacity dispatch (GShard-style dropping):
+      1. tokens reshaped to (G, t, D) groups; G is sharded over data —
+         per-group argsort/scatter are local (vmapped, batch dim sharded);
+      2. dispatch buffer (G, E, C, D): constraint (data, model) 2-D sharding
+         ⇒ GSPMD inserts the expert-parallel all-to-all here;
+      3. experts run as one grouped GEMM bank einsum (E model-sharded);
+      4. combine gathers back per group (local) and weights by router probs.
+    All shapes static ⇒ compiles on any mesh.
+    """
+    B, S, D = x.shape
+    E, k = cfg.n_experts, cfg.n_experts_active
+    T = B * S
+    G = _moe_groups(T)
+    t = T // G
+    C = max(int(t * k / E * cfg.capacity_factor), 1)
+    C = min(C, t * k)
+    xt = x.reshape(G, t, D)
+    xt = shard(xt, "act_batch", None, "act_embed")
+
+    logits = api.matmul(xt, p["router"]).astype(jnp.float32)    # (G,t,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, ids = jax.lax.top_k(probs, k)                         # (G,t,k)
+    gate = gate / jnp.clip(gate.sum(-1, keepdims=True), 1e-9)   # renorm
+
+    # aux load-balancing loss (Switch-style), over all tokens
+    density = jnp.mean(jax.nn.one_hot(ids[..., 0], E), axis=(0, 1))
+    aux = E * jnp.mean(density * jnp.mean(probs, axis=(0, 1)))
+
+    def dispatch_one(xg, idg):
+        """Per-group local dispatch. xg: (t,D); idg: (t,k) →
+        (buffer (E*C+1, D), slot_for_flat (t*k,), tok_for_slot (E*C+1,))."""
+        flat_e = idg.reshape(-1)                                # (t*k,)
+        flat_t = jnp.repeat(jnp.arange(t), k)
+        order = jnp.argsort(flat_e, stable=True)
+        sorted_e = flat_e[order]
+        start = jnp.searchsorted(sorted_e, jnp.arange(E))
+        pos_in_e = jnp.arange(t * k) - start[sorted_e]
+        keep = pos_in_e < C
+        slot = jnp.where(keep, sorted_e * C + pos_in_e, E * C)  # E*C = trash
+        buf = jnp.zeros((E * C + 1, D), xg.dtype)
+        buf = buf.at[slot].set(xg[flat_t[order]])
+        slot_for_flat = jnp.zeros((t * k,), jnp.int32).at[order].set(slot)
+        tok_for_slot = (jnp.zeros((E * C + 1,), jnp.int32)
+                        .at[slot].set(flat_t[order]))
+        return buf, slot_for_flat, tok_for_slot
+
+    buf, slot_for_flat, tok_for_slot = jax.vmap(dispatch_one)(xt, ids)
+    h = buf[:, :-1].reshape(G, E, C, D)
+    # EP boundary: (data × model) 2-D sharding → all-to-all inserted here
+    h = shard(h, "act_batch", "act_experts", None, None)
+
+    # NB: no explicit preferred_element_type — XLA:TPU accumulates bf16
+    # MXU dots in fp32 natively, and XLA:CPU lacks the mixed thunk.
+    gi = jnp.einsum("gecd,edf->gecf", h, p["wi"]).astype(x.dtype)
+    g_, u = jnp.split(gi, 2, axis=-1)
+    hh = jax.nn.silu(g_) * u
+    hh = shard(hh, "act_batch", "act_experts", None, None)
+    out = jnp.einsum("gecf,efd->gecd", hh, p["wo"]).astype(x.dtype)
+    out = out.reshape(G, E * C, D)
+    out = jnp.concatenate([out, jnp.zeros((G, 1, D), x.dtype)], axis=1)
+
+    if cfg.moe_combine == "local":
+        # §Perf H4: combine WITHOUT re-replicating the expert buffer.
+        # Scale slots by their gates, scatter-add into (G,t,D) token rows —
+        # the update operand stays expert-sharded, so GSPMD keeps the
+        # scatter local per shard and all-reduces only the (G,t,D) result
+        # (~GBs → ~1 GB per layer on deepseek-v2).
+        def gate_map(slotg, gateg):
+            gs = (jnp.zeros((E * C + 1,), jnp.float32)
+                  .at[slotg].set(gateg.reshape(-1)))
+            return gs.at[E * C].set(0.0)       # dropped tokens contribute 0
+
+        gate_slot = jax.vmap(gate_map)(slot_for_flat,
+                                       gate.astype(jnp.float32))
+        upd = out * gate_slot[..., None].astype(out.dtype)
+
+        def comb(updg, tokg):
+            return jnp.zeros((t, D), updg.dtype).at[tokg].add(updg)
+
+        y = jax.vmap(comb)(upd, tok_for_slot)
+    else:
+        out = shard(out, "act_batch", None, None)  # replicated combine
+        contrib = jnp.take_along_axis(
+            out, slot_for_flat[..., None], axis=1).reshape(G, t, k, D)
+        y = jnp.sum(contrib * gate[..., None].astype(x.dtype), axis=2)
+
+    if cfg.n_shared_experts:
+        y = y + mlp(p["shared"], cfg, xt)
+    return y.reshape(B, S, D), aux

@@ -1,0 +1,67 @@
+"""Minimal pure-JAX module substrate (no flax dependency).
+
+Parameters are nested dicts of jax.Arrays. Every ``init_*`` function returns
+``(params, axes)`` where ``axes`` is a pytree of the same structure whose
+leaves are tuples of *logical axis names* — the sharding engine
+(distributed/sharding.py) maps those to mesh PartitionSpecs. Keeping the
+axis metadata structurally parallel to the params makes resharding (elastic
+restarts, mesh changes) a pure tree_map.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+Axes = Dict[str, Any]
+
+
+class AxisLeaf(tuple):
+    """Tuple of logical axis names; subclass so tree libs treat it as a leaf."""
+    pass
+
+
+def ax(*names: Optional[str]) -> AxisLeaf:
+    return AxisLeaf(names)
+
+
+def is_axis_leaf(x) -> bool:
+    return isinstance(x, AxisLeaf)
+
+
+def axes_tree_map(fn, axes: Axes):
+    return jax.tree_util.tree_map(fn, axes, is_leaf=is_axis_leaf)
+
+
+def dense_init(key, d_in: int, d_out: int, dtype, axes_names=("embed", "mlp"),
+               scale: Optional[float] = None):
+    scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    w = jax.random.normal(key, (d_in, d_out), dtype=jnp.float32) * scale
+    return w.astype(dtype), ax(*axes_names)
+
+
+def embed_init(key, vocab: int, d: int, dtype):
+    w = jax.random.normal(key, (vocab, d), dtype=jnp.float32) * 0.02
+    return w.astype(dtype), ax("vocab", "embed")
+
+
+def norm_init(d: int, dtype, with_bias: bool = False):
+    p = {"scale": jnp.ones((d,), dtype)}
+    a = {"scale": ax("embed")}
+    if with_bias:
+        p["bias"] = jnp.zeros((d,), dtype)
+        a["bias"] = ax("embed")
+    return p, a
+
+
+def count_params(params: Params) -> int:
+    return sum(x.size for x in jax.tree_util.tree_leaves(params))
+
+
+def fold(key, *data: int):
+    for d in data:
+        key = jax.random.fold_in(key, d)
+    return key

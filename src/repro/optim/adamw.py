@@ -1,0 +1,95 @@
+"""AdamW with ZeRO-sharded fp32 moments and optional int8 gradient
+compression (error feedback) for the cross-pod all-reduce.
+
+Moment tensors inherit each parameter's sharding (FSDP over the 'data'
+axis per the rules engine) — this *is* ZeRO: optimizer state lives
+sharded, updates run sharded, no parameter-sized replication anywhere.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    compress_grads: bool = False  # int8 all-reduce with error feedback
+
+
+def adamw_init(params):
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    state = {
+        "mu": jax.tree_util.tree_map(zeros, params),
+        "nu": jax.tree_util.tree_map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+    return state
+
+
+def _global_norm(tree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(x.astype(jnp.float32) ** 2) for x in leaves))
+
+
+def quantize_int8(g: jax.Array, err: Optional[jax.Array] = None):
+    """Symmetric per-tensor int8 quantization with error feedback."""
+    gf = g.astype(jnp.float32)
+    if err is not None:
+        gf = gf + err
+    scale = jnp.maximum(jnp.max(jnp.abs(gf)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+    deq = q.astype(jnp.float32) * scale
+    new_err = gf - deq
+    return deq, new_err
+
+
+def adamw_update(params, grads, state, cfg: AdamWConfig, lr: jax.Array,
+                 err_state=None):
+    """One AdamW step. Returns (new_params, new_state, metrics, new_err)."""
+    gnorm = _global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9))
+
+    new_err = err_state
+    if cfg.compress_grads:
+        if err_state is None:
+            err_state = jax.tree_util.tree_map(
+                lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+        pairs = jax.tree_util.tree_map(quantize_int8, grads, err_state)
+        grads = jax.tree_util.tree_map(lambda pe: pe[0], pairs,
+                                       is_leaf=lambda x: isinstance(x, tuple))
+        new_err = jax.tree_util.tree_map(lambda pe: pe[1], pairs,
+                                         is_leaf=lambda x: isinstance(x, tuple))
+
+    step = state["step"] + 1
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, mu, nu):
+        g = g.astype(jnp.float32) * clip
+        mu = cfg.b1 * mu + (1 - cfg.b1) * g
+        nu = cfg.b2 * nu + (1 - cfg.b2) * g * g
+        mhat = mu / b1c
+        nhat = nu / b2c
+        delta = mhat / (jnp.sqrt(nhat) + cfg.eps)
+        if p.ndim >= 2:  # decoupled weight decay on matrices only
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), mu, nu
+
+    out = jax.tree_util.tree_map(upd, params, grads, state["mu"], state["nu"])
+    new_params = jax.tree_util.tree_map(
+        lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_mu = jax.tree_util.tree_map(
+        lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_nu = jax.tree_util.tree_map(
+        lambda t: t[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_state = {"mu": new_mu, "nu": new_nu, "step": step}
+    return new_params, new_state, {"grad_norm": gnorm}, new_err

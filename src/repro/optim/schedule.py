@@ -1,0 +1,16 @@
+"""LR schedules."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_schedule(step, *, base_lr: float, warmup: int, total: int,
+                    min_frac: float = 0.1):
+    step = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+    # ramp hits base_lr at step==warmup-1 and is non-zero at step 0
+    # (an lr-0 first step would silently waste the first batch)
+    warm = base_lr * jnp.minimum((step + 1) / max(warmup, 1), 1.0)
+    t = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+    cos = base_lr * (min_frac + (1 - min_frac) * 0.5 *
+                     (1 + jnp.cos(jnp.pi * t)))
+    return jnp.where(step < warmup, warm, cos)

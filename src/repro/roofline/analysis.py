@@ -1,0 +1,101 @@
+"""Three-term roofline analysis from compiled dry-run artifacts.
+
+  compute term    = HLO_FLOPs / (chips × peak_FLOP/s)
+  memory term     = HLO_bytes / (chips × HBM_bw)
+  collective term = collective_bytes / (chips × link_bw)
+
+cost_analysis() on an SPMD executable is per-partition (per-chip), so the
+per-chip terms drop out directly. Collective bytes are parsed from the
+optimized per-partition HLO text (compiled.as_text()) by summing the result
+shapes of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute instruction.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+# TPU v5e-class hardware constants (per assignment)
+@dataclasses.dataclass(frozen=True)
+class HW:
+    peak_flops: float = 197e12       # bf16 FLOP/s per chip
+    hbm_bw: float = 819e9            # bytes/s per chip
+    ici_bw: float = 50e9             # bytes/s per link
+
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"\b(pred|[suf]\d+|bf16|c64|c128)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> Dict[str, float]:
+    """Sum result-shape bytes per collective category (per partition)."""
+    out = {c: 0.0 for c in _COLLECTIVES}
+    counts = {c: 0 for c in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        for coll in _COLLECTIVES:
+            # result type sits between "=" and the op name; instruction
+            # *names* also contain the op string, so anchor on "= <type> op("
+            m = re.search(rf"=\s+(.*?)\s*{coll}(-start)?\(", stripped)
+            if m:
+                total = sum(_shape_bytes(d, s)
+                            for d, s in _SHAPE_RE.findall(m.group(1)))
+                if total:
+                    out[coll] += total
+                    counts[coll] += 1
+                break
+    out["total"] = sum(out[c] for c in _COLLECTIVES)
+    out["counts"] = counts  # type: ignore
+    return out
+
+
+def roofline_terms(cost: Dict[str, float], collective_bytes: float,
+                   hw: HW = HW(), model_flops: Optional[float] = None,
+                   links_per_chip: int = 1) -> Dict[str, float]:
+    """cost: compiled.cost_analysis() dict (per-partition)."""
+    flops = float(cost.get("flops", 0.0))
+    bytes_accessed = float(cost.get("bytes accessed", 0.0))
+    t_compute = flops / hw.peak_flops
+    t_memory = bytes_accessed / hw.hbm_bw
+    t_collective = collective_bytes / (hw.ici_bw * links_per_chip)
+    terms = {
+        "flops_per_chip": flops,
+        "bytes_per_chip": bytes_accessed,
+        "coll_bytes_per_chip": collective_bytes,
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_collective,
+    }
+    dominant = max(("compute", t_compute), ("memory", t_memory),
+                   ("collective", t_collective), key=lambda kv: kv[1])
+    terms["bottleneck"] = dominant[0]
+    t_bound = max(t_compute, t_memory, t_collective)
+    terms["roofline_fraction"] = (t_compute / t_bound) if t_bound > 0 else 0.0
+    if model_flops is not None and flops > 0:
+        terms["model_flops"] = model_flops
+        terms["useful_flops_ratio"] = model_flops / flops
+    return terms
+
+
+def model_flops_estimate(n_params_active: float, tokens: float,
+                         kind: str = "train") -> float:
+    """MODEL_FLOPS = 6·N·D (train) or 2·N·D (inference forward)."""
+    mult = 6.0 if kind == "train" else 2.0
+    return mult * n_params_active * tokens

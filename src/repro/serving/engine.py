@@ -1,0 +1,126 @@
+"""Batched serving engine: prefill + decode steps over the model's caches.
+
+``prefill_step``/``decode_step`` are the functions the dry-run lowers for the
+``prefill_*`` / ``decode_*`` / ``long_*`` shape cells. The engine adds a
+simple continuous-batching front end: a slot-based scheduler that admits
+queued requests into free batch slots between decode iterations (the
+vLLM-style pattern, reduced to its core).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    batch_slots: int = 8
+    max_len: int = 1024
+    temperature: float = 0.0     # 0 → greedy
+    cache_dtype: str = "bfloat16"
+
+
+def make_prefill_step(cfg: ModelConfig):
+    """(params, batch, caches) → (last_logits, caches). Processes the full
+    prompt with causal self-attention while writing the caches."""
+    def prefill_step(params, batch, caches):
+        logits, caches, _ = T.forward(params, cfg, batch, caches=caches,
+                                      remat=False)
+        return logits[:, -1], caches
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig):
+    """(params, tokens(B,1), positions(B,1), caches) → (logits, caches)."""
+    def decode_step(params, tokens, positions, caches):
+        batch = {"tokens": tokens, "positions": positions}
+        logits, caches, _ = T.forward(params, cfg, batch, caches=caches,
+                                      remat=False)
+        return logits[:, -1], caches
+    return decode_step
+
+
+class ServingEngine:
+    """Greedy/temperature sampling with slot-based continuous batching."""
+
+    def __init__(self, cfg: ModelConfig, params, sc: ServeConfig):
+        self.cfg, self.params, self.sc = cfg, params, sc
+        self.decode = jax.jit(make_decode_step(cfg))
+        self.prefill = jax.jit(make_prefill_step(cfg))
+        self.caches = T.init_caches(cfg, sc.batch_slots, sc.max_len,
+                                    jnp.dtype(sc.cache_dtype))
+        self.slot_pos = np.zeros(sc.batch_slots, np.int32)
+        self.slot_live = np.zeros(sc.batch_slots, bool)
+        self.slot_out: List[List[int]] = [[] for _ in range(sc.batch_slots)]
+
+    # -- single-prompt helpers (used by tests/examples) ---------------------
+    def generate(self, prompts: np.ndarray, n_tokens: int,
+                 key: Optional[jax.Array] = None) -> np.ndarray:
+        """prompts: (B, S) int32 — B must equal batch_slots. Returns
+        (B, n_tokens) generated ids."""
+        B, S = prompts.shape
+        assert B == self.sc.batch_slots
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        logits, self.caches = self.prefill(
+            self.params, {"tokens": jnp.asarray(prompts),
+                          "positions": positions}, self.caches)
+        out = []
+        tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+        for i in range(n_tokens):
+            out.append(np.asarray(tok)[:, 0])
+            pos = jnp.full((B, 1), S + i, jnp.int32)
+            logits, self.caches = self.decode(self.params, tok, pos,
+                                              self.caches)
+            if self.sc.temperature > 0 and key is not None:
+                key, sub = jax.random.split(key)
+                tok = jax.random.categorical(
+                    sub, logits / self.sc.temperature)[:, None]
+            else:
+                tok = jnp.argmax(logits, axis=-1)[:, None]
+            tok = tok.astype(jnp.int32)
+        return np.stack(out, axis=1)
+
+    # -- continuous batching -------------------------------------------------
+    def submit(self, prompt: List[int]) -> Optional[int]:
+        """Admit a request into a free slot; returns slot id or None."""
+        free = np.where(~self.slot_live)[0]
+        if free.size == 0:
+            return None
+        slot = int(free[0])
+        # per-slot prefill: run the prompt through decode one token at a
+        # time (slot-local; batch-level prefill happens in generate())
+        for i, t in enumerate(prompt):
+            tok = jnp.zeros((self.sc.batch_slots, 1), jnp.int32)
+            tok = tok.at[slot, 0].set(t)
+            pos = jnp.asarray(self.slot_pos)[:, None]
+            _, self.caches = self.decode(self.params, tok, pos, self.caches)
+            self.slot_pos[slot] += 1
+        self.slot_live[slot] = True
+        self.slot_out[slot] = []
+        return slot
+
+    def step(self) -> Dict[int, int]:
+        """One decode iteration across all live slots."""
+        if not self.slot_live.any():
+            return {}
+        last = np.array([o[-1] if o else 0 for o in self.slot_out], np.int32)
+        tok = jnp.asarray(last)[:, None]
+        pos = jnp.asarray(self.slot_pos)[:, None]
+        logits, self.caches = self.decode(self.params, tok, pos, self.caches)
+        nxt = np.asarray(jnp.argmax(logits, axis=-1))
+        out = {}
+        for s in range(self.sc.batch_slots):
+            if self.slot_live[s]:
+                self.slot_out[s].append(int(nxt[s]))
+                self.slot_pos[s] += 1
+                out[s] = int(nxt[s])
+                if self.slot_pos[s] >= self.sc.max_len - 1:
+                    self.slot_live[s] = False   # retire full slots
+        return out

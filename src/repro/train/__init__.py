@@ -1,0 +1,2 @@
+from repro.train.checkpoint import CheckpointManager  # noqa: F401
+from repro.train.loop import TrainConfig, Trainer  # noqa: F401

@@ -1,0 +1,132 @@
+"""Training loop with fault tolerance: auto-resume, async checkpoints,
+preemption handling, straggler watchdog, elastic restart support.
+"""
+from __future__ import annotations
+
+import dataclasses
+import signal
+import time
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.pipeline import DataConfig, TokenPipeline
+from repro.distributed import sharding as shd
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+from repro.optim import AdamWConfig, adamw_init, adamw_update, cosine_schedule
+from repro.train.checkpoint import CheckpointManager
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    steps: int = 100
+    log_every: int = 10
+    ckpt_every: int = 50
+    ckpt_dir: Optional[str] = None
+    seed: int = 0
+    base_lr: float = 3e-4
+    warmup: int = 20
+    straggler_factor: float = 3.0   # step slower than 3× EMA → flagged
+    aux_weight: float = 0.01
+    compress_grads: bool = False
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig, tc: TrainConfig):
+    def train_step(params, opt_state, batch):
+        def loss_fn(p):
+            loss, metrics = T.lm_loss(p, cfg, batch,
+                                      aux_weight=tc.aux_weight)
+            return loss, metrics
+
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params)
+        lr = cosine_schedule(opt_state["step"], base_lr=tc.base_lr,
+                             warmup=tc.warmup, total=tc.steps)
+        params, opt_state, opt_metrics, _ = adamw_update(
+            params, grads, opt_state, opt_cfg, lr)
+        metrics = dict(metrics, loss=loss, lr=lr, **opt_metrics)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+class Trainer:
+    """Single-host trainer (CPU demo scale); the pjit path in launch/train.py
+    reuses make_train_step under a mesh."""
+
+    def __init__(self, cfg: ModelConfig, data_cfg: DataConfig,
+                 tc: TrainConfig, opt_cfg: Optional[AdamWConfig] = None):
+        self.cfg, self.tc = cfg, tc
+        self.opt_cfg = opt_cfg or AdamWConfig(
+            lr=tc.base_lr, compress_grads=tc.compress_grads)
+        self.data = TokenPipeline(data_cfg)
+        self.ckpt = (CheckpointManager(tc.ckpt_dir)
+                     if tc.ckpt_dir else None)
+        key = jax.random.PRNGKey(tc.seed)
+        self.params, self.axes = T.init_model(key, cfg)
+        self.opt_state = adamw_init(self.params)
+        self.start_step = 0
+        self._preempted = False
+        if self.ckpt and self.ckpt.latest_step() is not None:
+            self._resume()
+        self._step_fn = jax.jit(
+            make_train_step(cfg, self.opt_cfg, tc), donate_argnums=(0, 1))
+
+    # -- fault tolerance ------------------------------------------------
+    def _resume(self):
+        state = self.ckpt.restore(
+            {"params": self.params, "opt": self.opt_state})
+        self.params, self.opt_state = state["params"], state["opt"]
+        meta = self.ckpt.meta()
+        self.start_step = meta["step"]
+        self.data.load_state_dict(meta["extra"]["data"])
+        print(f"[trainer] resumed from step {self.start_step}")
+
+    def _save(self, step: int):
+        if self.ckpt:
+            self.ckpt.save(step, {"params": self.params,
+                                  "opt": self.opt_state},
+                           extra={"data": self.data.state_dict()})
+
+    def _on_sigterm(self, *_):
+        self._preempted = True
+
+    # -- loop -------------------------------------------------------------
+    def run(self) -> Dict[str, Any]:
+        old = signal.signal(signal.SIGTERM, self._on_sigterm)
+        ema = None
+        history = []
+        try:
+            for step in range(self.start_step, self.tc.steps):
+                t0 = time.perf_counter()
+                batch = {k: jnp.asarray(v)
+                         for k, v in self.data.next_batch().items()}
+                self.params, self.opt_state, metrics = self._step_fn(
+                    self.params, self.opt_state, batch)
+                dt = time.perf_counter() - t0
+                ema = dt if ema is None else 0.9 * ema + 0.1 * dt
+                if dt > self.tc.straggler_factor * ema:
+                    print(f"[watchdog] step {step} straggled: "
+                          f"{dt:.3f}s vs EMA {ema:.3f}s")
+                if step % self.tc.log_every == 0 or step == self.tc.steps - 1:
+                    loss = float(metrics["loss"])
+                    history.append((step, loss))
+                    print(f"[trainer] step {step} loss {loss:.4f} "
+                          f"({dt*1e3:.0f} ms)")
+                if self.tc.ckpt_every and (step + 1) % self.tc.ckpt_every == 0:
+                    self._save(step + 1)
+                if self._preempted:
+                    print("[trainer] SIGTERM — checkpointing and exiting")
+                    self._save(step + 1)
+                    break
+            final_step = step + 1
+            self._save(final_step)
+            if self.ckpt:
+                self.ckpt.wait()
+        finally:
+            signal.signal(signal.SIGTERM, old)
+        return {"history": history, "final_loss": history[-1][1],
+                "params": self.params}

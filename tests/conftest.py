@@ -1,0 +1,14 @@
+"""Shared fixtures. NB: do NOT set xla_force_host_platform_device_count here —
+smoke tests and benches must see the real (1-device) CPU platform; only
+launch/dryrun.py requests 512 placeholder devices."""
+import os
+
+import numpy as np
+import pytest
+
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,46 @@
+"""Algorithm 1 (core/blockflow.py) against the jnp oracle + dtype policy."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import layout as L
+from repro.core.blockflow import acc_dtype_for, block_matmul, multi_acc
+from repro.kernels.ref import matmul_ref
+
+
+@settings(max_examples=15, deadline=None)
+@given(m=st.integers(1, 128), k=st.integers(1, 128), n=st.integers(1, 128))
+def test_block_matmul_matches_dense(m, k, n):
+    rng = np.random.default_rng(m + 31 * k + 977 * n)
+    a = jnp.asarray(rng.standard_normal((m, k)).astype(np.float32))
+    b = jnp.asarray(rng.standard_normal((k, n)).astype(np.float32))
+    np.testing.assert_allclose(np.asarray(block_matmul(a, b)),
+                               np.asarray(matmul_ref(a, b)),
+                               atol=1e-4, rtol=1e-5)
+
+
+def test_acc_dtype_policy():
+    assert acc_dtype_for(jnp.int8) == jnp.int32
+    assert acc_dtype_for(jnp.int32) == jnp.int32
+    assert acc_dtype_for(jnp.bfloat16) == jnp.float32
+    assert acc_dtype_for(jnp.float32) == jnp.float32
+
+
+def test_multi_acc_accumulates():
+    a = jnp.ones((4, 8), jnp.float32)
+    b = jnp.ones((8, 4), jnp.float32)
+    c = jnp.full((4, 4), 2.0, jnp.float32)
+    out = multi_acc(a, b, c)
+    np.testing.assert_array_equal(np.asarray(out), np.full((4, 4), 10.0))
+
+
+@pytest.mark.parametrize("blk", [L.BlockLayout(8, 128, 128),
+                                 L.BlockLayout(16, 256, 512)])
+def test_explicit_block_geometry(blk):
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.standard_normal((64, 512)).astype(np.float32))
+    b = jnp.asarray(rng.standard_normal((512, 256)).astype(np.float32))
+    np.testing.assert_allclose(np.asarray(block_matmul(a, b, blk=blk)),
+                               np.asarray(matmul_ref(a, b)),
+                               atol=1e-4, rtol=1e-5)

@@ -1,0 +1,141 @@
+"""Shape/dtype sweeps for the flash-attention and SSD Pallas kernels vs
+their pure-jnp oracles (interpret mode on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops
+from repro.kernels.ref import mha_ref, ssd_ref
+from repro.models.ssm import ssd_chunked
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ---------------------------------------------------------------------------
+# Flash attention
+# ---------------------------------------------------------------------------
+
+FLASH_CASES = [
+    # (B, Sq, H, Hkv, D, bq, bk)
+    (1, 64, 4, 4, 32, 32, 32),      # MHA
+    (2, 64, 4, 2, 32, 32, 32),      # GQA 2:1
+    (1, 128, 8, 1, 64, 64, 64),     # MQA
+    (1, 96, 2, 2, 32, 64, 32),      # ragged q blocks (96 = 1.5×64 → pad)
+    (2, 33, 2, 1, 16, 32, 32),      # S not block multiple
+]
+
+
+@pytest.mark.parametrize("case", FLASH_CASES,
+                         ids=lambda c: "B{}S{}H{}kv{}D{}".format(*c[:5]))
+def test_flash_matches_ref_causal(case):
+    B, S, H, Hkv, D, bq, bk = case
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, S, H, D), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, Hkv, D), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, Hkv, D), jnp.float32)
+    ref = mha_ref(q, k, v, causal=True)
+    out = ops.mha(q, k, v, causal=True, impl="interpret",
+                  block_q=bq, block_k=bk)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_flash_noncausal():
+    B, S, H, D = 1, 64, 2, 32
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, S, H, D), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, H, D), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, H, D), jnp.float32)
+    ref = mha_ref(q, k, v, causal=False)
+    out = ops.mha(q, k, v, causal=False, impl="interpret",
+                  block_q=32, block_k=32)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_flash_bf16():
+    B, S, H, D = 1, 64, 2, 32
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, S, H, D), jnp.bfloat16)
+    k = jax.random.normal(ks[1], (B, S, H, D), jnp.bfloat16)
+    v = jax.random.normal(ks[2], (B, S, H, D), jnp.bfloat16)
+    ref = mha_ref(q.astype(jnp.float32), k.astype(jnp.float32),
+                  v.astype(jnp.float32), causal=True)
+    out = ops.mha(q, k, v, causal=True, impl="interpret",
+                  block_q=32, block_k=32)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref), atol=5e-2, rtol=5e-2)
+
+
+def test_flash_long_context_streams_blocks():
+    """Many K blocks per Q block — exercises the online-softmax recurrence."""
+    B, S, H, D = 1, 512, 1, 16
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, S, H, D), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, H, D), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, H, D), jnp.float32)
+    ref = mha_ref(q, k, v, causal=True)
+    out = ops.mha(q, k, v, causal=True, impl="interpret",
+                  block_q=128, block_k=64)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# SSD scan
+# ---------------------------------------------------------------------------
+
+SSD_CASES = [
+    # (B, S, H, P, N, chunk)
+    (1, 16, 1, 4, 8, 4),
+    (2, 32, 3, 8, 16, 8),
+    (1, 64, 2, 16, 32, 16),
+    (2, 48, 2, 8, 16, 16),       # S not a power of two
+    (1, 128, 4, 64, 128, 64),    # production-like head dims
+]
+
+
+@pytest.mark.parametrize("case", SSD_CASES,
+                         ids=lambda c: "B{}S{}H{}P{}N{}q{}".format(*c))
+def test_ssd_kernel_matches_ref(case):
+    B, S, H, P, N, chunk = case
+    ks = jax.random.split(KEY, 5)
+    x = jax.random.normal(ks[0], (B, S, H, P), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.5)
+    Bc = jax.random.normal(ks[3], (B, S, N)) * 0.5
+    Cc = jax.random.normal(ks[4], (B, S, N)) * 0.5
+    ref = ssd_ref(x, dt, A, Bc, Cc)
+    out = ops.ssd(x, dt, A, Bc, Cc, chunk=chunk, impl="interpret")
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=5e-4, rtol=5e-4)
+
+
+def test_ssd_kernel_matches_model_chunked():
+    """The Pallas kernel and the model's lax implementation must agree —
+    they are the same algorithm on different substrates."""
+    B, S, H, P, N = 2, 32, 2, 8, 16
+    ks = jax.random.split(KEY, 5)
+    x = jax.random.normal(ks[0], (B, S, H, P), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.5)
+    Bc = jax.random.normal(ks[3], (B, S, N)) * 0.5
+    Cc = jax.random.normal(ks[4], (B, S, N)) * 0.5
+    via_lax, _ = ssd_chunked(x, dt, A, Bc, Cc, chunk=8)
+    via_pallas = ops.ssd(x, dt, A, Bc, Cc, chunk=8, impl="interpret")
+    np.testing.assert_allclose(np.asarray(via_pallas), np.asarray(via_lax),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_ssd_decay_extremes():
+    """Very fast decay (large dt·|A|) must not produce NaN/inf."""
+    B, S, H, P, N = 1, 16, 1, 4, 8
+    ks = jax.random.split(KEY, 4)
+    x = jax.random.normal(ks[0], (B, S, H, P), jnp.float32)
+    dt = jnp.full((B, S, H), 20.0)          # extreme step size
+    A = jnp.asarray([-8.0])
+    Bc = jax.random.normal(ks[1], (B, S, N))
+    Cc = jax.random.normal(ks[2], (B, S, N))
+    out = ops.ssd(x, dt, A, Bc, Cc, chunk=4, impl="interpret")
+    assert bool(jnp.isfinite(out).all())

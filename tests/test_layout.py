@@ -1,0 +1,122 @@
+"""Property tests for the MatrixFlow block-major layouts (core/layout.py).
+
+The paper's C1 data structure must be (a) invertible, (b) transfer-contiguous
+(each block occupies one contiguous memory region), and (c) strictly cheaper
+in DMA descriptors than the conventional row-major feed. Hypothesis sweeps
+geometry; numpy asserts exact equality (layout transforms are pure moves).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import layout as L
+
+dims = st.integers(min_value=1, max_value=300)
+blocks = st.sampled_from([8, 16, 32, 128, 256])
+
+
+@settings(max_examples=30, deadline=None)
+@given(m=dims, k=dims, bm=blocks, bk=blocks)
+def test_block_major_a_roundtrip(m, k, bm, bk):
+    a = np.arange(m * k, dtype=np.float32).reshape(m, k)
+    a_bm = L.to_block_major_a(jnp.asarray(a), bm, bk)
+    back = L.from_block_major_a(a_bm, m, k)
+    np.testing.assert_array_equal(np.asarray(back), a)
+
+
+@settings(max_examples=30, deadline=None)
+@given(k=dims, n=dims, bk=blocks, bn=blocks)
+def test_block_major_b_roundtrip(k, n, bk, bn):
+    b = np.arange(k * n, dtype=np.float32).reshape(k, n)
+    b_bm = L.to_block_major_b(jnp.asarray(b), bk, bn)
+    back = L.from_block_major_b(b_bm, k, n)
+    np.testing.assert_array_equal(np.asarray(back), b)
+
+
+@settings(max_examples=30, deadline=None)
+@given(m=dims, n=dims, bm=blocks, bn=blocks)
+def test_block_major_c_roundtrip(m, n, bm, bn):
+    c = np.arange(m * n, dtype=np.float32).reshape(m, n)
+    c_bm = L.to_block_major_c(jnp.asarray(c), bm, bn)
+    back = L.from_block_major_c(c_bm, m, n)
+    np.testing.assert_array_equal(np.asarray(back), c)
+
+
+def test_block_content_matches_slice():
+    """A_bm[i,k] must equal the (i,k) block slice of A — the block a kernel
+    tile consumes is exactly the paper's page-aligned rectangle."""
+    m, k, bm, bk = 64, 96, 16, 32
+    a = np.arange(m * k, dtype=np.int32).reshape(m, k)
+    a_bm = np.asarray(L.to_block_major_a(jnp.asarray(a), bm, bk))
+    for i in range(m // bm):
+        for kk in range(k // bk):
+            np.testing.assert_array_equal(
+                a_bm[i, kk], a[i * bm:(i + 1) * bm, kk * bk:(kk + 1) * bk])
+
+
+def test_block_major_b_horizontal_split():
+    """B_bm[j, k] == B[k-block rows, j-block cols] — Fig. 4's horizontal
+    restructuring: walking K for fixed output column j is the leading-minor
+    walk of B_bm[j], i.e. contiguous."""
+    k, n, bk, bn = 64, 48, 16, 16
+    b = np.arange(k * n, dtype=np.int32).reshape(k, n)
+    b_bm = np.asarray(L.to_block_major_b(jnp.asarray(b), bk, bn))
+    for j in range(n // bn):
+        for kk in range(k // bk):
+            np.testing.assert_array_equal(
+                b_bm[j, kk], b[kk * bk:(kk + 1) * bk, j * bn:(j + 1) * bn])
+
+
+def test_blocks_are_memory_contiguous():
+    """The last two axes of the block-major array are minor → each block is
+    one contiguous strides region (the one-DMA-descriptor property)."""
+    a = jnp.zeros((128, 256), jnp.float32)
+    a_bm = np.asarray(L.to_block_major_a(a, 32, 64))
+    blk = a_bm[1, 2]
+    assert blk.flags["C_CONTIGUOUS"]
+    # one block's bytes span exactly bm*bk*itemsize of the parent buffer
+    assert blk.nbytes == 32 * 64 * 4
+
+
+@settings(max_examples=50, deadline=None)
+@given(m=dims, n=dims, k=dims,
+       mode=st.sampled_from(["dc", "dm"]),
+       dtype=st.sampled_from(["int8", "bfloat16", "float32"]))
+def test_choose_layout_fits_and_aligns(m, n, k, mode, dtype):
+    blk = L.choose_layout(m, n, k, jnp.dtype(dtype), mode=mode)
+    itemsize = jnp.dtype(dtype).itemsize
+    assert blk.vmem_bytes(itemsize) <= 96 * 1024 * 1024
+    assert blk.bm % L.SUBLANE == 0 or blk.bm == m
+    assert blk.bn % L.MXU_DIM == 0 or blk.bn >= n
+    assert blk.bk % L.MXU_DIM == 0 or blk.bk >= k
+    g = blk.grid(m, n, k)
+    assert all(x >= 1 for x in g)
+
+
+def test_page_block_shape_is_one_page():
+    for dt in (jnp.int8, jnp.bfloat16, jnp.float32):
+        rows, lanes = L.page_block_shape(dt)
+        assert rows * lanes * jnp.dtype(dt).itemsize == L.PAGE_BYTES
+
+
+def test_descriptor_counts_favor_matrixflow():
+    """Paper Fig. 4: conventional row-major block fetch needs ≥rows
+    descriptors (one per row segment, more when rows cross pages);
+    MatrixFlow needs ceil(block_bytes/page) — strictly fewer for any
+    multi-row block."""
+    rows, cols, itemsize = 32, 128, 1            # an int8 32×128 page block
+    row_stride = 4096 * itemsize                 # K=4096 row-major parent
+    conv = L.descriptors_per_block_conventional(rows, cols, row_stride,
+                                                itemsize)
+    mf = L.descriptors_per_block_matrixflow(rows, cols, itemsize)
+    assert mf == 1                               # exactly one page
+    assert conv >= rows                          # ≥ one per row
+    assert conv / mf >= 16
+
+
+def test_dc_mode_finer_than_dm():
+    dc = L.choose_layout(2048, 2048, 2048, jnp.bfloat16, mode="dc")
+    dm = L.choose_layout(2048, 2048, 2048, jnp.bfloat16, mode="dm")
+    assert dc.bk <= dm.bk

@@ -1,0 +1,67 @@
+"""Roofline analysis: HLO collective parsing + term arithmetic."""
+import pytest
+
+from repro.roofline import analysis as RA
+
+HLO_SAMPLE = """
+HloModule test
+ENTRY main {
+  %p0 = bf16[1024,512]{1,0} parameter(0)
+  %ag = bf16[1024,8192]{1,0} all-gather(%p0), dimensions={1}
+  %ar = f32[256]{0} all-reduce(%x), to_apply=%add
+  %ar2.all-reduce.9 = f32[16,16]{1,0} all-reduce(%y), to_apply=%add
+  %rs = bf16[64,64]{1,0} reduce-scatter(%z), dimensions={0}
+  %cp = u32[10]{0} collective-permute(%w), source_target_pairs={{0,1}}
+  %a2a = (f32[8,8]{1,0}, f32[8,8]{1,0}) all-to-all(%u, %v), dimensions={0}
+  %not_a_coll = f32[4] add(%a, %b)
+}
+"""
+
+
+def test_collective_parse_categories():
+    out = RA.collective_bytes_from_hlo(HLO_SAMPLE)
+    assert out["all-gather"] == 1024 * 8192 * 2
+    assert out["all-reduce"] == 256 * 4 + 16 * 16 * 4
+    assert out["reduce-scatter"] == 64 * 64 * 2
+    assert out["collective-permute"] == 10 * 4
+    assert out["all-to-all"] == 2 * 8 * 8 * 4
+    assert out["total"] == sum(out[k] for k in
+                               ("all-gather", "all-reduce", "reduce-scatter",
+                                "all-to-all", "collective-permute"))
+    assert out["counts"]["all-reduce"] == 2
+
+
+def test_collective_parse_ignores_names_containing_op_strings():
+    """Instruction *names* like %fusion.all-reduce.clone must not count —
+    only actual ops after '='."""
+    hlo = "%x.all-reduce.clone = f32[8]{0} add(%a, %b)"
+    out = RA.collective_bytes_from_hlo(hlo)
+    assert out["total"] == 0
+
+
+def test_collective_parse_start_variant():
+    hlo = "%ag = bf16[128,128]{1,0} all-gather-start(%p)"
+    out = RA.collective_bytes_from_hlo(hlo)
+    assert out["all-gather"] == 128 * 128 * 2
+
+
+def test_roofline_terms_bottleneck():
+    hw = RA.HW()
+    cost = {"flops": hw.peak_flops, "bytes accessed": hw.hbm_bw * 2}
+    terms = RA.roofline_terms(cost, collective_bytes=hw.ici_bw * 0.5)
+    assert terms["t_compute_s"] == pytest.approx(1.0)
+    assert terms["t_memory_s"] == pytest.approx(2.0)
+    assert terms["t_collective_s"] == pytest.approx(0.5)
+    assert terms["bottleneck"] == "memory"
+    assert terms["roofline_fraction"] == pytest.approx(0.5)
+
+
+def test_roofline_useful_flops_ratio():
+    terms = RA.roofline_terms({"flops": 100.0, "bytes accessed": 1.0},
+                              0.0, model_flops=60.0)
+    assert terms["useful_flops_ratio"] == pytest.approx(0.6)
+
+
+def test_model_flops_estimate():
+    assert RA.model_flops_estimate(1e9, 1e6, "train") == 6e15
+    assert RA.model_flops_estimate(1e9, 1e6, "infer") == 2e15

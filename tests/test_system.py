@@ -1,0 +1,142 @@
+"""End-to-end system behaviour: sharded train step on a real (1-device)
+mesh, abstract-spec coherence, dry-run cell lowering on the host mesh.
+
+The 512-device production dry-run lives in launch/dryrun.py (it must own
+the process to set XLA_FLAGS); here we prove the same code path lowers and
+*runs* on the host mesh, which is what guards refactors.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.registry import SHAPES, ShapeCell, get_smoke_config
+from repro.distributed import sharding as shd
+from repro.launch import specs as SP
+from repro.launch import steps as ST
+from repro.launch.mesh import make_host_mesh
+from repro.models import transformer as T
+from repro.optim import adamw_init
+
+KEY = jax.random.PRNGKey(0)
+
+
+def host_rules(cfg):
+    return ST.make_rules(cfg, make_host_mesh())
+
+
+@pytest.mark.parametrize("arch", ["qwen2-1.5b", "dbrx-132b", "zamba2-2.7b"])
+def test_sharded_train_step_runs(arch):
+    """jit with in/out shardings + donation on a real mesh, tiny config."""
+    cfg = get_smoke_config(arch)
+    rules = host_rules(cfg)
+    with shd.use_rules(rules):
+        params, axes = T.init_model(KEY, cfg)
+        opt = adamw_init(params)
+        p_shard = ST.model_shardings(cfg, params, axes, rules)
+        o_shard = ST.opt_shardings(p_shard, rules)
+        step = ST.make_train_step_fn(cfg)
+        B, S = 2, 16
+        if cfg.n_codebooks:
+            tokens = jax.random.randint(KEY, (B, S, cfg.n_codebooks), 0,
+                                        cfg.vocab)
+        else:
+            tokens = jax.random.randint(KEY, (B, S), 0, cfg.vocab)
+        batch = {"tokens": tokens}
+        b_shard = ST.batch_shardings(batch, rules)
+        jitted = jax.jit(step, in_shardings=(p_shard, o_shard, b_shard),
+                         out_shardings=(p_shard, o_shard, None),
+                         donate_argnums=(0, 1))
+        params2, opt2, metrics = jitted(params, opt, batch)
+        assert np.isfinite(float(metrics["loss"]))
+
+
+def test_abstract_specs_match_concrete_init():
+    """abstract_params_and_axes must mirror a real init's tree + shapes."""
+    cfg = get_smoke_config("qwen3-8b")
+    abs_p, axes = SP.abstract_params_and_axes(cfg)
+    concrete, _ = T.init_model(KEY, cfg)
+    abs_small = jax.eval_shape(lambda k: T.init_model(k, cfg)[0], KEY)
+    at = jax.tree_util.tree_structure(abs_small)
+    ct = jax.tree_util.tree_structure(concrete)
+    assert at == ct
+    for a, c in zip(jax.tree_util.tree_leaves(abs_small),
+                    jax.tree_util.tree_leaves(concrete)):
+        assert a.shape == c.shape and a.dtype == c.dtype
+
+
+@pytest.mark.parametrize("shape_name", ["train_4k", "prefill_32k",
+                                        "decode_32k"])
+def test_input_specs_cover_cells(shape_name):
+    for arch in ("qwen2-1.5b", "musicgen-medium", "internvl2-76b",
+                 "mamba2-1.3b"):
+        from repro.configs.registry import get_config
+        cfg = get_config(arch)
+        cell = SHAPES[shape_name]
+        specs = SP.input_specs(cfg, cell)
+        leaves = jax.tree_util.tree_leaves(specs)
+        assert all(isinstance(l, jax.ShapeDtypeStruct) for l in leaves)
+        if cell.kind == "train":
+            toks = specs["batch"]["tokens"]
+            assert toks.shape[0] == cell.batch
+
+
+def test_dryrun_cell_lowers_on_host_mesh():
+    """The dry-run path (shardings, donation, lowering) on the 1-device
+    host mesh with a reduced config — the structural guard for dryrun.py."""
+    cfg = get_smoke_config("qwen2-1.5b")
+    mesh = make_host_mesh()
+    rules = ST.make_rules(cfg, mesh)
+    with shd.use_rules(rules):
+        params_abs = jax.eval_shape(lambda k: T.init_model(k, cfg)[0], KEY)
+        _, axes = T.init_model(KEY, cfg)
+        p_shard = ST.model_shardings(cfg, params_abs, axes, rules)
+        o_shard = ST.opt_shardings(p_shard, rules)
+        step = ST.make_train_step_fn(cfg)
+        opt_abs = jax.eval_shape(adamw_init, params_abs)
+        batch = {"tokens": jax.ShapeDtypeStruct((4, 16), jnp.int32)}
+        b_shard = ST.batch_shardings(batch, rules)
+        lowered = jax.jit(step, in_shardings=(p_shard, o_shard, b_shard),
+                          out_shardings=(p_shard, o_shard, None),
+                          donate_argnums=(0, 1)).lower(params_abs, opt_abs,
+                                                       batch)
+        compiled = lowered.compile()
+        assert compiled.cost_analysis() is not None
+
+
+def test_decode_cell_lowers_on_host_mesh():
+    cfg = get_smoke_config("zamba2-2.7b")
+    mesh = make_host_mesh()
+    cell = ShapeCell("decode_small", "decode", 64, 4)
+    rules = ST.make_rules(cfg, mesh, cell)
+    from repro.serving.engine import make_decode_step
+    with shd.use_rules(rules):
+        params_abs = jax.eval_shape(lambda k: T.init_model(k, cfg)[0], KEY)
+        _, axes = T.init_model(KEY, cfg)
+        p_shard = ST.model_shardings(cfg, params_abs, axes, rules)
+        caches = SP.cache_specs(cfg, cell.batch, cell.seq)
+        c_shard = ST.cache_shardings(caches, rules)
+        toks = jax.ShapeDtypeStruct((cell.batch, 1), jnp.int32)
+        pos = jax.ShapeDtypeStruct((cell.batch, 1), jnp.int32)
+        tok_shard = ST.batch_shardings(toks, rules)
+        pos_shard = ST.batch_shardings(pos, rules)
+        lowered = jax.jit(make_decode_step(cfg),
+                          in_shardings=(p_shard, tok_shard, pos_shard,
+                                        c_shard),
+                          out_shardings=(None, c_shard),
+                          donate_argnums=(3,)).lower(params_abs, toks, pos,
+                                                     caches)
+        assert lowered.compile() is not None
+
+
+def test_remat_toggle_changes_nothing_numerically():
+    cfg = get_smoke_config("qwen2-1.5b", n_layers=2)
+    params, _ = T.init_model(KEY, cfg)
+    batch = {"tokens": jax.random.randint(KEY, (2, 16), 0, cfg.vocab)}
+    l1, _, _ = T.forward(params, cfg, batch, remat=True)
+    l2, _, _ = T.forward(params, cfg, batch, remat=False)
+    np.testing.assert_allclose(np.asarray(l1, np.float32),
+                               np.asarray(l2, np.float32), atol=1e-5)
