@@ -38,11 +38,11 @@ def run():
     batch = {"tokens": jnp.zeros((2, 64), jnp.int32)}
 
     def fwd_xla():
-        with api.gemm_backend("xla"):
+        with api.use_policy(api.GemmPolicy(backend="xla")):
             return T.forward(params, cfg, batch)[0]
 
     def fwd_mf():
-        with api.gemm_backend("blockflow"):
+        with api.use_policy(api.GemmPolicy(backend="blockflow")):
             return T.forward(params, cfg, batch)[0]
 
     t_x = time_fn(fwd_xla, warmup=1, iters=2)

@@ -3,7 +3,9 @@
   1. a GEMM through the paper's block-major layout + Algorithm 1,
   2. the same GEMM through the Pallas TPU kernel (interpret mode on CPU),
   3. the analytic system model reproducing a paper headline number,
-  4. a tiny transformer forward with every GEMM on the MatrixFlow path.
+  4. the ExecutionPlan API: GemmPolicy, plan resolution, resident
+     PackedWeights, and a tiny transformer forward with every GEMM on
+     the MatrixFlow path.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -45,15 +47,33 @@ def main():
     print(f"BERT-large speedup vs 1-core CPU: model {table['mf_dc']:.0f}x, "
           f"paper {PAPER_TABLE3['bert-large']['mf_dc']}x")
 
-    # -- 4. a model with every GEMM on the MatrixFlow path ------------------
+    # -- 4. the ExecutionPlan API ------------------------------------------
+    # A GemmPolicy is a frozen description of HOW GEMMs execute; plan()
+    # resolves it per shape (memoized), consulting the sysmodel for DC/DM.
+    policy = api.GemmPolicy(backend="pallas_interpret", mode="auto")
+    pln = api.plan(256, 384, 512, jnp.float32, policy)
+    print(f"plan(256,384,512): backend={pln.backend} mode={pln.mode} "
+          f"layout={pln.layout}  (cache: {api.plan_cache_info()})")
+
+    # Weights pack block-major ONCE (the paper's offline arrangement);
+    # linear consumes the resident blocks — no per-call re-layout.
+    w_packed = api.pack_weight(b, policy)
+    y = api.linear(a, w_packed, policy=policy)
+    y_row = api.linear(a, b, policy=policy)
+    print(f"resident PackedWeight linear: bitwise equal to row-major: "
+          f"{bool(jnp.all(y == y_row))}")
+
+    # A model with every GEMM on the MatrixFlow path, weights resident.
     from repro.configs.registry import get_smoke_config
     from repro.models import transformer as T
     cfg = get_smoke_config("smollm-135m", n_layers=2)
     params, _ = T.init_model(jax.random.PRNGKey(0), cfg)
     batch = {"tokens": jnp.zeros((1, 16), jnp.int32)}
-    with api.gemm_backend("blockflow"):
+    mf_policy = api.GemmPolicy(backend="blockflow")
+    packed_params = api.pack_model_weights(params, mf_policy)
+    with api.use_policy(mf_policy):
         t0 = time.perf_counter()
-        logits, _, _ = T.forward(params, cfg, batch)
+        logits, _, _ = T.forward(packed_params, cfg, batch)
         dt = time.perf_counter() - t0
     print(f"smollm (reduced) forward on the MatrixFlow path: "
           f"logits {logits.shape} in {dt * 1e3:.0f} ms")

@@ -1,99 +1,221 @@
-"""Public MatrixFlow API: backend policy + matmul/linear entry points.
+"""Public MatrixFlow API: typed GEMM policies over an extensible registry.
 
-Every GEMM in the model substrate routes through :func:`matmul`, which
-dispatches on the active backend:
+Every GEMM in the model substrate routes through :func:`matmul` /
+:func:`linear`. *How* it executes is described by a frozen
+:class:`~repro.core.plan.GemmPolicy` — backend, DC/DM access mode, layout
+override, accumulator dtype, VMEM budget — resolved per shape into a
+memoized :class:`~repro.core.plan.ExecutionPlan` (see repro/core/plan.py).
 
-  "xla"               jnp.dot — used for distributed dry-run lowering and CPU
-                      training examples (XLA already tiles for the MXU; the
-                      MatrixFlow schedule is a kernel-level concern).
+Built-in backends (registered here; add your own via
+:func:`~repro.core.plan.register_backend`):
+
+  "xla"               jnp.dot — distributed dry-run lowering and CPU training
+                      (XLA already tiles for the MXU; the MatrixFlow schedule
+                      is a kernel-level concern). Consumes batched
+                      contractions natively.
   "pallas"            the MatrixFlow Pallas kernel (TPU target).
   "pallas_interpret"  same kernel, interpret mode (CPU validation).
   "blockflow"         the faithful Algorithm-1 lax rendering (paper baseline).
 
-The default is "pallas" on TPU and "xla" elsewhere, matching how the
-framework would deploy. Tests/benchmarks use `gemm_backend(...)` to pin.
+The default policy is ``GemmPolicy()`` — backend "auto" (pallas on TPU, xla
+elsewhere), access mode "auto" (the sysmodel's analytic DC-vs-DM choice).
+Pin a policy for a region with :func:`use_policy`::
+
+    with api.use_policy(GemmPolicy(backend="blockflow", mode="dc")):
+        logits = forward(params, cfg, batch)
+
+Weights that persist across calls should be packed block-major once
+(:func:`~repro.core.plan.pack_weight` / ``pack_model_weights``) — ``linear``
+and ``matmul`` consume :class:`~repro.core.plan.PackedWeight` directly,
+realizing the paper's Fig. 5 reuse (no per-call re-layout).
+
+Migration from the old stringly-typed API (kept as deprecation shims for one
+release): ``gemm_backend("xla")`` → ``use_policy(GemmPolicy(backend="xla"))``;
+``matmul(..., mode="dc")`` → ``GemmPolicy(mode="dc")``. See docs/api.md.
 """
 from __future__ import annotations
 
 import contextlib
+import dataclasses
 import threading
-from typing import Optional
+import warnings
+from typing import Optional, Union
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import blockflow, layout as L
+from repro.core import blockflow
+from repro.core import layout as L
+from repro.core import plan as P
+from repro.core.plan import (  # re-exported: the public policy surface
+    GemmPolicy, ExecutionPlan, PackedWeight, pack_weight, pack_model_weights,
+    plan, plan_cache_info, plan_cache_clear, register_backend,
+    unregister_backend, registered_backends,
+)
+
+__all__ = [
+    "GemmPolicy", "ExecutionPlan", "PackedWeight", "pack_weight",
+    "pack_model_weights", "plan", "plan_cache_info", "plan_cache_clear",
+    "register_backend", "unregister_backend", "registered_backends",
+    "matmul", "linear", "use_policy", "current_policy", "resolved_backend",
+    "prefers_einsum", "gemm_backend", "current_backend",
+]
 
 _state = threading.local()
 
 
-def _default_backend() -> str:
-    try:
-        plat = jax.default_backend()
-    except Exception:  # pragma: no cover
-        plat = "cpu"
-    return "pallas" if plat == "tpu" else "xla"
-
-
-def current_backend() -> str:
-    return getattr(_state, "backend", None) or _default_backend()
+def current_policy() -> GemmPolicy:
+    """The active GemmPolicy (innermost use_policy, else the default)."""
+    stack = getattr(_state, "policies", None)
+    return stack[-1] if stack else GemmPolicy()
 
 
 @contextlib.contextmanager
-def gemm_backend(name: str):
-    """Context manager pinning the GEMM backend ("xla"|"pallas"|"pallas_interpret"|"blockflow")."""
-    prev = getattr(_state, "backend", None)
-    _state.backend = name
+def use_policy(policy: GemmPolicy):
+    """Pin the active GEMM policy for the enclosed region (thread-local)."""
+    stack = getattr(_state, "policies", None)
+    if stack is None:
+        stack = _state.policies = []
+    stack.append(policy)
     try:
-        yield
+        yield policy
     finally:
-        _state.backend = prev
+        stack.pop()
 
 
-def matmul(a: jax.Array, b: jax.Array, *, mode: str = "dm",
-           out_dtype: Optional[jnp.dtype] = None) -> jax.Array:
-    """C = A @ B through the active MatrixFlow backend.
+def resolved_backend(policy: Optional[GemmPolicy] = None) -> str:
+    """Registry name the active (or given) policy resolves to."""
+    return (policy or current_policy()).resolved_backend()
 
-    a: (..., M, K); b: (K, N) or (..., K, N). Output dtype defaults to the
-    promoted input dtype (not the accumulator) to keep model code natural.
+
+def prefers_einsum(policy: Optional[GemmPolicy] = None) -> bool:
+    """True when the resolved backend consumes batched contractions natively
+    (so model code should use einsum instead of the batched 2-D kernel)."""
+    return P.get_backend_spec(resolved_backend(policy)).batched
+
+
+# ---------------------------------------------------------------------------
+# Built-in backends
+# ---------------------------------------------------------------------------
+
+def _xla_gemm(a, b, pln: ExecutionPlan, out_dtype):
+    if isinstance(b, PackedWeight):
+        b = b.unpack()
+    return jnp.matmul(a, b, preferred_element_type=pln.acc).astype(out_dtype)
+
+
+def _blockflow_gemm(a2, b, pln: ExecutionPlan, out_dtype):
+    if isinstance(b, PackedWeight):
+        b = b.unpack()
+    return blockflow.block_matmul(a2, b, blk=pln.layout, out_dtype=out_dtype,
+                                  acc_dtype=pln.acc)
+
+
+def _make_pallas_gemm(interpret: bool):
+    def pallas_gemm(a2, b, pln: ExecutionPlan, out_dtype):
+        from repro.kernels import matrixflow_gemm as mf  # lazy: pallas import
+        if isinstance(b, PackedWeight):
+            blk = P.layout_for_packed(a2.shape[0], b, a2.dtype, pln.policy)
+            a_bm = L.to_block_major_a(a2, blk.bm, blk.bk)
+            c_bm = mf.matrixflow_gemm_block_major(
+                a_bm, b.data, blk=blk, out_dtype=out_dtype,
+                interpret=interpret, acc_dtype=pln.acc)
+            return L.from_block_major_c(c_bm, a2.shape[0], b.n)
+        return mf.matrixflow_gemm(a2, b, blk=pln.layout, out_dtype=out_dtype,
+                                  interpret=interpret, acc_dtype=pln.acc)
+    return pallas_gemm
+
+
+register_backend("xla", _xla_gemm, batched=True, needs_layout=False)
+register_backend("blockflow", _blockflow_gemm)
+register_backend("pallas", _make_pallas_gemm(interpret=False))
+register_backend("pallas_interpret", _make_pallas_gemm(interpret=True))
+
+
+# ---------------------------------------------------------------------------
+# Entry points
+# ---------------------------------------------------------------------------
+
+def matmul(a: jax.Array, b: Union[jax.Array, PackedWeight], *,
+           policy: Optional[GemmPolicy] = None,
+           out_dtype: Optional[jnp.dtype] = None,
+           mode: Optional[str] = None) -> jax.Array:
+    """C = A @ B through the plan the active policy resolves to.
+
+    a: (..., M, K); b: (K, N), (..., K, N), or a PackedWeight (resident
+    block-major). Output dtype defaults to the promoted input dtype (not the
+    accumulator) to keep model code natural.
     """
-    backend = current_backend()
-    out_dtype = out_dtype or jnp.promote_types(a.dtype, b.dtype)
-    if backend == "xla":
-        acc = blockflow.acc_dtype_for(a.dtype)
-        return jnp.matmul(a, b, preferred_element_type=acc).astype(out_dtype)
+    pol = policy if policy is not None else current_policy()
+    if mode is not None:  # deprecated keyword, one-release shim
+        warnings.warn("matmul(mode=...) is deprecated; use "
+                      "GemmPolicy(mode=...)", DeprecationWarning,
+                      stacklevel=2)
+        pol = dataclasses.replace(pol, mode=mode)
+    packed = isinstance(b, PackedWeight)
+    out_dtype = out_dtype or jnp.promote_types(
+        a.dtype, b.data.dtype if packed else b.dtype)
+    spec = P.get_backend_spec(pol.resolved_backend())
 
-    # Collapse leading dims to a single M for the 2-D kernels.
-    if b.ndim != 2:
+    if spec.batched and not packed:
+        # native batched contraction (jnp broadcasting semantics)
+        M = int(a.size // a.shape[-1]) if a.ndim > 1 else 1
+        pln = plan(M, b.shape[-1], a.shape[-1], a.dtype, pol)
+        return spec.fn(a, b, pln, out_dtype)
+
+    if not packed and b.ndim != 2:
         # batched rhs: vmap over shared leading dims
         assert a.shape[:-2] == b.shape[:-2], (a.shape, b.shape)
         lead = a.shape[:-2]
         a2 = a.reshape((-1,) + a.shape[-2:])
         b2 = b.reshape((-1,) + b.shape[-2:])
-        out = jax.vmap(lambda x, y: matmul(x, y, mode=mode, out_dtype=out_dtype))(a2, b2)
+        out = jax.vmap(lambda x, y: matmul(x, y, policy=pol,
+                                           out_dtype=out_dtype))(a2, b2)
         return out.reshape(lead + out.shape[-2:])
+
+    # Collapse leading dims to a single M for the 2-D kernels.
     lead = a.shape[:-1]
     a2 = a.reshape(-1, a.shape[-1])
     M, K = a2.shape
-    N = b.shape[-1]
-
-    if backend == "blockflow":
-        c = blockflow.block_matmul(a2, b, out_dtype=out_dtype)
-    elif backend in ("pallas", "pallas_interpret"):
-        from repro.kernels import matrixflow_gemm as mf  # lazy: pallas import
-        interpret = backend == "pallas_interpret"
-        blk = L.choose_layout(M, N, K, a2.dtype, mode=mode)
-        c = mf.matrixflow_gemm(a2, b, blk=blk, out_dtype=out_dtype,
-                               interpret=interpret)
-    else:
-        raise ValueError(f"unknown GEMM backend {backend!r}")
+    N = b.n if packed else b.shape[-1]
+    pln = plan(M, N, K, a2.dtype, pol)
+    c = spec.fn(a2, b, pln, out_dtype)
     return c.reshape(lead + (N,)).astype(out_dtype)
 
 
-def linear(x: jax.Array, w: jax.Array, bias: Optional[jax.Array] = None,
-           *, mode: str = "dm") -> jax.Array:
-    """y = x @ w (+ bias): the layer-level entry point used by models."""
-    y = matmul(x, w, mode=mode)
+def linear(x: jax.Array, w: Union[jax.Array, PackedWeight],
+           bias: Optional[jax.Array] = None, *,
+           policy: Optional[GemmPolicy] = None,
+           mode: Optional[str] = None) -> jax.Array:
+    """y = x @ w (+ bias): the layer-level entry point used by models.
+
+    ``w`` may be a PackedWeight — laid out block-major once at model build —
+    in which case block-major backends consume the blocks directly.
+    """
+    y = matmul(x, w, policy=policy, mode=mode)
     if bias is not None:
         y = y + bias
     return y
+
+
+# ---------------------------------------------------------------------------
+# Deprecation shims (one release): the old stringly-typed surface
+# ---------------------------------------------------------------------------
+
+def current_backend() -> str:
+    """Deprecated: use current_policy() / resolved_backend()."""
+    return resolved_backend()
+
+
+@contextlib.contextmanager
+def gemm_backend(name: str):
+    """Deprecated context manager: pin by backend name.
+
+    Use ``use_policy(GemmPolicy(backend=name))`` instead (docs/api.md has
+    the migration table).
+    """
+    warnings.warn("gemm_backend(name) is deprecated; use "
+                  "use_policy(GemmPolicy(backend=name))", DeprecationWarning,
+                  stacklevel=3)
+    with use_policy(GemmPolicy(backend=name)) as pol:
+        yield pol

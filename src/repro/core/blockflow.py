@@ -43,19 +43,21 @@ def block_matmul(
     *,
     blk: Optional[L.BlockLayout] = None,
     out_dtype: Optional[jnp.dtype] = None,
+    acc_dtype: Optional[jnp.dtype] = None,
 ) -> jax.Array:
     """C = A @ B via the paper's Algorithm 1 over block-major operands.
 
     a: (M, K), b: (K, N) in conventional row-major; the function performs the
     MatrixFlow re-layout (the paper's data-structure step), then the blocked
-    dataflow with lax.fori_loop as the K-stream.
+    dataflow with lax.fori_loop as the K-stream. ``acc_dtype`` overrides the
+    paper's MAC accumulator policy (a GemmPolicy knob).
     """
     M, K = a.shape
     K2, N = b.shape
     assert K == K2, (a.shape, b.shape)
     if blk is None:
         blk = L.choose_layout(M, N, K, a.dtype)
-    acc_dtype = acc_dtype_for(a.dtype)
+    acc_dtype = jnp.dtype(acc_dtype or acc_dtype_for(a.dtype))
     out_dtype = out_dtype or acc_dtype
 
     a_bm = L.to_block_major_a(a, blk.bm, blk.bk)      # (nbm, nbk, bm, bk)

@@ -103,8 +103,8 @@ def choose_layout(
     of the paper's 64 B cache-line-granularity DC mode.
     """
     itemsize = jnp.dtype(dtype).itemsize
-    bm = min(round_up(M, SUBLANE), 512 if M >= 512 else round_up(M, SUBLANE))
-    bm = min(bm, 512)
+    # Sublane-align M, capped at 512 (the max profitable row-panel height).
+    bm = min(round_up(M, SUBLANE), 512)
     bn = min(round_up(N, MXU_DIM), 512)
     if mode == "dc":
         bk = min(round_up(K, MXU_DIM), 256)

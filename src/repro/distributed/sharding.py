@@ -79,7 +79,9 @@ class ShardingRules:
         if isinstance(axes, str):
             return axes if axes in names else None
         kept = tuple(a for a in axes if a in names)
-        return kept if kept else None
+        if not kept:
+            return None
+        return kept[0] if len(kept) == 1 else kept
 
     def spec(self, logical: Sequence[Optional[str]],
              shape: Optional[Sequence[int]] = None) -> P:

@@ -62,7 +62,7 @@ def _kernel(a_ref, b_ref, o_ref, acc_ref, *, nbk: int, acc_dtype):
 
 @functools.partial(
     jax.jit,
-    static_argnames=("blk", "out_dtype", "interpret"),
+    static_argnames=("blk", "out_dtype", "interpret", "acc_dtype"),
 )
 def matrixflow_gemm_block_major(
     a_bm: jax.Array,
@@ -71,17 +71,20 @@ def matrixflow_gemm_block_major(
     blk: L.BlockLayout,
     out_dtype: Optional[jnp.dtype] = None,
     interpret: bool = False,
+    acc_dtype: Optional[jnp.dtype] = None,
 ) -> jax.Array:
     """C_bm = A_bm @ B_bm over MatrixFlow block-major operands.
 
     a_bm: (nbm, nbk, bm, bk); b_bm: (nbn, nbk, bk, bn) →
-    returns C block-major (nbm, nbn, bm, bn).
+    returns C block-major (nbm, nbn, bm, bn). ``acc_dtype`` overrides the
+    default accumulator policy (int → int32, float → fp32) — a GemmPolicy
+    knob at the ExecutionPlan layer.
     """
     nbm, nbk, bm, bk = a_bm.shape
     nbn, nbk2, bk2, bn = b_bm.shape
     assert (nbk, bk) == (nbk2, bk2), (a_bm.shape, b_bm.shape)
     assert (bm, bn, bk) == (blk.bm, blk.bn, blk.bk)
-    acc_dtype = _acc_dtype(a_bm.dtype)
+    acc_dtype = jnp.dtype(acc_dtype or _acc_dtype(a_bm.dtype))
     out_dtype = jnp.dtype(out_dtype or acc_dtype)
 
     grid = (nbm, nbn, nbk)
@@ -118,11 +121,13 @@ def matrixflow_gemm(
     mode: str = "dm",
     out_dtype: Optional[jnp.dtype] = None,
     interpret: bool = False,
+    acc_dtype: Optional[jnp.dtype] = None,
 ) -> jax.Array:
     """C = A @ B: re-layout (the paper's data-structure step) + blocked kernel.
 
-    a: (M, K), b: (K, N) row-major. For persistent weights prefer storing
-    block-major once and calling matrixflow_gemm_block_major directly.
+    a: (M, K), b: (K, N) row-major. For persistent weights prefer packing
+    block-major once (core/plan.py's PackedWeight) — api.linear then calls
+    matrixflow_gemm_block_major directly, skipping the per-call re-layout.
     """
     M, K = a.shape
     K2, N = b.shape
@@ -132,5 +137,6 @@ def matrixflow_gemm(
     a_bm = L.to_block_major_a(a, blk.bm, blk.bk)
     b_bm = L.to_block_major_b(b, blk.bk, blk.bn)
     c_bm = matrixflow_gemm_block_major(
-        a_bm, b_bm, blk=blk, out_dtype=out_dtype, interpret=interpret)
+        a_bm, b_bm, blk=blk, out_dtype=out_dtype, interpret=interpret,
+        acc_dtype=acc_dtype)
     return L.from_block_major_c(c_bm, M, N)

@@ -108,6 +108,8 @@ def _lower_step(cfg, shape, mesh, rules_overrides=None):
 def _cost_vector(compiled):
     """(flops, bytes_accessed, collective_bytes) per partition."""
     cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):   # newer jax: one dict per partition
+        cost = cost[0] if cost else {}
     coll = RA.collective_bytes_from_hlo(compiled.as_text())
     return (float(cost.get("flops", 0.0)),
             float(cost.get("bytes accessed", 0.0)),

@@ -13,6 +13,7 @@ import jax
 import numpy as np
 
 from repro.configs.registry import get_config, get_smoke_config
+from repro.core.plan import GemmPolicy
 from repro.models import transformer as T
 from repro.serving.engine import ServeConfig, ServingEngine
 
@@ -28,15 +29,26 @@ def main(argv=None):
     ap.add_argument("--gen-len", type=int, default=16)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--gemm-backend", default="auto",
+                    help="GEMM backend (auto|xla|pallas|pallas_interpret|"
+                         "blockflow|<registered>)")
+    ap.add_argument("--gemm-mode", default="auto",
+                    choices=["auto", "dc", "dm"],
+                    help="paper access mode; auto = per-shape sysmodel pick")
+    ap.add_argument("--pack-weights", action="store_true",
+                    help="lay weights out block-major once (resident)")
     args = ap.parse_args(argv)
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    policy = GemmPolicy(backend=args.gemm_backend, mode=args.gemm_mode)
     print(f"[serve] arch={cfg.name} slots={args.batch_slots} "
-          f"max_len={args.max_len}")
+          f"max_len={args.max_len} gemm={policy.resolved_backend()}/"
+          f"{policy.mode} packed={args.pack_weights}")
     params, _ = T.init_model(jax.random.PRNGKey(args.seed), cfg)
     engine = ServingEngine(cfg, params, ServeConfig(
         batch_slots=args.batch_slots, max_len=args.max_len,
-        temperature=args.temperature))
+        temperature=args.temperature, gemm=policy,
+        pack_weights=args.pack_weights))
 
     rng = np.random.default_rng(args.seed)
     # batched generate path (one full batch)
@@ -51,8 +63,11 @@ def main(argv=None):
 
     # continuous-batching path
     engine2 = ServingEngine(cfg, params, ServeConfig(
-        batch_slots=args.batch_slots, max_len=args.max_len))
-    pending = [rng.integers(0, cfg.vocab, rng.integers(4, args.prompt_len))
+        batch_slots=args.batch_slots, max_len=args.max_len, gemm=policy,
+        pack_weights=args.pack_weights))
+    lo = max(1, min(4, args.prompt_len))
+    pending = [rng.integers(0, cfg.vocab,
+                            rng.integers(lo, args.prompt_len + 1))
                .tolist() for _ in range(args.n_requests)]
     done_tokens = 0
     t0 = time.perf_counter()

@@ -22,6 +22,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.registry import get_config, get_smoke_config
+from repro.core import api
+from repro.core.plan import GemmPolicy
 from repro.data.pipeline import DataConfig, TokenPipeline
 from repro.distributed import sharding as shd
 from repro.launch import steps as ST
@@ -49,19 +51,26 @@ def main(argv=None):
     ap.add_argument("--compress-grads", action="store_true")
     ap.add_argument("--production-mesh", action="store_true",
                     help="16x16 mesh (requires 256 devices)")
+    ap.add_argument("--gemm-backend", default="auto",
+                    help="GEMM backend (auto|xla|pallas|pallas_interpret|"
+                         "blockflow|<registered>)")
+    ap.add_argument("--gemm-mode", default="auto",
+                    choices=["auto", "dc", "dm"],
+                    help="paper access mode; auto = per-shape sysmodel pick")
     args = ap.parse_args(argv)
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     mesh = (make_production_mesh() if args.production_mesh
             else make_host_mesh())
     rules = ST.make_rules(cfg, mesh)
+    policy = GemmPolicy(backend=args.gemm_backend, mode=args.gemm_mode)
     print(f"[train] arch={cfg.name} mesh={dict(zip(mesh.axis_names, mesh.devices.shape))} "
-          f"steps={args.steps}")
+          f"steps={args.steps} gemm={policy.resolved_backend()}/{policy.mode}")
 
     tc = TrainConfig(steps=args.steps, log_every=args.log_every,
                      ckpt_every=args.ckpt_every, ckpt_dir=args.ckpt_dir,
                      seed=args.seed, base_lr=args.lr, warmup=args.warmup,
-                     compress_grads=args.compress_grads)
+                     compress_grads=args.compress_grads, gemm=policy)
     opt_cfg = AdamWConfig(lr=args.lr, compress_grads=args.compress_grads)
     dc = DataConfig(seq_len=args.seq_len, global_batch=args.global_batch,
                     vocab=cfg.vocab, seed=args.seed,
@@ -69,7 +78,7 @@ def main(argv=None):
     data = TokenPipeline(dc)
     ckpt = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
 
-    with shd.use_rules(rules):
+    with shd.use_rules(rules), api.use_policy(policy):
         params, axes = T.init_model(jax.random.PRNGKey(args.seed), cfg)
         opt_state = adamw_init(params)
         p_shard = ST.model_shardings(cfg, params, axes, rules)

@@ -1,9 +1,12 @@
 """Transformer layer zoo: norms, RoPE, GQA/MQA/MLA attention, MLP, MoE.
 
-Every projection GEMM routes through repro.core.api (the MatrixFlow path);
-attention score/value contractions go through einsum under the "xla"
-backend and through the batched MatrixFlow kernel otherwise — mirroring the
-paper's split where the accelerator takes all GEMMs and the host keeps
+Every projection GEMM routes through repro.core.api under the active
+GemmPolicy; projection weights may be PackedWeights (resident block-major,
+packed once at model build — api.pack_model_weights), realizing the paper's
+Fig. 5 reuse. Attention score/value contractions go through einsum when the
+resolved backend consumes batched contractions natively (api.prefers_einsum,
+e.g. XLA) and through the batched MatrixFlow kernel otherwise — mirroring
+the paper's split where the accelerator takes all GEMMs and the host keeps
 softmax/norm/transpose (§4.4).
 """
 from __future__ import annotations
@@ -76,7 +79,7 @@ def _attn_core(q, k, v, *, q_positions, kv_valid_len, causal, scale,
     T, Hkv = k.shape[1], k.shape[2]
     rep = H // Hkv
     qg = q.reshape(B, Sq, Hkv, rep, Dk)
-    if api.current_backend() == "xla":
+    if api.prefers_einsum():
         logits = jnp.einsum("bqgrd,bkgd->bgrqk", qg, k,
                             preferred_element_type=jnp.float32)
     else:  # MatrixFlow path: fold (B,Hkv,rep) into the vmapped batch
@@ -96,7 +99,7 @@ def _attn_core(q, k, v, *, q_positions, kv_valid_len, causal, scale,
     logits = jnp.where(valid[:, None, None, :, :] if valid.ndim == 3
                        else valid, logits, -1e30)
     probs = jax.nn.softmax(logits, axis=-1)                   # host-side op
-    if api.current_backend() == "xla":
+    if api.prefers_einsum():
         out = jnp.einsum("bgrqk,bkgd->bqgrd", probs.astype(v.dtype), v)
     else:
         pm = probs.reshape(B * Hkv * rep, Sq, T).astype(v.dtype)

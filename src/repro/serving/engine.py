@@ -5,9 +5,15 @@
 simple continuous-batching front end: a slot-based scheduler that admits
 queued requests into free batch slots between decode iterations (the
 vLLM-style pattern, reduced to its core).
+
+GEMM execution is governed by a GemmPolicy (ServeConfig.gemm); with
+``pack_weights=True`` every projection weight is laid out block-major once
+at engine construction (api.pack_model_weights) and stays resident — the
+paper's Fig. 5 deployment shape, where serving never re-lays-out a weight.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 from typing import Dict, List, Optional, Tuple
 
@@ -15,6 +21,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import api
+from repro.core.plan import GemmPolicy
 from repro.models import transformer as T
 from repro.models.config import ModelConfig
 
@@ -25,24 +33,33 @@ class ServeConfig:
     max_len: int = 1024
     temperature: float = 0.0     # 0 → greedy
     cache_dtype: str = "bfloat16"
+    gemm: Optional[GemmPolicy] = None   # None → the ambient/default policy
+    pack_weights: bool = False          # resident block-major weights
 
 
-def make_prefill_step(cfg: ModelConfig):
+def _policy_scope(policy: Optional[GemmPolicy]):
+    return api.use_policy(policy) if policy is not None \
+        else contextlib.nullcontext()
+
+
+def make_prefill_step(cfg: ModelConfig, policy: Optional[GemmPolicy] = None):
     """(params, batch, caches) → (last_logits, caches). Processes the full
     prompt with causal self-attention while writing the caches."""
     def prefill_step(params, batch, caches):
-        logits, caches, _ = T.forward(params, cfg, batch, caches=caches,
-                                      remat=False)
+        with _policy_scope(policy):
+            logits, caches, _ = T.forward(params, cfg, batch, caches=caches,
+                                          remat=False)
         return logits[:, -1], caches
     return prefill_step
 
 
-def make_decode_step(cfg: ModelConfig):
+def make_decode_step(cfg: ModelConfig, policy: Optional[GemmPolicy] = None):
     """(params, tokens(B,1), positions(B,1), caches) → (logits, caches)."""
     def decode_step(params, tokens, positions, caches):
         batch = {"tokens": tokens, "positions": positions}
-        logits, caches, _ = T.forward(params, cfg, batch, caches=caches,
-                                      remat=False)
+        with _policy_scope(policy):
+            logits, caches, _ = T.forward(params, cfg, batch, caches=caches,
+                                          remat=False)
         return logits[:, -1], caches
     return decode_step
 
@@ -51,9 +68,11 @@ class ServingEngine:
     """Greedy/temperature sampling with slot-based continuous batching."""
 
     def __init__(self, cfg: ModelConfig, params, sc: ServeConfig):
+        if sc.pack_weights:
+            params = api.pack_model_weights(params, sc.gemm)
         self.cfg, self.params, self.sc = cfg, params, sc
-        self.decode = jax.jit(make_decode_step(cfg))
-        self.prefill = jax.jit(make_prefill_step(cfg))
+        self.decode = jax.jit(make_decode_step(cfg, sc.gemm))
+        self.prefill = jax.jit(make_prefill_step(cfg, sc.gemm))
         self.caches = T.init_caches(cfg, sc.batch_slots, sc.max_len,
                                     jnp.dtype(sc.cache_dtype))
         self.slot_pos = np.zeros(sc.batch_slots, np.int32)

@@ -3,6 +3,7 @@ preemption handling, straggler watchdog, elastic restart support.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import signal
 import time
@@ -12,6 +13,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import api
+from repro.core.plan import GemmPolicy
 from repro.data.pipeline import DataConfig, TokenPipeline
 from repro.distributed import sharding as shd
 from repro.models import transformer as T
@@ -32,17 +35,22 @@ class TrainConfig:
     straggler_factor: float = 3.0   # step slower than 3× EMA → flagged
     aux_weight: float = 0.01
     compress_grads: bool = False
+    gemm: Optional[GemmPolicy] = None   # None → the ambient/default policy
 
 
 def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig, tc: TrainConfig):
+    policy_scope = ((lambda: api.use_policy(tc.gemm)) if tc.gemm is not None
+                    else contextlib.nullcontext)
+
     def train_step(params, opt_state, batch):
         def loss_fn(p):
             loss, metrics = T.lm_loss(p, cfg, batch,
                                       aux_weight=tc.aux_weight)
             return loss, metrics
 
-        (loss, metrics), grads = jax.value_and_grad(
-            loss_fn, has_aux=True)(params)
+        with policy_scope():
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params)
         lr = cosine_schedule(opt_state["step"], base_lr=tc.base_lr,
                              warmup=tc.warmup, total=tc.steps)
         params, opt_state, opt_metrics, _ = adamw_update(

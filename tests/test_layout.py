@@ -9,7 +9,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypcompat import given, settings, st
 
 from repro.core import layout as L
 
@@ -120,3 +120,18 @@ def test_dc_mode_finer_than_dm():
     dc = L.choose_layout(2048, 2048, 2048, jnp.bfloat16, mode="dc")
     dm = L.choose_layout(2048, 2048, 2048, jnp.bfloat16, mode="dm")
     assert dc.bk <= dm.bk
+
+
+@pytest.mark.parametrize("m", [1, 3, 7, 9, 127, 129, 511, 513, 515, 1021,
+                               4097])
+def test_choose_layout_bm_cap_odd_m(m):
+    """Regression: the old bm selection
+    ``min(round_up(M, SUBLANE), 512 if M >= 512 else round_up(M, SUBLANE))``
+    collapsed to a no-op branch. bm must be the sublane-aligned M, capped at
+    512, for every M — including odd / just-past-the-cap sizes."""
+    blk = L.choose_layout(m, 256, 256, jnp.float32)
+    assert blk.bm == min(L.round_up(m, L.SUBLANE), 512)
+    assert blk.bm % L.SUBLANE == 0
+    assert blk.bm <= 512
+    # the grid still covers all M rows
+    assert blk.grid(m, 256, 256)[0] * blk.bm >= m

@@ -46,3 +46,22 @@ def test_continuous_batching_slots():
     assert set(out) == {0, 1}               # both slots decoded one token
     out2 = eng.step()
     assert set(out2) == {0, 1}
+
+
+def test_packed_resident_weights_match_row_major():
+    """ServeConfig(pack_weights=True) lays every projection weight out
+    block-major once at engine build (the paper's Fig. 5 deployment shape);
+    generation must match the row-major engine exactly under the same
+    policy."""
+    from repro.core.plan import GemmPolicy, PackedWeight
+    cfg = get_smoke_config("smollm-135m", n_layers=2, vocab=64)
+    params, _ = T.init_model(jax.random.PRNGKey(0), cfg)
+    pol = GemmPolicy(backend="blockflow", mode="dm")
+    prompts = np.random.default_rng(2).integers(0, 64, (2, 6)).astype(np.int32)
+    e_row = ServingEngine(cfg, params, ServeConfig(
+        batch_slots=2, max_len=32, gemm=pol))
+    e_packed = ServingEngine(cfg, params, ServeConfig(
+        batch_slots=2, max_len=32, gemm=pol, pack_weights=True))
+    assert isinstance(e_packed.params["head"], PackedWeight)
+    np.testing.assert_array_equal(e_row.generate(prompts, 4),
+                                  e_packed.generate(prompts, 4))
