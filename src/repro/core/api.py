@@ -28,6 +28,10 @@ Weights that persist across calls should be packed block-major once
 (:func:`~repro.core.plan.pack_weight` / ``pack_model_weights``) — ``linear``
 and ``matmul`` consume :class:`~repro.core.plan.PackedWeight` directly,
 realizing the paper's Fig. 5 reuse (no per-call re-layout).
+``GemmPolicy(weight_dtype="int8")`` switches weights to the quantized W8A8
+route (core/quant.py): int8 blocks + per-channel scales
+(:class:`~repro.core.quant.QuantizedPackedWeight`), int32 accumulation,
+dequant fused into the C-block flush on the block-major backends.
 
 Migration from the old stringly-typed API (kept as deprecation shims for one
 release): ``gemm_backend("xla")`` → ``use_policy(GemmPolicy(backend="xla"))``;
@@ -47,14 +51,17 @@ import jax.numpy as jnp
 from repro.core import blockflow
 from repro.core import layout as L
 from repro.core import plan as P
+from repro.core import quant as Q
 from repro.core.plan import (  # re-exported: the public policy surface
-    GemmPolicy, ExecutionPlan, PackedWeight, pack_weight, pack_model_weights,
+    GemmPolicy, ExecutionPlan, PackedWeight, QuantizedPackedWeight,
+    pack_weight, pack_model_weights,
     plan, plan_cache_info, plan_cache_clear, register_backend,
     unregister_backend, registered_backends,
 )
 
 __all__ = [
-    "GemmPolicy", "ExecutionPlan", "PackedWeight", "pack_weight",
+    "GemmPolicy", "ExecutionPlan", "PackedWeight", "QuantizedPackedWeight",
+    "pack_weight",
     "pack_model_weights", "plan", "plan_cache_info", "plan_cache_clear",
     "register_backend", "unregister_backend", "registered_backends",
     "matmul", "linear", "use_policy", "current_policy", "resolved_backend",
@@ -99,14 +106,30 @@ def prefers_einsum(policy: Optional[GemmPolicy] = None) -> bool:
 # ---------------------------------------------------------------------------
 
 def _xla_gemm(a, b, pln: ExecutionPlan, out_dtype):
+    if isinstance(b, QuantizedPackedWeight):
+        aq, sa = Q.quantize_activations(a)
+        c = jnp.matmul(aq, b.unpack_quantized(),
+                       preferred_element_type=jnp.int32)
+        return Q.dequantize_gemm(c, sa, b.scales, out_dtype)
     if isinstance(b, PackedWeight):
         b = b.unpack()
     return jnp.matmul(a, b, preferred_element_type=pln.acc).astype(out_dtype)
 
 
 def _blockflow_gemm(a2, b, pln: ExecutionPlan, out_dtype):
+    if isinstance(b, QuantizedPackedWeight):
+        aq, sa = Q.quantize_activations(a2)
+        blk = P.layout_for_packed(a2.shape[0], b, jnp.int8, pln.policy)
+        return blockflow.block_matmul(
+            aq, b.data, blk=blk, b_shape=(b.k, b.n), out_dtype=out_dtype,
+            acc_dtype=jnp.int32, scale_a=sa, scale_b=b.scales)
     if isinstance(b, PackedWeight):
-        b = b.unpack()
+        # consume the resident blocks directly — no unpack/re-block round
+        # trip (the Fig. 5 reuse property on this backend too)
+        blk = P.layout_for_packed(a2.shape[0], b, a2.dtype, pln.policy)
+        return blockflow.block_matmul(
+            a2, b.data, blk=blk, b_shape=(b.k, b.n), out_dtype=out_dtype,
+            acc_dtype=pln.acc)
     return blockflow.block_matmul(a2, b, blk=pln.layout, out_dtype=out_dtype,
                                   acc_dtype=pln.acc)
 
@@ -114,6 +137,15 @@ def _blockflow_gemm(a2, b, pln: ExecutionPlan, out_dtype):
 def _make_pallas_gemm(interpret: bool):
     def pallas_gemm(a2, b, pln: ExecutionPlan, out_dtype):
         from repro.kernels import matrixflow_gemm as mf  # lazy: pallas import
+        if isinstance(b, QuantizedPackedWeight):
+            aq, sa = Q.quantize_activations(a2)
+            blk = P.layout_for_packed(a2.shape[0], b, jnp.int8, pln.policy)
+            a_bm = L.to_block_major_a(aq, blk.bm, blk.bk)
+            c_bm = mf.matrixflow_gemm_block_major(
+                a_bm, b.data, blk=blk, out_dtype=out_dtype,
+                interpret=interpret, acc_dtype=jnp.int32,
+                scale_a=sa, scale_b=b.scales)
+            return L.from_block_major_c(c_bm, a2.shape[0], b.n)
         if isinstance(b, PackedWeight):
             blk = P.layout_for_packed(a2.shape[0], b, a2.dtype, pln.policy)
             a_bm = L.to_block_major_a(a2, blk.bm, blk.bk)
@@ -152,9 +184,19 @@ def matmul(a: jax.Array, b: Union[jax.Array, PackedWeight], *,
                       "GemmPolicy(mode=...)", DeprecationWarning,
                       stacklevel=2)
         pol = dataclasses.replace(pol, mode=mode)
-    packed = isinstance(b, PackedWeight)
-    out_dtype = out_dtype or jnp.promote_types(
-        a.dtype, b.data.dtype if packed else b.dtype)
+    quantized = isinstance(b, QuantizedPackedWeight)
+    packed = quantized or isinstance(b, PackedWeight)
+    if out_dtype is None:
+        if quantized:
+            # the route dequantizes back to the weight's original fp dtype
+            out_dtype = jnp.promote_types(a.dtype, jnp.dtype(b.dequant_dtype))
+        else:
+            out_dtype = jnp.promote_types(
+                a.dtype, b.data.dtype if packed else b.dtype)
+            if jnp.issubdtype(out_dtype, jnp.integer):
+                # paper MAC policy: integer GEMMs surface their int32
+                # accumulator (an int8 result would truncate, Table 2)
+                out_dtype = blockflow.acc_dtype_for(out_dtype)
     spec = P.get_backend_spec(pol.resolved_backend())
 
     if spec.batched and not packed:
@@ -178,21 +220,39 @@ def matmul(a: jax.Array, b: Union[jax.Array, PackedWeight], *,
     a2 = a.reshape(-1, a.shape[-1])
     M, K = a2.shape
     N = b.n if packed else b.shape[-1]
-    pln = plan(M, N, K, a2.dtype, pol)
+    # Quantized weights execute int8×int8→int32: plan for the int8 problem
+    # (sysmodel auto-mode and acc resolution both see the kernel dtype).
+    pln = plan(M, N, K, jnp.int8 if quantized else a2.dtype, pol)
     c = spec.fn(a2, b, pln, out_dtype)
     return c.reshape(lead + (N,)).astype(out_dtype)
 
 
-def linear(x: jax.Array, w: Union[jax.Array, PackedWeight],
+def linear(x: jax.Array, w: Union[jax.Array, PackedWeight,
+                                  QuantizedPackedWeight],
            bias: Optional[jax.Array] = None, *,
            policy: Optional[GemmPolicy] = None,
            mode: Optional[str] = None) -> jax.Array:
     """y = x @ w (+ bias): the layer-level entry point used by models.
 
     ``w`` may be a PackedWeight — laid out block-major once at model build —
-    in which case block-major backends consume the blocks directly.
+    in which case block-major backends consume the blocks directly; or a
+    QuantizedPackedWeight, which runs the int8 W8A8 route (core/quant.py).
+
+    Under ``GemmPolicy(weight_dtype="int8")`` a raw fp weight is quantized
+    on the fly (per call — pack once with ``pack_model_weights`` for the
+    resident deployment shape). Only ``linear`` applies the knob to raw
+    arrays: ``matmul``'s operands include activation×activation contractions
+    (attention scores), which stay in their stored dtype.
     """
-    y = matmul(x, w, policy=policy, mode=mode)
+    pol = policy if policy is not None else current_policy()
+    if (pol.weight_dtype is not None
+            and getattr(w, "ndim", 0) == 2
+            and not isinstance(w, (PackedWeight, QuantizedPackedWeight))
+            and jnp.issubdtype(x.dtype, jnp.floating)
+            and jnp.issubdtype(w.dtype, jnp.floating)):
+        m_hint = max(int(x.size // x.shape[-1]), 1)
+        w = P.pack_weight(w, pol, m_hint=m_hint, quantize=pol.weight_dtype)
+    y = matmul(x, w, policy=pol, mode=mode)
     if bias is not None:
         y = y + bias
     return y

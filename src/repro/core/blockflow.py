@@ -44,6 +44,9 @@ def block_matmul(
     blk: Optional[L.BlockLayout] = None,
     out_dtype: Optional[jnp.dtype] = None,
     acc_dtype: Optional[jnp.dtype] = None,
+    scale_a: Optional[jax.Array] = None,
+    scale_b: Optional[jax.Array] = None,
+    b_shape: Optional[tuple] = None,
 ) -> jax.Array:
     """C = A @ B via the paper's Algorithm 1 over block-major operands.
 
@@ -51,19 +54,44 @@ def block_matmul(
     MatrixFlow re-layout (the paper's data-structure step), then the blocked
     dataflow with lax.fori_loop as the K-stream. ``acc_dtype`` overrides the
     paper's MAC accumulator policy (a GemmPolicy knob).
+
+    ``b`` may instead be already block-major — 4-D ``(N/bn, K/bk, bk, bn)``,
+    a resident PackedWeight's blocks — with ``b_shape=(K, N)`` giving the
+    logical (unpadded) dims; the re-layout is then skipped entirely (the
+    paper's Fig. 5 reuse on this backend).
+
+    ``scale_a`` (M,) / ``scale_b`` (N,) fuse the quantized-GEMM dequant into
+    each C-block flush: the finished int32 block is rescaled by
+    ``s_a[m] * s_b[n]`` before it is written (the int8 W8A8 route — see
+    core/quant.py). With scales present the default out_dtype is float32.
     """
     M, K = a.shape
-    K2, N = b.shape
-    assert K == K2, (a.shape, b.shape)
+    if b.ndim == 4:
+        assert blk is not None and b_shape is not None, \
+            "block-major b needs an explicit blk and b_shape=(K, N)"
+        assert b.shape[-2:] == (blk.bk, blk.bn), (b.shape, blk)
+        K2, N = b_shape
+    else:
+        K2, N = b.shape
+    assert K == K2, (a.shape, b.shape if b.ndim != 4 else b_shape)
     if blk is None:
         blk = L.choose_layout(M, N, K, a.dtype)
     acc_dtype = jnp.dtype(acc_dtype or acc_dtype_for(a.dtype))
-    out_dtype = out_dtype or acc_dtype
+    fused = scale_a is not None or scale_b is not None
+    out_dtype = out_dtype or (jnp.float32 if fused else acc_dtype)
 
     a_bm = L.to_block_major_a(a, blk.bm, blk.bk)      # (nbm, nbk, bm, bk)
-    b_bm = L.to_block_major_b(b, blk.bk, blk.bn)      # (nbn, nbk, bk, bn)
+    b_bm = b if b.ndim == 4 else \
+        L.to_block_major_b(b, blk.bk, blk.bn)         # (nbn, nbk, bk, bn)
     nbm, nbk = a_bm.shape[0], a_bm.shape[1]
     nbn = b_bm.shape[0]
+    if fused:
+        sa = (jnp.ones((M,), jnp.float32) if scale_a is None
+              else scale_a.astype(jnp.float32))
+        sb = (jnp.ones((N,), jnp.float32) if scale_b is None
+              else scale_b.astype(jnp.float32))
+        sa_bm = jnp.pad(sa, (0, nbm * blk.bm - M)).reshape(nbm, blk.bm)
+        sb_bm = jnp.pad(sb, (0, nbn * blk.bn - N)).reshape(nbn, blk.bn)
 
     def out_block(i: jax.Array, j: jax.Array) -> jax.Array:
         c0 = jnp.zeros((blk.bm, blk.bn), acc_dtype)
@@ -77,7 +105,13 @@ def block_matmul(
                 k, 0, keepdims=False)
             return multi_acc(a_blk.astype(acc_dtype), b_blk.astype(acc_dtype), c_blk)
 
-        return jax.lax.fori_loop(0, nbk, body, c0)
+        c_blk = jax.lax.fori_loop(0, nbk, body, c0)
+        if fused:  # dequant fused at the block flush (paper's Buffer-C write)
+            sa_blk = jax.lax.dynamic_index_in_dim(sa_bm, i, 0, keepdims=False)
+            sb_blk = jax.lax.dynamic_index_in_dim(sb_bm, j, 0, keepdims=False)
+            c_blk = (c_blk.astype(jnp.float32)
+                     * sa_blk[:, None] * sb_blk[None, :])
+        return c_blk
 
     ii, jj = jnp.meshgrid(jnp.arange(nbm), jnp.arange(nbn), indexing="ij")
     c_bm = jax.vmap(jax.vmap(out_block))(ii, jj)       # (nbm, nbn, bm, bn)

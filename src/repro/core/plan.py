@@ -36,9 +36,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import layout as L
+from repro.core import quant as Q
+from repro.core.quant import QuantizedPackedWeight
 
 __all__ = [
-    "GemmPolicy", "ExecutionPlan", "PackedWeight", "BackendSpec",
+    "GemmPolicy", "ExecutionPlan", "PackedWeight", "QuantizedPackedWeight",
+    "BackendSpec",
     "plan", "plan_cache_info", "plan_cache_clear",
     "register_backend", "unregister_backend", "get_backend_spec",
     "registered_backends", "resolve_backend",
@@ -46,6 +49,9 @@ __all__ = [
 ]
 
 DEFAULT_VMEM_BUDGET = 96 * 1024 * 1024
+
+# Weight dtypes the quantized GEMM route understands (core/quant.py).
+_WEIGHT_DTYPES = (None, "int8")
 
 
 # ---------------------------------------------------------------------------
@@ -56,13 +62,17 @@ DEFAULT_VMEM_BUDGET = 96 * 1024 * 1024
 class GemmPolicy:
     """How GEMMs should execute. Frozen → hashable → a plan-cache key.
 
-    backend     registry name, or "auto" (pallas on TPU, xla elsewhere).
-    mode        paper access mode: "dc" | "dm" | "auto" (per-shape choice by
-                the sysmodel analytic cost model).
-    layout      explicit BlockLayout override (skips mode resolution).
-    acc_dtype   accumulator dtype name ("float32"/"int32"); None → the
-                paper's MAC policy (int inputs → int32, float → float32).
-    vmem_budget VMEM bytes the layout chooser may claim for the working set.
+    backend      registry name, or "auto" (pallas on TPU, xla elsewhere).
+    mode         paper access mode: "dc" | "dm" | "auto" (per-shape choice by
+                 the sysmodel analytic cost model).
+    layout       explicit BlockLayout override (skips mode resolution).
+    acc_dtype    accumulator dtype name ("float32"/"int32"); None → the
+                 paper's MAC policy (int inputs → int32, float → float32).
+    vmem_budget  VMEM bytes the layout chooser may claim for the working set.
+    weight_dtype None → weights execute in their stored dtype; "int8" →
+                 GEMM weights run the quantized W8A8 route (core/quant.py):
+                 per-channel int8 weights, dynamic per-row int8 activations,
+                 int32 accumulation, dequant fused into the C-block flush.
     """
 
     backend: str = "auto"
@@ -70,6 +80,19 @@ class GemmPolicy:
     layout: Optional[L.BlockLayout] = None
     acc_dtype: Optional[str] = None
     vmem_budget: int = DEFAULT_VMEM_BUDGET
+    weight_dtype: Optional[str] = None
+
+    def __post_init__(self):
+        if self.weight_dtype not in _WEIGHT_DTYPES:
+            raise ValueError(
+                f"unsupported weight_dtype {self.weight_dtype!r}; "
+                f"expected one of {_WEIGHT_DTYPES}")
+        if self.weight_dtype is not None and self.acc_dtype is not None:
+            raise ValueError(
+                f"acc_dtype={self.acc_dtype!r} cannot be combined with "
+                f"weight_dtype={self.weight_dtype!r}: the quantized route "
+                "accumulates int8×int8 in int32 by construction (the "
+                "rank-1 dequant is exact only over the integer result)")
 
     def resolved_backend(self) -> str:
         return resolve_backend(self.backend)
@@ -286,31 +309,51 @@ class PackedWeight:
 
 
 def pack_weight(w: jax.Array, policy: Optional[GemmPolicy] = None,
-                *, m_hint: int = 512) -> PackedWeight:
+                *, m_hint: int = 512, quantize: Optional[str] = None):
     """Lay a (…, K, N) weight out block-major exactly once.
 
     ``m_hint`` stands in for the unknown runtime M when resolving the block
     geometry; bk/bn depend on M only through the VMEM-budget shrink loop, so
     any M that fits the budget yields the same packing.
+
+    ``quantize="int8"`` (default: the policy's ``weight_dtype``) quantizes
+    symmetric per-channel at pack time and returns a
+    :class:`QuantizedPackedWeight` — int8 blocks + fp32 scales, resident —
+    instead of a fp :class:`PackedWeight`. Block geometry is then chosen for
+    the int8 itemsize (the paper's per-dtype MAC sizing, Table 2).
     """
     policy = policy if policy is not None else GemmPolicy()
+    quantize = quantize if quantize is not None else policy.weight_dtype
+    if quantize not in _WEIGHT_DTYPES:
+        raise ValueError(f"unsupported quantize={quantize!r}; "
+                         f"expected one of {_WEIGHT_DTYPES}")
     K, N = w.shape[-2], w.shape[-1]
+    pack_dtype = jnp.dtype(jnp.int8) if quantize == "int8" else w.dtype
     if policy.layout is not None:
         blk = policy.layout
     else:
         mode = policy.mode
         if mode == "auto":
-            mode = _auto_mode(m_hint, N, K, jnp.dtype(w.dtype).name)
-        blk = L.choose_layout(m_hint, N, K, w.dtype, mode=mode,
+            mode = _auto_mode(m_hint, N, K, jnp.dtype(pack_dtype).name)
+        blk = L.choose_layout(m_hint, N, K, pack_dtype, mode=mode,
                               vmem_budget=policy.vmem_budget)
+    if quantize == "int8":
+        q, scales = Q.quantize_weight(w)
+        data = L.to_block_major_b(q, blk.bk, blk.bn)
+        return QuantizedPackedWeight(
+            data=data, scales=scales, k=K, n=N, bk=blk.bk, bn=blk.bn,
+            mode=blk.mode, dequant_dtype=jnp.dtype(w.dtype).name)
     data = L.to_block_major_b(w, blk.bk, blk.bn)
     return PackedWeight(data=data, k=K, n=N, bk=blk.bk, bn=blk.bn,
                         mode=blk.mode)
 
 
-def layout_for_packed(M: int, pw: PackedWeight, dtype: Any,
+def layout_for_packed(M: int, pw, dtype: Any,
                       policy: Optional[GemmPolicy] = None) -> L.BlockLayout:
-    """A BlockLayout consistent with a PackedWeight's frozen bk/bn.
+    """A BlockLayout consistent with a packed weight's frozen bk/bn.
+
+    ``pw`` is a :class:`PackedWeight` or :class:`QuantizedPackedWeight`
+    (both carry the same k/n/bk/bn/mode geometry).
 
     The packed geometry is immutable (re-packing would defeat the resident-
     weight point), so when it differs from what the calling policy would
@@ -350,14 +393,21 @@ _EINSUM_BANKS = frozenset({"wi", "wo"})
 
 
 def pack_model_weights(params, policy: Optional[GemmPolicy] = None,
-                       *, m_hint: int = 512):
+                       *, m_hint: int = 512,
+                       quantize: Optional[str] = None):
     """Pack every GEMM weight in a model param tree into a PackedWeight.
 
     Realizes the paper's offline weight arrangement (Fig. 5): each weight is
     laid out block-major once at model build/load; api.linear consumes the
     blocks directly. Non-GEMM params (norms, biases, conv kernels, embeds,
     MoE expert banks) pass through untouched.
+
+    ``quantize="int8"`` (default: the policy's ``weight_dtype``) makes every
+    packed weight a :class:`QuantizedPackedWeight` — the quantize-at-pack
+    deployment shape where serving holds int8 blocks + scales resident.
     """
+    quantize = quantize if quantize is not None else (
+        policy.weight_dtype if policy is not None else None)
     def rec(node, parent_key):
         if isinstance(node, dict):
             return {k: rec(v, k) if isinstance(v, (dict, list))
@@ -374,6 +424,6 @@ def pack_model_weights(params, policy: Optional[GemmPolicy] = None,
             return leaf
         if leaf.ndim < 2:
             return leaf
-        return pack_weight(leaf, policy, m_hint=m_hint)
+        return pack_weight(leaf, policy, m_hint=m_hint, quantize=quantize)
 
     return rec(params, None)

@@ -1,0 +1,142 @@
+"""INT8 symmetric quantization for MatrixFlow GEMMs (paper Table 2, int MACs).
+
+The paper sizes MAC units per dtype and reports its largest accelerator wins
+on the integer designs (int8 MACs at 1 GHz vs fp at 600 MHz). This module is
+the software half of that path:
+
+  * **weights** are quantized offline, symmetric **per output channel**
+    (one fp32 scale per column of the (K, N) operand) — the granularity that
+    keeps GEMM dequantization a rank-1 rescale of the int32 result;
+  * **activations** are quantized dynamically, symmetric **per row** (one
+    fp32 scale per row of the (M, K) operand), at the GEMM entry;
+  * the GEMM itself runs **int8 × int8 → int32** through the same three
+    backends as the fp path (blockflow oracle, Pallas kernel, XLA), with the
+    dequantization ``C_fp[m, n] = C_i32[m, n] * s_a[m] * s_b[n]`` fused into
+    the C-block flush on the block-major backends;
+  * :class:`QuantizedPackedWeight` stores the int8 blocks block-major (the
+    paper's horizontally-split B, Fig. 4 bottom) plus the per-channel scales,
+    so serving keeps quantized weights resident exactly like fp
+    :class:`~repro.core.plan.PackedWeight`.
+
+The int8 grid is symmetric in [-QMAX, QMAX] (−128 unused) so that
+``q = -q`` never overflows and the dequant scale is a single positive fp32.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import layout as L
+
+__all__ = [
+    "QMAX", "QuantizedPackedWeight",
+    "quantize_weight", "dequantize_weight",
+    "quantize_activations", "dequantize_gemm",
+]
+
+QMAX = 127  # symmetric int8 grid [-127, 127]; -128 excluded
+
+
+def _safe_scale(amax: jax.Array) -> jax.Array:
+    """amax/QMAX with all-zero slices mapped to scale 1 (q = 0 exactly)."""
+    amax = amax.astype(jnp.float32)
+    return jnp.where(amax > 0, amax / QMAX, jnp.float32(1.0))
+
+
+def quantize_weight(w: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """(…, K, N) fp weight → (int8 (…, K, N), fp32 scales (…, N)).
+
+    Symmetric per-output-channel: each N column gets scale max|w[:, n]|/127.
+    Round-half-to-even (jnp.round), clipped to the symmetric grid.
+    """
+    amax = jnp.max(jnp.abs(w.astype(jnp.float32)), axis=-2)
+    scales = _safe_scale(amax)
+    q = jnp.round(w.astype(jnp.float32) / scales[..., None, :])
+    q = jnp.clip(q, -QMAX, QMAX).astype(jnp.int8)
+    return q, scales
+
+
+def dequantize_weight(q: jax.Array, scales: jax.Array,
+                      dtype=jnp.float32) -> jax.Array:
+    """Inverse of :func:`quantize_weight` up to the rounding error."""
+    return (q.astype(jnp.float32) * scales[..., None, :]).astype(dtype)
+
+
+def quantize_activations(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """(…, K) fp activations → (int8 (…, K), fp32 scales (…,)).
+
+    Symmetric per-row (per token): the dynamic half of the W8A8 scheme.
+    """
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
+    scales = _safe_scale(amax)
+    q = jnp.round(x.astype(jnp.float32) / scales[..., None])
+    q = jnp.clip(q, -QMAX, QMAX).astype(jnp.int8)
+    return q, scales
+
+
+def dequantize_gemm(c_int: jax.Array, scale_a: jax.Array, scale_b: jax.Array,
+                    out_dtype=jnp.float32) -> jax.Array:
+    """int32 GEMM result (M, N) → fp: C * s_a[m] * s_b[n] (rank-1 rescale).
+
+    This is the reference (unfused) dequant; the block-major backends fuse
+    the identical expression into their C-block flush, so all backends agree
+    bitwise on the fp32 product before the final out_dtype cast.
+    """
+    c = c_int.astype(jnp.float32)
+    c = c * scale_a.astype(jnp.float32)[..., :, None]
+    c = c * scale_b.astype(jnp.float32)[..., None, :]
+    return c.astype(out_dtype)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class QuantizedPackedWeight:
+    """An int8 GEMM rhs held resident block-major, with per-channel scales.
+
+    data   int8 ``(…, N/bn, K/bk, bk, bn)`` — the paper's horizontally-split
+           B operand, quantized; leading dims are stacked-layer axes.
+    scales fp32 ``(…, N)`` — one symmetric scale per output channel.
+
+    Mirrors :class:`~repro.core.plan.PackedWeight` (same geometry fields, so
+    layout resolution duck-types across both); built by
+    ``pack_weight(w, policy, quantize="int8")``.
+    """
+
+    data: jax.Array
+    scales: jax.Array
+    k: int                   # logical (unpadded) K
+    n: int                   # logical (unpadded) N
+    bk: int
+    bn: int
+    mode: str = "dm"
+    dequant_dtype: str = "float32"   # the original weight dtype name
+
+    @property
+    def shape(self) -> Tuple[int, int]:
+        return (self.k, self.n)
+
+    @property
+    def dtype(self):
+        return self.data.dtype
+
+    def unpack_quantized(self) -> jax.Array:
+        """Back to row-major int8 (…, K, N) — for layout-free backends."""
+        return L.from_block_major_b(self.data, self.k, self.n)
+
+    def unpack(self) -> jax.Array:
+        """Dequantized row-major weight in the original dtype."""
+        return dequantize_weight(self.unpack_quantized(), self.scales,
+                                 jnp.dtype(self.dequant_dtype))
+
+    # pytree protocol: data + scales are traced leaves; geometry is static.
+    def tree_flatten(self):
+        return ((self.data, self.scales),
+                (self.k, self.n, self.bk, self.bn, self.mode,
+                 self.dequant_dtype))
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], children[1], *aux)

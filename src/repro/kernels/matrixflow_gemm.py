@@ -60,6 +60,29 @@ def _kernel(a_ref, b_ref, o_ref, acc_ref, *, nbk: int, acc_dtype):
         o_ref[0, 0] = acc_ref[...].astype(o_ref.dtype)
 
 
+def _kernel_fused_dequant(a_ref, b_ref, sa_ref, sb_ref, o_ref, acc_ref, *,
+                          nbk: int, acc_dtype):
+    """Same schedule, with the W8A8 dequant fused into the C-block flush:
+    the finished int32 accumulator is rescaled by the per-row activation
+    scale and the per-channel weight scale before the single HBM write
+    (core/quant.py's rank-1 dequant — no second pass over C)."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    a = a_ref[0, 0]
+    b = b_ref[0, 0]
+    acc_ref[...] += jnp.dot(a, b, preferred_element_type=acc_dtype)
+
+    @pl.when(k == nbk - 1)
+    def _flush():
+        scaled = (acc_ref[...].astype(jnp.float32)
+                  * sa_ref[...] * sb_ref[...])      # (bm,1)*(1,bn) broadcast
+        o_ref[0, 0] = scaled.astype(o_ref.dtype)
+
+
 @functools.partial(
     jax.jit,
     static_argnames=("blk", "out_dtype", "interpret", "acc_dtype"),
@@ -72,6 +95,8 @@ def matrixflow_gemm_block_major(
     out_dtype: Optional[jnp.dtype] = None,
     interpret: bool = False,
     acc_dtype: Optional[jnp.dtype] = None,
+    scale_a: Optional[jax.Array] = None,
+    scale_b: Optional[jax.Array] = None,
 ) -> jax.Array:
     """C_bm = A_bm @ B_bm over MatrixFlow block-major operands.
 
@@ -79,17 +104,22 @@ def matrixflow_gemm_block_major(
     returns C block-major (nbm, nbn, bm, bn). ``acc_dtype`` overrides the
     default accumulator policy (int → int32, float → fp32) — a GemmPolicy
     knob at the ExecutionPlan layer.
+
+    ``scale_a`` (≤ nbm·bm rows) / ``scale_b`` (≤ nbn·bn channels) switch in
+    the dequant-fused kernel for the int8 W8A8 route: each finished int32
+    C block is rescaled by ``s_a[m] * s_b[n]`` in VMEM before its single
+    HBM write. With scales present the default out_dtype is float32.
     """
     nbm, nbk, bm, bk = a_bm.shape
     nbn, nbk2, bk2, bn = b_bm.shape
     assert (nbk, bk) == (nbk2, bk2), (a_bm.shape, b_bm.shape)
     assert (bm, bn, bk) == (blk.bm, blk.bn, blk.bk)
     acc_dtype = jnp.dtype(acc_dtype or _acc_dtype(a_bm.dtype))
-    out_dtype = jnp.dtype(out_dtype or acc_dtype)
+    fused = scale_a is not None or scale_b is not None
+    out_dtype = jnp.dtype(out_dtype or
+                          (jnp.float32 if fused else acc_dtype))
 
     grid = (nbm, nbn, nbk)
-    kernel = functools.partial(_kernel, nbk=nbk, acc_dtype=acc_dtype)
-
     kwargs = {}
     if _CompilerParams is not None and not interpret:
         kwargs["compiler_params"] = _CompilerParams(
@@ -97,20 +127,41 @@ def matrixflow_gemm_block_major(
         )
     scratch = [pltpu.VMEM((bm, bn), acc_dtype)]
 
+    in_specs = [
+        pl.BlockSpec((1, 1, bm, bk), lambda i, j, k: (i, k, 0, 0)),
+        pl.BlockSpec((1, 1, bk, bn), lambda i, j, k: (j, k, 0, 0)),
+    ]
+    operands = [a_bm, b_bm]
+    if fused:
+        # Scales enter as (M, 1) / (1, N) fp32 panels, zero-padded to the
+        # block grid; each tile sees its (bm, 1) / (1, bn) slice.
+        sa = (jnp.ones((nbm * bm,), jnp.float32) if scale_a is None
+              else jnp.pad(scale_a.astype(jnp.float32),
+                           (0, nbm * bm - scale_a.shape[0])))
+        sb = (jnp.ones((nbn * bn,), jnp.float32) if scale_b is None
+              else jnp.pad(scale_b.astype(jnp.float32),
+                           (0, nbn * bn - scale_b.shape[0])))
+        in_specs += [
+            pl.BlockSpec((bm, 1), lambda i, j, k: (i, 0)),
+            pl.BlockSpec((1, bn), lambda i, j, k: (0, j)),
+        ]
+        operands += [sa.reshape(nbm * bm, 1), sb.reshape(1, nbn * bn)]
+        kernel = functools.partial(_kernel_fused_dequant, nbk=nbk,
+                                   acc_dtype=acc_dtype)
+    else:
+        kernel = functools.partial(_kernel, nbk=nbk, acc_dtype=acc_dtype)
+
     call = pl.pallas_call(
         kernel,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, 1, bm, bk), lambda i, j, k: (i, k, 0, 0)),
-            pl.BlockSpec((1, 1, bk, bn), lambda i, j, k: (j, k, 0, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1, bm, bn), lambda i, j, k: (i, j, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((nbm, nbn, bm, bn), out_dtype),
         scratch_shapes=scratch,
         interpret=interpret,
         **kwargs,
     )
-    return call(a_bm, b_bm)
+    return call(*operands)
 
 
 def matrixflow_gemm(
@@ -122,12 +173,15 @@ def matrixflow_gemm(
     out_dtype: Optional[jnp.dtype] = None,
     interpret: bool = False,
     acc_dtype: Optional[jnp.dtype] = None,
+    scale_a: Optional[jax.Array] = None,
+    scale_b: Optional[jax.Array] = None,
 ) -> jax.Array:
     """C = A @ B: re-layout (the paper's data-structure step) + blocked kernel.
 
     a: (M, K), b: (K, N) row-major. For persistent weights prefer packing
     block-major once (core/plan.py's PackedWeight) — api.linear then calls
     matrixflow_gemm_block_major directly, skipping the per-call re-layout.
+    ``scale_a`` (M,) / ``scale_b`` (N,) select the dequant-fused int8 kernel.
     """
     M, K = a.shape
     K2, N = b.shape
@@ -138,5 +192,5 @@ def matrixflow_gemm(
     b_bm = L.to_block_major_b(b, blk.bk, blk.bn)
     c_bm = matrixflow_gemm_block_major(
         a_bm, b_bm, blk=blk, out_dtype=out_dtype, interpret=interpret,
-        acc_dtype=acc_dtype)
+        acc_dtype=acc_dtype, scale_a=scale_a, scale_b=scale_b)
     return L.from_block_major_c(c_bm, M, N)

@@ -37,18 +37,22 @@ def main(argv=None):
                     help="paper access mode; auto = per-shape sysmodel pick")
     ap.add_argument("--pack-weights", action="store_true",
                     help="lay weights out block-major once (resident)")
+    ap.add_argument("--weight-dtype", default=None, choices=["int8"],
+                    help="int8 → quantized W8A8 GEMM route (docs/quant.md); "
+                         "with --pack-weights the int8 blocks stay resident")
     args = ap.parse_args(argv)
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     policy = GemmPolicy(backend=args.gemm_backend, mode=args.gemm_mode)
     print(f"[serve] arch={cfg.name} slots={args.batch_slots} "
           f"max_len={args.max_len} gemm={policy.resolved_backend()}/"
-          f"{policy.mode} packed={args.pack_weights}")
+          f"{policy.mode} packed={args.pack_weights} "
+          f"weight_dtype={args.weight_dtype or 'native'}")
     params, _ = T.init_model(jax.random.PRNGKey(args.seed), cfg)
     engine = ServingEngine(cfg, params, ServeConfig(
         batch_slots=args.batch_slots, max_len=args.max_len,
         temperature=args.temperature, gemm=policy,
-        pack_weights=args.pack_weights))
+        pack_weights=args.pack_weights, weight_dtype=args.weight_dtype))
 
     rng = np.random.default_rng(args.seed)
     # batched generate path (one full batch)
@@ -61,10 +65,16 @@ def main(argv=None):
     print(f"[serve] batched generate: {out.shape} in {dt:.2f}s "
           f"({tput:.1f} tok/s)")
 
-    # continuous-batching path
+    # continuous-batching path (slot admission needs position-masked cache
+    # updates; SSM/hybrid recurrent state has none, so multi-slot submit is
+    # refused — see ServingEngine.submit)
+    if cfg.family in ("ssm", "hybrid") and args.batch_slots > 1:
+        print("[serve] continuous batching skipped: ssm/hybrid families "
+              "support slot admission only with --batch-slots 1")
+        return 0
     engine2 = ServingEngine(cfg, params, ServeConfig(
         batch_slots=args.batch_slots, max_len=args.max_len, gemm=policy,
-        pack_weights=args.pack_weights))
+        pack_weights=args.pack_weights, weight_dtype=args.weight_dtype))
     lo = max(1, min(4, args.prompt_len))
     pending = [rng.integers(0, cfg.vocab,
                             rng.integers(lo, args.prompt_len + 1))

@@ -160,10 +160,17 @@ def attention(p, cfg: ModelConfig, x, *, positions, cache=None):
         kv_k, kv_v = k, v
         kv_valid = jnp.full((B,), S)
     else:
-        if S > 1:  # prefill chunk: rows share the write offset
-            idx = positions[0, 0]
-            kv_k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, idx, 1)
-            kv_v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, idx, 1)
+        # Rows whose position is negative are masked out: they neither
+        # write K/V nor advance their valid length. The serving engine uses
+        # this for single-slot prefill/decode — other live slots' caches
+        # must stay untouched (the submit-corruption regression).
+        row_ok = positions[:, 0] >= 0                         # (B,)
+        if S > 1:  # prefill chunk: unmasked rows share the write offset
+            idx = jnp.max(positions[:, 0])     # masked rows carry -1
+            up_k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, idx, 1)
+            up_v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, idx, 1)
+            kv_k = jnp.where(row_ok[:, None, None, None], up_k, cache["k"])
+            kv_v = jnp.where(row_ok[:, None, None, None], up_v, cache["v"])
         else:      # decode: per-row offsets (continuous batching slots).
             # One-hot masked update, NOT a scatter: a (B,·) scatter makes
             # GSPMD replicate-then-repartition the whole cache when its seq
@@ -173,7 +180,8 @@ def attention(p, cfg: ModelConfig, x, *, positions, cache=None):
             at_pos = (jnp.arange(T)[None, :] == positions)[..., None, None]
             kv_k = jnp.where(at_pos, k[:, 0][:, None], cache["k"])
             kv_v = jnp.where(at_pos, v[:, 0][:, None], cache["v"])
-        cache = {"k": kv_k, "v": kv_v, "len": cache["len"] + S}
+        written = jnp.where(row_ok, S, 0).astype(cache["len"].dtype)
+        cache = {"k": kv_k, "v": kv_v, "len": cache["len"] + written}
         kv_valid = cache["len"]
 
     out = _attn_core(q, kv_k, kv_v, q_positions=positions,
@@ -237,19 +245,24 @@ def mla_attention(p, cfg: ModelConfig, x, *, positions, cache=None):
     k_rope = rope(k_rope[:, :, None, :], positions, cfg.rope_theta)[:, :, 0]
 
     if cache is not None:
+        # negative positions mask a row out of the update entirely
+        # (single-slot prefill/decode — same contract as the GQA path)
+        row_ok = positions[:, 0] >= 0
         if S > 1:
-            idx = positions[0, 0]
-            up = lambda buf, new: jax.lax.dynamic_update_slice_in_dim(
-                buf, new, idx, 1)
+            idx = jnp.max(positions[:, 0])
+            up = lambda buf, new: jnp.where(
+                row_ok[:, None, None],
+                jax.lax.dynamic_update_slice_in_dim(buf, new, idx, 1), buf)
         else:
             # masked update, not scatter — shard-local under seq sharding
             # (same rationale as the GQA path, §Perf H2)
             T = cache["ckv"].shape[1]
             at_pos = (jnp.arange(T)[None, :] == positions)[..., None]
             up = lambda buf, new: jnp.where(at_pos, new[:, 0][:, None], buf)
+        written = jnp.where(row_ok, S, 0).astype(cache["len"].dtype)
         cache = {"ckv": up(cache["ckv"], c_kv),
                  "krope": up(cache["krope"], k_rope),
-                 "len": cache["len"] + S}
+                 "len": cache["len"] + written}
         c_all, kr_all, kv_valid = cache["ckv"], cache["krope"], cache["len"]
     else:
         c_all, kr_all, kv_valid = c_kv, k_rope, jnp.full((B,), S)

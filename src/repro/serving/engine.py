@@ -10,6 +10,14 @@ GEMM execution is governed by a GemmPolicy (ServeConfig.gemm); with
 ``pack_weights=True`` every projection weight is laid out block-major once
 at engine construction (api.pack_model_weights) and stays resident — the
 paper's Fig. 5 deployment shape, where serving never re-lays-out a weight.
+``weight_dtype="int8"`` additionally quantizes at pack: weights live as
+int8 blocks + per-channel scales and GEMMs run the W8A8 route
+(core/quant.py, docs/quant.md).
+
+Slot admission uses *masked* prefill/decode: batch rows at position -1
+neither write their KV cache nor advance their valid length, so one slot's
+prefill cannot corrupt concurrent slots (SSD/conv caches don't carry
+positions and are outside this masking contract).
 """
 from __future__ import annotations
 
@@ -35,6 +43,16 @@ class ServeConfig:
     cache_dtype: str = "bfloat16"
     gemm: Optional[GemmPolicy] = None   # None → the ambient/default policy
     pack_weights: bool = False          # resident block-major weights
+    weight_dtype: Optional[str] = None  # "int8" → quantized W8A8 GEMM route
+
+    def policy(self) -> Optional[GemmPolicy]:
+        """The effective GemmPolicy: ``gemm`` with ``weight_dtype`` folded
+        in. With ``pack_weights=True`` this makes every projection weight a
+        resident QuantizedPackedWeight (quantize-at-pack)."""
+        if self.weight_dtype is None:
+            return self.gemm
+        return dataclasses.replace(self.gemm or GemmPolicy(),
+                                   weight_dtype=self.weight_dtype)
 
 
 def _policy_scope(policy: Optional[GemmPolicy]):
@@ -68,16 +86,42 @@ class ServingEngine:
     """Greedy/temperature sampling with slot-based continuous batching."""
 
     def __init__(self, cfg: ModelConfig, params, sc: ServeConfig):
-        if sc.pack_weights:
-            params = api.pack_model_weights(params, sc.gemm)
+        pol = sc.policy()
+        # Quantizing per call inside the jitted forward would redo the
+        # O(K·N) weight quantization on every decode token; weights are
+        # static across calls, so weight_dtype always quantizes-at-pack.
+        if sc.pack_weights or sc.weight_dtype is not None:
+            params = api.pack_model_weights(params, pol)
         self.cfg, self.params, self.sc = cfg, params, sc
-        self.decode = jax.jit(make_decode_step(cfg, sc.gemm))
-        self.prefill = jax.jit(make_prefill_step(cfg, sc.gemm))
+        self.decode = jax.jit(make_decode_step(cfg, pol))
+        self.prefill = jax.jit(make_prefill_step(cfg, pol))
         self.caches = T.init_caches(cfg, sc.batch_slots, sc.max_len,
                                     jnp.dtype(sc.cache_dtype))
         self.slot_pos = np.zeros(sc.batch_slots, np.int32)
         self.slot_live = np.zeros(sc.batch_slots, bool)
         self.slot_out: List[List[int]] = [[] for _ in range(sc.batch_slots)]
+        # Next greedy token per slot, already decoded but not yet reported:
+        # seeded by submit() from the prefill logits, advanced by step().
+        self.slot_next = np.zeros(sc.batch_slots, np.int32)
+
+    def _reset_slot_caches(self, slot: int):
+        """Zero a slot's valid lengths so a recycled slot starts from
+        position 0 (stale K/V beyond len=0 is invisible to attention)."""
+        def rec(node):
+            if isinstance(node, dict):
+                if "state" in node:
+                    # SSD recurrent state carries no positions/len; submit
+                    # only admits these with batch_slots == 1 (see below),
+                    # where the whole state belongs to this slot.
+                    return jax.tree_util.tree_map(jnp.zeros_like, node)
+                out = {k: rec(v) for k, v in node.items()}
+                if "len" in out:
+                    out["len"] = out["len"].at[..., slot].set(0)
+                return out
+            if isinstance(node, (list, tuple)):
+                return type(node)(rec(v) for v in node)
+            return node
+        self.caches = rec(self.caches)
 
     # -- single-prompt helpers (used by tests/examples) ---------------------
     def generate(self, prompts: np.ndarray, n_tokens: int,
@@ -108,38 +152,82 @@ class ServingEngine:
 
     # -- continuous batching -------------------------------------------------
     def submit(self, prompt: List[int]) -> Optional[int]:
-        """Admit a request into a free slot; returns slot id or None."""
+        """Admit a request into a free slot; returns slot id or None.
+
+        Masked single-slot prefill: the whole prompt runs as one prefill
+        call in which every *other* batch row carries position -1 — the
+        attention cache update skips those rows entirely (no K/V write, no
+        valid-length bump), so concurrent slots' caches are untouched.
+        (The old per-token full-batch decode wrote zero-token K/V into every
+        other live slot's cache and inflated their lengths — the
+        interleaved-submit corruption regression in tests/test_serving.py.)
+
+        The prefill's last-position logits seed the slot's pending greedy
+        token, so the first decode step is conditioned on the real prompt,
+        not a pseudo-BOS; step() reports that token first — no token of the
+        stream is lost. Recycled slots restart from position 0 with their
+        valid lengths zeroed.
+
+        Known trade: each distinct prompt length S compiles its own (B, S)
+        prefill. Callers with many lengths should bucket/pad prompts; the
+        position masking is per-row, so column padding needs care.
+        """
+        if self.cfg.family in ("ssm", "hybrid") and self.sc.batch_slots > 1:
+            raise NotImplementedError(
+                "slot-based submit() requires position-masked cache updates; "
+                "SSD/conv recurrent states carry no positions, so a masked "
+                "single-slot prefill cannot leave other slots' SSM state "
+                "untouched. Use generate(), or batch_slots=1 where no other "
+                "slot exists.")
+        if not 0 < len(prompt) < self.sc.max_len:
+            raise ValueError(
+                f"prompt length {len(prompt)} out of range for "
+                f"max_len={self.sc.max_len} (need 1 <= len < max_len)")
         free = np.where(~self.slot_live)[0]
         if free.size == 0:
             return None
         slot = int(free[0])
-        # per-slot prefill: run the prompt through decode one token at a
-        # time (slot-local; batch-level prefill happens in generate())
-        for i, t in enumerate(prompt):
-            tok = jnp.zeros((self.sc.batch_slots, 1), jnp.int32)
-            tok = tok.at[slot, 0].set(t)
-            pos = jnp.asarray(self.slot_pos)[:, None]
-            _, self.caches = self.decode(self.params, tok, pos, self.caches)
-            self.slot_pos[slot] += 1
+        if self.slot_pos[slot]:        # recycled slot: restart from pos 0
+            self._reset_slot_caches(slot)
+            self.slot_pos[slot] = 0
+        B, S = self.sc.batch_slots, len(prompt)
+        tok = np.zeros((B, S), np.int32)
+        tok[slot] = np.asarray(prompt, np.int32)
+        pos = np.full((B, S), -1, np.int32)
+        pos[slot] = np.arange(S)
+        logits, self.caches = self.prefill(
+            self.params, {"tokens": jnp.asarray(tok),
+                          "positions": jnp.asarray(pos)}, self.caches)
+        self.slot_pos[slot] = S
         self.slot_live[slot] = True
         self.slot_out[slot] = []
+        self.slot_next[slot] = int(jnp.argmax(logits[slot]))
         return slot
 
     def step(self) -> Dict[int, int]:
-        """One decode iteration across all live slots."""
+        """One decode iteration across all live slots; non-live slots are
+        masked out (position -1 → no cache write, no length bump).
+
+        Reports each slot's *pending* token (decoded last round, or by the
+        submit prefill) and pipelines the decode of the one after — the
+        same order generate() uses, so slot streams match the batched path
+        token for token.
+        """
         if not self.slot_live.any():
             return {}
-        last = np.array([o[-1] if o else 0 for o in self.slot_out], np.int32)
-        tok = jnp.asarray(last)[:, None]
-        pos = jnp.asarray(self.slot_pos)[:, None]
+        tok = jnp.asarray(self.slot_next)[:, None]
+        pos = jnp.asarray(np.where(self.slot_live, self.slot_pos,
+                                   -1).astype(np.int32))[:, None]
         logits, self.caches = self.decode(self.params, tok, pos, self.caches)
         nxt = np.asarray(jnp.argmax(logits, axis=-1))
         out = {}
         for s in range(self.sc.batch_slots):
             if self.slot_live[s]:
-                self.slot_out[s].append(int(nxt[s]))
+                t = int(self.slot_next[s])
+                self.slot_out[s].append(t)
+                out[s] = t
+                self.slot_next[s] = int(nxt[s])
                 self.slot_pos[s] += 1
-                out[s] = int(nxt[s])
                 if self.slot_pos[s] >= self.sc.max_len - 1:
                     self.slot_live[s] = False   # retire full slots
         return out

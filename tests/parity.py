@@ -1,0 +1,175 @@
+"""Cross-backend differential GEMM harness (backend × dtype × shape grid).
+
+Every registered GEMM backend must be provably equivalent on every dtype the
+paper's MAC units cover (Table 2): the blockflow oracle (faithful Algorithm
+1), the Pallas kernel (interpret mode on CPU), and XLA einsum must agree
+with the pure-jnp reference within per-dtype tolerances — and *exactly* (in
+integers) for int8, where accumulation in int32 is associative.
+
+The grid also sweeps the quantized W8A8 route (``GemmPolicy(weight_dtype=
+"int8")``): all backends share the same quantization functions and the same
+rank-1 dequant, so their fp32 outputs must agree bitwise-tight with the
+unfused reference formula.
+
+Used three ways:
+  * ``tests/test_parity.py`` parametrizes pytest over the grid (tier-1 gate);
+  * CI's dtype-matrix job runs ``python tests/parity.py --dtypes <dt>``;
+  * new backends/dtypes extend BACKENDS / DTYPES / SHAPES and inherit the
+    whole gate.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import sys
+from typing import Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import api
+from repro.core import quant as Q
+from repro.core.plan import GemmPolicy
+
+BACKENDS = ("xla", "blockflow", "pallas_interpret")
+DTYPES = ("float32", "bfloat16", "int8")
+
+# (M, K, N): MXU-aligned, multi-block, ragged/odd (padding paths), and the
+# decode-like skinny-M GEMV.
+SHAPES = (
+    (8, 8, 8),
+    (64, 96, 48),
+    (33, 17, 65),
+    (1, 64, 128),
+    (130, 24, 56),
+)
+
+# (atol, rtol) per dtype; int8 demands exact integer equality.
+TOLS = {
+    "float32": (1e-4, 1e-5),
+    "bfloat16": (5e-2, 5e-2),
+    "int8": (0.0, 0.0),
+}
+
+
+@dataclasses.dataclass
+class ParityResult:
+    backend: str
+    dtype: str
+    shape: Tuple[int, int, int]
+    max_err: float
+    ok: bool
+    detail: str = ""
+
+
+def make_operands(dtype: str, M: int, K: int, N: int, seed: int = 0):
+    """Deterministic operands per (dtype, shape) cell."""
+    rng = np.random.default_rng((seed * 7919 + M * 1000003 + K * 1009 + N)
+                                % 2**32)
+    if dtype == "int8":
+        a = rng.integers(-127, 128, (M, K)).astype(np.int8)
+        b = rng.integers(-127, 128, (K, N)).astype(np.int8)
+        return jnp.asarray(a), jnp.asarray(b)
+    a = rng.standard_normal((M, K)).astype(np.float32)
+    b = rng.standard_normal((K, N)).astype(np.float32)
+    return (jnp.asarray(a).astype(jnp.dtype(dtype)),
+            jnp.asarray(b).astype(jnp.dtype(dtype)))
+
+
+def reference(a, b) -> np.ndarray:
+    """Ground truth: int64 exact for integer inputs, fp32 accumulation else."""
+    if jnp.issubdtype(a.dtype, jnp.integer):
+        return np.asarray(a, np.int64) @ np.asarray(b, np.int64)
+    return (np.asarray(a, np.float32) @ np.asarray(b, np.float32))
+
+
+def check_cell(backend: str, dtype: str,
+               shape: Tuple[int, int, int]) -> ParityResult:
+    """One grid cell: backend output vs reference. Raises AssertionError
+    with full context on disagreement; returns the passing ParityResult."""
+    M, K, N = shape
+    a, b = make_operands(dtype, M, K, N)
+    ref = reference(a, b)
+    out = api.matmul(a, b, policy=GemmPolicy(backend=backend))
+    assert out.shape == (M, N), (out.shape, shape)
+    ctx = f"backend={backend} dtype={dtype} shape={shape}"
+    if dtype == "int8":
+        assert out.dtype == jnp.int32, f"{ctx}: got {out.dtype}, want int32"
+        got = np.asarray(out, np.int64)
+        np.testing.assert_array_equal(
+            got, ref, err_msg=f"{ctx}: int8 GEMM must be integer-exact")
+        return ParityResult(backend, dtype, shape, 0.0, True, "exact")
+    atol, rtol = TOLS[dtype]
+    got = np.asarray(out, np.float32)
+    err = float(np.abs(got - ref).max()) if got.size else 0.0
+    np.testing.assert_allclose(got, ref, atol=atol, rtol=rtol, err_msg=ctx)
+    return ParityResult(backend, dtype, shape, err, True)
+
+
+def check_quantized_cell(backend: str,
+                         shape: Tuple[int, int, int]) -> ParityResult:
+    """The W8A8 route under GemmPolicy(weight_dtype="int8") vs the unfused
+    dequant reference — same int8 operands, same scales, so every backend
+    must land within fp32 noise of the rank-1 rescaled int32 GEMM."""
+    M, K, N = shape
+    a, w = make_operands("float32", M, K, N, seed=1)
+    aq, sa = Q.quantize_activations(a)
+    wq, sw = Q.quantize_weight(w)
+    c_int = np.asarray(aq, np.int64) @ np.asarray(wq, np.int64)
+    ref = np.asarray(Q.dequantize_gemm(jnp.asarray(c_int, jnp.int32),
+                                       sa, sw), np.float32)
+    pol = GemmPolicy(backend=backend, weight_dtype="int8")
+    out = np.asarray(api.linear(a, w, policy=pol), np.float32)
+    ctx = f"quantized backend={backend} shape={shape}"
+    np.testing.assert_allclose(out, ref, atol=1e-5, rtol=1e-6, err_msg=ctx)
+    # and the quantization error vs the fp product stays bounded:
+    fp = reference(a, w)
+    budget = np.abs(fp).max() * 0.05 + 1e-3
+    err = float(np.abs(out - fp).max())
+    assert err <= budget, f"{ctx}: quant error {err} > budget {budget}"
+    return ParityResult(backend, "int8(w8a8)", shape, err, True)
+
+
+def run_grid(backends: Sequence[str] = BACKENDS,
+             dtypes: Sequence[str] = DTYPES,
+             shapes: Sequence[Tuple[int, int, int]] = SHAPES,
+             *, quantized: bool = True,
+             out=sys.stdout) -> list:
+    """Sweep the full grid; returns results, raising on first failure."""
+    results = []
+    for dtype in dtypes:
+        for backend in backends:
+            for shape in shapes:
+                r = check_cell(backend, dtype, shape)
+                results.append(r)
+                print(f"parity {backend:17s} {dtype:9s} "
+                      f"{'x'.join(map(str, shape)):12s} "
+                      f"max_err={r.max_err:.2e} {r.detail}", file=out)
+    if quantized and "int8" in dtypes:
+        for backend in backends:
+            for shape in shapes[:3]:
+                r = check_quantized_cell(backend, shape)
+                results.append(r)
+                print(f"parity {backend:17s} w8a8      "
+                      f"{'x'.join(map(str, shape)):12s} "
+                      f"max_err={r.max_err:.2e}", file=out)
+    return results
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--dtypes", nargs="+", default=list(DTYPES),
+                    choices=list(DTYPES))
+    ap.add_argument("--backends", nargs="+", default=list(BACKENDS))
+    ap.add_argument("--no-quantized", action="store_true",
+                    help="skip the W8A8 weight_dtype route cells")
+    args = ap.parse_args(argv)
+    results = run_grid(args.backends, args.dtypes,
+                       quantized=not args.no_quantized)
+    print(f"parity: {len(results)} cells OK "
+          f"(backends={args.backends}, dtypes={args.dtypes})")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -44,6 +44,31 @@ def test_block_major_c_roundtrip(m, n, bm, bn):
     np.testing.assert_array_equal(np.asarray(back), c)
 
 
+@settings(max_examples=30, deadline=None)
+@given(m=dims, n=dims, k=dims, bm=blocks, bn=blocks, bk=blocks)
+def test_block_major_roundtrip_non_divisible(m, n, k, bm, bn, bk):
+    """Round-trips on shapes forced to NOT divide the block dims: the
+    zero-padding the transforms add must be exactly invisible after the
+    inverse (the ragged/odd geometries every kernel padding path relies on).
+    """
+    m, n, k = m + (0 if m % bm else 1), n + (0 if n % bn else 1), \
+        k + (0 if k % bk else 1)
+    assert m % bm and n % bn and k % bk
+    a = np.arange(m * k, dtype=np.float32).reshape(m, k)
+    b = np.arange(k * n, dtype=np.float32).reshape(k, n)
+    c = np.arange(m * n, dtype=np.float32).reshape(m, n)
+    a_bm = L.to_block_major_a(jnp.asarray(a), bm, bk)
+    b_bm = L.to_block_major_b(jnp.asarray(b), bk, bn)
+    c_bm = L.to_block_major_c(jnp.asarray(c), bm, bn)
+    # padded to full blocks ...
+    assert a_bm.shape == (L.cdiv(m, bm), L.cdiv(k, bk), bm, bk)
+    assert b_bm.shape == (L.cdiv(n, bn), L.cdiv(k, bk), bk, bn)
+    # ... and exactly invertible
+    np.testing.assert_array_equal(np.asarray(L.from_block_major_a(a_bm, m, k)), a)
+    np.testing.assert_array_equal(np.asarray(L.from_block_major_b(b_bm, k, n)), b)
+    np.testing.assert_array_equal(np.asarray(L.from_block_major_c(c_bm, m, n)), c)
+
+
 def test_block_content_matches_slice():
     """A_bm[i,k] must equal the (i,k) block slice of A — the block a kernel
     tile consumes is exactly the paper's page-aligned rectangle."""

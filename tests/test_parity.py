@@ -1,0 +1,40 @@
+"""Tier-1 gate over the cross-backend differential harness (tests/parity.py).
+
+Every (backend × dtype × shape) cell must hold: blockflow ≡ Pallas ≡ XLA ≡
+reference, exactly for int8, within per-dtype tolerances for fp — plus the
+quantized W8A8 route across all backends. New backends registered in
+core/api.py extend parity.BACKENDS and inherit this gate.
+"""
+import pytest
+
+import parity
+
+
+@pytest.mark.parametrize("backend", parity.BACKENDS)
+@pytest.mark.parametrize("dtype", parity.DTYPES)
+@pytest.mark.parametrize("shape", parity.SHAPES,
+                         ids=lambda s: "x".join(map(str, s)))
+def test_backend_dtype_parity(backend, dtype, shape):
+    parity.check_cell(backend, dtype, shape)
+
+
+@pytest.mark.parametrize("backend", parity.BACKENDS)
+@pytest.mark.parametrize("shape", parity.SHAPES[:3],
+                         ids=lambda s: "x".join(map(str, s)))
+def test_quantized_route_parity(backend, shape):
+    parity.check_quantized_cell(backend, shape)
+
+
+def test_int8_blockflow_exactly_matches_reference():
+    """Acceptance: int8 blockflow-vs-reference exact integer equality on a
+    larger-than-one-block problem (multi K-blocks exercise accumulation)."""
+    r = parity.check_cell("blockflow", "int8", (130, 24, 56))
+    assert r.detail == "exact"
+
+
+def test_grid_runner_smoke():
+    """The CLI entry CI uses must sweep a small grid end-to-end."""
+    import io
+    results = parity.run_grid(backends=("xla",), dtypes=("int8",),
+                              shapes=((8, 8, 8),), out=io.StringIO())
+    assert all(r.ok for r in results)

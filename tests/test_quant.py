@@ -1,0 +1,191 @@
+"""core/quant.py: symmetric per-channel INT8 quantization.
+
+Property tests (via hypcompat) bound the quantize→dequantize error by half
+a scale step per element; golden-value tests pin a fixed-seed quantized
+transformer forward against committed reference outputs so quantization
+regressions are caught without a TPU.
+"""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypcompat import given, settings, st
+
+from repro.core import api
+from repro.core import quant as Q
+from repro.core.plan import GemmPolicy, PackedWeight, QuantizedPackedWeight
+
+GOLDEN = os.path.join(os.path.dirname(__file__), "golden",
+                      "int8_forward.npz")
+
+
+# ---------------------------------------------------------------------------
+# Quantize → dequantize error bounds (property)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**16), k=st.integers(1, 96),
+       n=st.integers(1, 96), scale_pow=st.integers(-8, 8))
+def test_weight_roundtrip_error_half_step(seed, k, n, scale_pow):
+    """|w - dequant(quantize(w))| ≤ scale/2 per element, any magnitude."""
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.standard_normal((k, n)).astype(np.float32)
+                    * 2.0 ** scale_pow)
+    q, scales = Q.quantize_weight(w)
+    assert q.dtype == jnp.int8 and scales.shape == (n,)
+    assert int(jnp.max(jnp.abs(q.astype(jnp.int32)))) <= Q.QMAX
+    deq = Q.dequantize_weight(q, scales)
+    # half a quantization step, plus fp32 rounding slop in scale/divide/mult
+    err = np.abs(np.asarray(deq) - np.asarray(w))
+    bound = np.asarray(scales)[None, :] * (0.5 + 1e-4) + 1e-30
+    np.testing.assert_array_less(err, np.broadcast_to(bound, err.shape))
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**16), m=st.integers(1, 64),
+       k=st.integers(1, 64))
+def test_activation_roundtrip_error_half_step(seed, m, k):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((m, k)).astype(np.float32))
+    q, scales = Q.quantize_activations(x)
+    assert q.dtype == jnp.int8 and scales.shape == (m,)
+    deq = np.asarray(q, np.float32) * np.asarray(scales)[:, None]
+    err = np.abs(deq - np.asarray(x))
+    bound = np.asarray(scales)[:, None] * (0.5 + 1e-4) + 1e-30
+    np.testing.assert_array_less(err, np.broadcast_to(bound, err.shape))
+
+
+def test_zero_channels_are_safe():
+    """All-zero columns/rows quantize to exact zeros with scale 1 — no NaN
+    or division blow-up."""
+    w = jnp.zeros((16, 4), jnp.float32)
+    q, s = Q.quantize_weight(w)
+    np.testing.assert_array_equal(np.asarray(q), 0)
+    np.testing.assert_array_equal(np.asarray(s), 1.0)
+    x = jnp.zeros((3, 16), jnp.float32)
+    qa, sa = Q.quantize_activations(x)
+    np.testing.assert_array_equal(np.asarray(qa), 0)
+    np.testing.assert_array_equal(np.asarray(sa), 1.0)
+
+
+def test_per_channel_scales_isolate_columns():
+    """A huge outlier in one column must not degrade the others (the point
+    of per-channel granularity)."""
+    rng = np.random.default_rng(0)
+    w = rng.standard_normal((64, 8)).astype(np.float32)
+    w[:, 3] *= 1e4
+    q, s = Q.quantize_weight(jnp.asarray(w))
+    deq, s = np.asarray(Q.dequantize_weight(q, s)), np.asarray(s)
+    small = [c for c in range(8) if c != 3]
+    assert np.abs(deq[:, small] - w[:, small]).max() < 0.5 * s[small].max()
+
+
+# ---------------------------------------------------------------------------
+# QuantizedPackedWeight (block-major residency)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(k=st.integers(1, 130), n=st.integers(1, 140))
+def test_quantized_pack_roundtrip_non_divisible(k, n):
+    """Pack → unpack recovers the quantized weight exactly on any geometry,
+    including shapes that don't divide the block dims."""
+    rng = np.random.default_rng(k * 1000 + n)
+    w = jnp.asarray(rng.standard_normal((k, n)).astype(np.float32))
+    qw = api.pack_weight(w, GemmPolicy(), quantize="int8")
+    assert isinstance(qw, QuantizedPackedWeight)
+    assert qw.shape == (k, n) and qw.dtype == jnp.int8
+    q_ref, s_ref = Q.quantize_weight(w)
+    np.testing.assert_array_equal(np.asarray(qw.unpack_quantized()),
+                                  np.asarray(q_ref))
+    np.testing.assert_array_equal(np.asarray(qw.scales), np.asarray(s_ref))
+
+
+def test_quantized_packed_is_pytree():
+    """jit/tree_map must trace through data+scales and keep geometry static."""
+    w = jnp.asarray(np.random.default_rng(0)
+                    .standard_normal((32, 16)).astype(np.float32))
+    qw = api.pack_weight(w, GemmPolicy(), quantize="int8")
+    leaves, treedef = jax.tree_util.tree_flatten(qw)
+    assert len(leaves) == 2
+    qw2 = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert (qw2.k, qw2.n, qw2.bk, qw2.bn) == (qw.k, qw.n, qw.bk, qw.bn)
+    x = jnp.ones((4, 32), jnp.float32)
+    y = jax.jit(lambda xx, ww: api.linear(xx, ww))(x, qw)
+    np.testing.assert_allclose(np.asarray(y),
+                               np.asarray(api.linear(x, qw)),
+                               atol=1e-6)
+
+
+def test_pack_model_weights_quantize():
+    """quantize="int8" turns every projection weight into a
+    QuantizedPackedWeight; non-GEMM params pass through."""
+    from repro.configs.registry import get_smoke_config
+    from repro.models import transformer as T
+    cfg = get_smoke_config("smollm-135m", n_layers=1, vocab=32)
+    params, _ = T.init_model(jax.random.PRNGKey(0), cfg)
+    packed = api.pack_model_weights(params, quantize="int8")
+    assert isinstance(packed["head"], QuantizedPackedWeight)
+    assert isinstance(packed["layers"]["attn"]["wq"], QuantizedPackedWeight)
+    assert not isinstance(packed["embed"], (PackedWeight,
+                                            QuantizedPackedWeight))
+    # weight_dtype on the policy is the equivalent spelling
+    packed2 = api.pack_model_weights(params,
+                                     GemmPolicy(weight_dtype="int8"))
+    assert isinstance(packed2["head"], QuantizedPackedWeight)
+
+
+def test_policy_rejects_unknown_weight_dtype():
+    with pytest.raises(ValueError, match="weight_dtype"):
+        GemmPolicy(weight_dtype="int4")
+    with pytest.raises(ValueError, match="quantize"):
+        api.pack_weight(jnp.ones((8, 8)), quantize="fp8")
+
+
+def test_policy_rejects_acc_override_on_quantized_route():
+    """int8×int8 accumulates in int32 by construction; an acc_dtype
+    override would be silently ignored, so the policy refuses it."""
+    with pytest.raises(ValueError, match="acc_dtype"):
+        GemmPolicy(weight_dtype="int8", acc_dtype="float32")
+
+
+# ---------------------------------------------------------------------------
+# Golden values: fixed-seed quantized transformer forward
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def golden():
+    return np.load(GOLDEN)
+
+
+def _golden_forward(weight_dtype):
+    from repro.configs.registry import get_smoke_config
+    from repro.models import transformer as T
+    cfg = get_smoke_config("smollm-135m", n_layers=2, vocab=32)
+    params, _ = T.init_model(jax.random.PRNGKey(1234), cfg)
+    tokens = np.asarray(
+        np.random.default_rng(42).integers(0, 32, (2, 6)), np.int32)
+    batch = {"tokens": jnp.asarray(tokens)}
+    pol = GemmPolicy(weight_dtype=weight_dtype)
+    with api.use_policy(pol):
+        logits, _, _ = T.forward(params, cfg, batch)
+    return tokens, np.asarray(logits, np.float32)
+
+
+def test_golden_int8_forward(golden):
+    """The quantized forward must reproduce the committed logits within a
+    small drift budget (bf16 ulp-level differences across XLA versions),
+    and sit within the committed quantization-error budget of the fp run."""
+    tokens, q = _golden_forward("int8")
+    np.testing.assert_array_equal(tokens, golden["tokens"])
+    assert np.abs(q - golden["int8_logits"]).max() <= 1e-2
+    # quantization error vs the fp32-path logits stays bounded
+    assert np.abs(q - golden["fp_logits"]).max() <= 8e-2
+
+
+def test_golden_fp_forward_unchanged(golden):
+    """The unquantized forward pins the same committed reference — separates
+    'quantization regressed' from 'the model itself changed'."""
+    _, fp = _golden_forward(None)
+    assert np.abs(fp - golden["fp_logits"]).max() <= 1e-2

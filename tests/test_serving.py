@@ -48,6 +48,148 @@ def test_continuous_batching_slots():
     assert set(out2) == {0, 1}
 
 
+def test_interleaved_submit_leaves_other_slots_uncorrupted():
+    """Regression for the submit cache-corruption bug: the old per-slot
+    prefill ran full-batch decode with zero tokens, writing garbage K/V
+    into every other live slot's cache at its current position and
+    inflating its valid length. Admitting slot 1 mid-stream must leave
+    slot 0's greedy decode byte-identical to an uninterrupted run."""
+    cfg = get_smoke_config("smollm-135m", n_layers=2, vocab=64)
+    params, _ = T.init_model(jax.random.PRNGKey(0), cfg)
+
+    def run(interleave: bool):
+        eng = ServingEngine(cfg, params,
+                            ServeConfig(batch_slots=2, max_len=32))
+        assert eng.submit([1, 2, 3]) == 0
+        outs = []
+        for i in range(6):
+            if interleave and i == 2:
+                assert eng.submit([4, 5]) == 1
+            outs.append(eng.step()[0])
+        return outs
+
+    assert run(False) == run(True)
+
+
+def test_submit_masked_prefill_matches_generate_cache_state():
+    """After submit, the admitted slot's cache length equals its prompt
+    length and no other slot's length moved (the masked-prefill contract)."""
+    import numpy as _np
+    cfg = get_smoke_config("smollm-135m", n_layers=2, vocab=64)
+    params, _ = T.init_model(jax.random.PRNGKey(0), cfg)
+    eng = ServingEngine(cfg, params, ServeConfig(batch_slots=3, max_len=32))
+    eng.submit([7, 8, 9, 10])
+    lens = _np.asarray(eng.caches["scan"]["len"])      # (n_layers, B)
+    _np.testing.assert_array_equal(lens, [[4, 0, 0]] * lens.shape[0])
+    eng.submit([5])
+    lens = _np.asarray(eng.caches["scan"]["len"])
+    _np.testing.assert_array_equal(lens, [[4, 1, 0]] * lens.shape[0])
+
+
+def test_submit_step_matches_batched_generate():
+    """Slot-mode decode must equal the batched generate() path on the same
+    prompt token for token: submit() seeds the slot's pending token from the
+    prefill argmax (no pseudo-BOS conditioning) and step() reports it before
+    pipelining the next decode — no token of the stream is lost."""
+    cfg = get_smoke_config("smollm-135m", n_layers=2, vocab=64)
+    params, _ = T.init_model(jax.random.PRNGKey(0), cfg)
+    prompt = [3, 1, 4, 1, 5]
+    e_batch = ServingEngine(cfg, params, ServeConfig(batch_slots=1,
+                                                     max_len=32))
+    want = e_batch.generate(np.asarray([prompt], np.int32), 5)[0].tolist()
+    e_slot = ServingEngine(cfg, params, ServeConfig(batch_slots=2,
+                                                    max_len=32))
+    slot = e_slot.submit(prompt)
+    got = [e_slot.step()[slot] for _ in range(5)]
+    assert got == want
+    assert e_slot.slot_out[slot] == want
+
+
+def test_recycled_slot_restarts_clean():
+    """A retired slot must be recycled from position 0 with its valid
+    length zeroed — the new request's output equals a fresh engine's."""
+    cfg = get_smoke_config("smollm-135m", n_layers=2, vocab=64)
+    params, _ = T.init_model(jax.random.PRNGKey(0), cfg)
+    sc = ServeConfig(batch_slots=1, max_len=16)
+    eng = ServingEngine(cfg, params, sc)
+    eng.submit([9, 8, 7])
+    while eng.slot_live[0]:          # decode to retirement at max_len
+        eng.step()
+    assert eng.slot_pos[0] >= sc.max_len - 1
+    slot = eng.submit([1, 2, 3, 4])  # recycle
+    assert slot == 0 and eng.slot_pos[0] == 4
+    for _ in range(3):
+        eng.step()
+    fresh = ServingEngine(cfg, params, sc)
+    fresh.submit([1, 2, 3, 4])
+    for _ in range(3):
+        fresh.step()
+    assert eng.slot_out[0] == fresh.slot_out[0]
+
+
+def test_submit_rejects_multislot_ssm():
+    """SSD/conv recurrent state carries no positions, so masked single-slot
+    prefill cannot protect concurrent slots — multi-slot submit() must
+    refuse rather than corrupt silently. With batch_slots=1 there is no
+    other slot to corrupt, so the single-slot case still serves."""
+    cfg = get_smoke_config("mamba2-1.3b", n_layers=2, vocab=64)
+    params, _ = T.init_model(jax.random.PRNGKey(0), cfg)
+    eng = ServingEngine(cfg, params, ServeConfig(batch_slots=2, max_len=32))
+    with pytest.raises(NotImplementedError, match="SSM"):
+        eng.submit([1, 2, 3])
+    solo = ServingEngine(cfg, params, ServeConfig(batch_slots=1, max_len=32))
+    assert solo.submit([1, 2, 3]) == 0
+    assert set(solo.step()) == {0}
+
+
+def test_submit_rejects_oversized_prompt():
+    cfg = get_smoke_config("smollm-135m", n_layers=1, vocab=64)
+    params, _ = T.init_model(jax.random.PRNGKey(0), cfg)
+    eng = ServingEngine(cfg, params, ServeConfig(batch_slots=1, max_len=8))
+    with pytest.raises(ValueError, match="prompt length"):
+        eng.submit(list(range(8)))
+    with pytest.raises(ValueError, match="prompt length"):
+        eng.submit([])
+
+
+def test_weight_dtype_implies_quantize_at_pack():
+    """weight_dtype without pack_weights must still quantize once at engine
+    build — quantizing inside the jitted decode would redo the O(K·N) work
+    per token."""
+    from repro.core.plan import QuantizedPackedWeight
+    cfg = get_smoke_config("smollm-135m", n_layers=1, vocab=64)
+    params, _ = T.init_model(jax.random.PRNGKey(0), cfg)
+    eng = ServingEngine(cfg, params, ServeConfig(
+        batch_slots=1, max_len=16, weight_dtype="int8"))
+    assert isinstance(eng.params["head"], QuantizedPackedWeight)
+
+
+def test_quantized_packed_engine_matches_fp_greedy():
+    """ServeConfig(pack_weights=True, weight_dtype="int8"): every projection
+    weight becomes a resident QuantizedPackedWeight and greedy decode at
+    temperature 0 tracks the unquantized engine. Empirically the smoke
+    config is token-identical on the reference platform; the asserted
+    floor is a 90% top-1 agreement rate so ulp-level drift across
+    jax/XLA versions cannot flake the gate (see docs/quant.md)."""
+    from repro.core.plan import GemmPolicy, QuantizedPackedWeight
+    cfg = get_smoke_config("smollm-135m", n_layers=2, vocab=64)
+    params, _ = T.init_model(jax.random.PRNGKey(0), cfg)
+    prompts = np.random.default_rng(3).integers(0, 64, (2, 6)).astype(np.int32)
+    pol = GemmPolicy(backend="blockflow")
+    e_fp = ServingEngine(cfg, params, ServeConfig(
+        batch_slots=2, max_len=32, gemm=pol))
+    e_q = ServingEngine(cfg, params, ServeConfig(
+        batch_slots=2, max_len=32, gemm=pol, pack_weights=True,
+        weight_dtype="int8"))
+    assert isinstance(e_q.params["head"], QuantizedPackedWeight)
+    assert isinstance(e_q.params["layers"]["attn"]["wq"],
+                      QuantizedPackedWeight)
+    o_fp = e_fp.generate(prompts, 8)
+    o_q = e_q.generate(prompts, 8)
+    agreement = float((o_fp == o_q).mean())
+    assert agreement >= 0.9, f"top-1 agreement {agreement} < 0.9"
+
+
 def test_packed_resident_weights_match_row_major():
     """ServeConfig(pack_weights=True) lays every projection weight out
     block-major once at engine build (the paper's Fig. 5 deployment shape);
