@@ -9,8 +9,9 @@ from __future__ import annotations
 import os
 import sys
 
-from benchmarks import (gemm_dtype_sweep, gemm_size_sweep, interconnect_sweep,
-                        roofline_table, runtime_breakdown, transformer_e2e)
+from benchmarks import (attention_sweep, gemm_dtype_sweep, gemm_size_sweep,
+                        interconnect_sweep, roofline_table, runtime_breakdown,
+                        transformer_e2e)
 from benchmarks.common import dump_csv
 
 SUITES = {
@@ -20,6 +21,7 @@ SUITES = {
     "fig8": runtime_breakdown.run,
     "fig9": interconnect_sweep.run,
     "roofline": roofline_table.run,
+    "attention": attention_sweep.run,
 }
 
 

@@ -33,6 +33,13 @@ route (core/quant.py): int8 blocks + per-channel scales
 (:class:`~repro.core.quant.QuantizedPackedWeight`), int32 accumulation,
 dequant fused into the C-block flush on the block-major backends.
 
+Attention has the same shape: :func:`attention` routes every model
+attention call through an :class:`~repro.core.plan.AttentionPolicy` and its
+own backend registry — ``fused`` (the offset-aware flash Pallas kernel,
+kernels/flash_attention.py), ``fused_interpret`` (CPU validation), and
+``unfused`` (the paper's §4.4 einsum + host-softmax split). Pin with
+:func:`use_attention_policy`; see docs/attention.md.
+
 Migration from the old stringly-typed API (kept as deprecation shims for one
 release): ``gemm_backend("xla")`` → ``use_policy(GemmPolicy(backend="xla"))``;
 ``matmul(..., mode="dc")`` → ``GemmPolicy(mode="dc")``. See docs/api.md.
@@ -54,9 +61,11 @@ from repro.core import plan as P
 from repro.core import quant as Q
 from repro.core.plan import (  # re-exported: the public policy surface
     GemmPolicy, ExecutionPlan, PackedWeight, QuantizedPackedWeight,
-    pack_weight, pack_model_weights,
+    AttentionPolicy, pack_weight, pack_model_weights,
     plan, plan_cache_info, plan_cache_clear, register_backend,
     unregister_backend, registered_backends,
+    register_attention_backend, unregister_attention_backend,
+    registered_attention_backends,
 )
 
 __all__ = [
@@ -66,6 +75,10 @@ __all__ = [
     "register_backend", "unregister_backend", "registered_backends",
     "matmul", "linear", "use_policy", "current_policy", "resolved_backend",
     "prefers_einsum", "gemm_backend", "current_backend",
+    "AttentionPolicy", "attention", "use_attention_policy",
+    "current_attention_policy", "resolved_attention_backend",
+    "register_attention_backend", "unregister_attention_backend",
+    "registered_attention_backends",
 ]
 
 _state = threading.local()
@@ -93,6 +106,32 @@ def use_policy(policy: GemmPolicy):
 def resolved_backend(policy: Optional[GemmPolicy] = None) -> str:
     """Registry name the active (or given) policy resolves to."""
     return (policy or current_policy()).resolved_backend()
+
+
+def current_attention_policy() -> AttentionPolicy:
+    """The active AttentionPolicy (innermost use_attention_policy, else the
+    default — backend "auto": fused on TPU, unfused elsewhere)."""
+    stack = getattr(_state, "attn_policies", None)
+    return stack[-1] if stack else AttentionPolicy()
+
+
+@contextlib.contextmanager
+def use_attention_policy(policy: AttentionPolicy):
+    """Pin the active attention policy for the enclosed region
+    (thread-local, mirrors :func:`use_policy`)."""
+    stack = getattr(_state, "attn_policies", None)
+    if stack is None:
+        stack = _state.attn_policies = []
+    stack.append(policy)
+    try:
+        yield policy
+    finally:
+        stack.pop()
+
+
+def resolved_attention_backend(policy: Optional[AttentionPolicy] = None) -> str:
+    """Registry name the active (or given) attention policy resolves to."""
+    return (policy or current_attention_policy()).resolved_backend()
 
 
 def prefers_einsum(policy: Optional[GemmPolicy] = None) -> bool:
@@ -256,6 +295,100 @@ def linear(x: jax.Array, w: Union[jax.Array, PackedWeight,
     if bias is not None:
         y = y + bias
     return y
+
+
+# ---------------------------------------------------------------------------
+# Attention: policy-selectable fused/unfused execution (docs/attention.md)
+# ---------------------------------------------------------------------------
+
+def _unfused_attention(q, k, v, *, q_positions, kv_valid_len, causal, scale,
+                       soft_cap, policy):
+    """The einsum + host-softmax baseline (the paper's §4.4 split: GEMMs on
+    the accelerator, softmax on the host). GQA via reshape; score/value
+    contractions follow the ambient *GEMM* policy — einsum when the resolved
+    GEMM backend consumes batched contractions natively, the batched
+    MatrixFlow kernel otherwise."""
+    B, Sq, H, Dk = q.shape
+    T, Hkv = k.shape[1], k.shape[2]
+    rep = H // Hkv
+    qg = q.reshape(B, Sq, Hkv, rep, Dk)
+    if prefers_einsum():
+        logits = jnp.einsum("bqgrd,bkgd->bgrqk", qg, k,
+                            preferred_element_type=jnp.float32)
+    else:  # MatrixFlow path: fold (B,Hkv,rep) into the vmapped batch
+        qm = qg.transpose(0, 2, 3, 1, 4).reshape(B * Hkv * rep, Sq, Dk)
+        km = (jnp.repeat(k.transpose(0, 2, 1, 3), rep, axis=1)
+              .reshape(B * Hkv * rep, T, Dk))
+        logits = matmul(qm, km.transpose(0, 2, 1), out_dtype=jnp.float32)
+        logits = logits.reshape(B, Hkv, rep, Sq, T)
+    logits = logits.astype(jnp.float32) * scale
+    if soft_cap:
+        logits = soft_cap * jnp.tanh(logits / soft_cap)
+    kv_pos = jnp.arange(T)[None, None, :]                     # (1,1,T)
+    valid = kv_pos < kv_valid_len[:, None, None]              # (B,1,T)
+    if causal:
+        valid = valid & (kv_pos <= q_positions[:, :, None])   # (B,Sq,T)
+    valid = jnp.broadcast_to(valid, (B, Sq, T))[:, None, None]  # (B,1,1,Sq,T)
+    logits = jnp.where(valid, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)                   # host-side op
+    # fully-masked rows → zeros (the shared contract with the fused kernel)
+    probs = jnp.where(valid, probs, 0.0)
+    if prefers_einsum():
+        out = jnp.einsum("bgrqk,bkgd->bqgrd", probs.astype(v.dtype), v)
+    else:
+        pm = probs.reshape(B * Hkv * rep, Sq, T).astype(v.dtype)
+        vm = (jnp.repeat(v.transpose(0, 2, 1, 3), rep, axis=1)
+              .reshape(B * Hkv * rep, T, v.shape[-1]))
+        out = matmul(pm, vm)
+        out = (out.reshape(B, Hkv, rep, Sq, v.shape[-1])
+               .transpose(0, 3, 1, 2, 4))
+    return out.reshape(B, Sq, H, v.shape[-1])
+
+
+def _make_fused_attention(interpret: bool):
+    def fused_attention(q, k, v, *, q_positions, kv_valid_len, causal, scale,
+                        soft_cap, policy):
+        from repro.kernels import ops  # lazy: pallas import
+        return ops.mha(q, k, v, causal=causal, scale=scale,
+                       soft_cap=soft_cap, q_positions=q_positions,
+                       kv_valid_len=kv_valid_len,
+                       impl="interpret" if interpret else "pallas",
+                       block_q=policy.block_q, block_k=policy.block_k)
+    return fused_attention
+
+
+register_attention_backend("unfused", _unfused_attention)
+register_attention_backend("fused", _make_fused_attention(interpret=False))
+register_attention_backend("fused_interpret",
+                           _make_fused_attention(interpret=True))
+
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+              q_positions: jax.Array,
+              kv_valid_len: jax.Array,
+              causal: bool = True,
+              scale: Optional[float] = None,
+              soft_cap: Optional[float] = None,
+              policy: Optional[AttentionPolicy] = None) -> jax.Array:
+    """Scaled-dot-product attention through the active AttentionPolicy.
+
+    Model-layout operands: q (B,Sq,H,Dk), k (B,T,Hkv,Dk), v (B,T,Hkv,Dv),
+    with GQA/MQA expressed by Hkv dividing H. Every backend implements one
+    contract (see kernels/ref.py::mha_ref): key j of batch row b is visible
+    to query i iff ``j < kv_valid_len[b]`` and, when causal,
+    ``j <= q_positions[b, i]``; query rows with no visible key — serving's
+    masked position −1 slots — return zeros.
+
+    q_positions: (B, Sq) absolute positions of the queries (int32).
+    kv_valid_len: (B,) populated keys/cache slots per batch row.
+    """
+    pol = policy if policy is not None else current_attention_policy()
+    spec = P.get_attention_backend_spec(pol.resolved_backend())
+    if scale is None:
+        scale = q.shape[-1] ** -0.5
+    return spec.fn(q, k, v, q_positions=q_positions,
+                   kv_valid_len=kv_valid_len, causal=causal, scale=scale,
+                   soft_cap=soft_cap, policy=pol)
 
 
 # ---------------------------------------------------------------------------

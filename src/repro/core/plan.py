@@ -46,6 +46,10 @@ __all__ = [
     "register_backend", "unregister_backend", "get_backend_spec",
     "registered_backends", "resolve_backend",
     "pack_weight", "pack_model_weights", "layout_for_packed",
+    "AttentionPolicy", "AttentionBackendSpec",
+    "register_attention_backend", "unregister_attention_backend",
+    "get_attention_backend_spec", "registered_attention_backends",
+    "resolve_attention_backend",
 ]
 
 DEFAULT_VMEM_BUDGET = 96 * 1024 * 1024
@@ -177,6 +181,104 @@ def get_backend_spec(name: str) -> BackendSpec:
 
 def registered_backends() -> Tuple[str, ...]:
     return tuple(sorted(_REGISTRY))
+
+
+# ---------------------------------------------------------------------------
+# Attention policy + backend registry (mirrors the GEMM registry above)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class AttentionPolicy:
+    """How attention executes. Frozen → hashable → jit-static.
+
+    backend   registry name, or "auto" (fused Pallas kernel on TPU, the
+              unfused einsum + host-softmax baseline elsewhere — mirroring
+              the GEMM registry's pallas/xla auto split).
+    block_q   flash-kernel query-block rows (fused backends only).
+    block_k   flash-kernel key-block columns (fused backends only).
+
+    All backends share one contract (kernels/ref.py::mha_ref): key j of
+    batch row b is visible to query i iff ``j < kv_valid_len[b]`` and, when
+    causal, ``j <= q_positions[b, i]``; rows with no visible key (serving's
+    masked position −1 slots) produce zeros.
+    """
+
+    backend: str = "auto"
+    block_q: int = 128
+    block_k: int = 128
+
+    def resolved_backend(self) -> str:
+        return resolve_attention_backend(self.backend)
+
+
+# Common pinned policies (tests, benchmarks, CLI flags).
+FUSED = AttentionPolicy(backend="fused")
+FUSED_INTERPRET = AttentionPolicy(backend="fused_interpret")
+UNFUSED = AttentionPolicy(backend="unfused")
+
+
+def resolve_attention_backend(name: str) -> str:
+    """Map "auto" to the platform default; pass anything else through."""
+    if name != "auto":
+        return name
+    try:
+        plat = jax.default_backend()
+    except Exception:  # pragma: no cover
+        plat = "cpu"
+    return "fused" if plat == "tpu" else "unfused"
+
+
+# An attention backend implementation:
+#   fn(q, k, v, *, q_positions, kv_valid_len, causal, scale, soft_cap,
+#      policy) -> out
+# with model-layout operands: q (B,Sq,H,Dk), k (B,T,Hkv,Dk), v (B,T,Hkv,Dv),
+# returning (B,Sq,H,Dv).
+AttentionBackendFn = Callable[..., jax.Array]
+
+
+@dataclasses.dataclass(frozen=True)
+class AttentionBackendSpec:
+    name: str
+    fn: AttentionBackendFn
+
+
+_ATTN_REGISTRY: Dict[str, AttentionBackendSpec] = {}
+
+
+def register_attention_backend(name: str, fn: AttentionBackendFn, *,
+                               overwrite: bool = False) -> AttentionBackendSpec:
+    """Register an attention backend under ``name`` (the
+    AttentionPolicy.backend key)."""
+    spec = AttentionBackendSpec(name=name, fn=fn)
+    with _registry_lock:
+        if name in _ATTN_REGISTRY and not overwrite:
+            raise ValueError(f"attention backend {name!r} already registered "
+                             f"(pass overwrite=True to replace)")
+        _ATTN_REGISTRY[name] = spec
+    return spec
+
+
+def unregister_attention_backend(name: str) -> None:
+    with _registry_lock:
+        _ATTN_REGISTRY.pop(name, None)
+
+
+def get_attention_backend_spec(name: str) -> AttentionBackendSpec:
+    spec = _ATTN_REGISTRY.get(resolve_attention_backend(name))
+    if spec is None:
+        # Built-ins are registered by repro.core.api at import time; make
+        # plan.py usable standalone by pulling them in on first miss.
+        import repro.core.api  # noqa: F401  (registers built-in backends)
+        spec = _ATTN_REGISTRY.get(resolve_attention_backend(name))
+    if spec is None:
+        raise ValueError(
+            f"unknown attention backend {name!r}; registered: "
+            f"{sorted(_ATTN_REGISTRY)}")
+    return spec
+
+
+def registered_attention_backends() -> Tuple[str, ...]:
+    return tuple(sorted(_ATTN_REGISTRY))
 
 
 # ---------------------------------------------------------------------------

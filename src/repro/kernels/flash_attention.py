@@ -15,6 +15,25 @@ recurrence). GQA is expressed in the BlockSpec index map (kv head = h//rep),
 so no repeated K/V materialization in HBM — the MatrixFlow-style "fetch the
 block you need, once" property.
 
+Decode/serving semantics (the offset-aware extension):
+
+  * ``q_positions`` (B, Sq) gives each query row its absolute sequence
+    position. Causal masking compares key index against *that* position, so
+    a single query (Sq=1) against a long KV cache attends exactly its
+    prefix. The default — ``arange(Sq) + (Sk - Sq)`` — is bottom-right
+    aligned, matching :func:`repro.kernels.ref.mha_ref`.
+  * ``kv_valid_len`` (B,) bounds the populated keys per batch row: padded /
+    not-yet-written cache slots contribute exactly zero weight, causal or
+    not (this replaces the old ``Sk % block_k == 0`` ValueError for ragged
+    non-causal keys).
+  * A query row with *no* valid key (e.g. the serving engine's masked
+    position −1 slots) produces an all-zero output row — deterministic and
+    finite, never NaN.
+
+Key blocks entirely outside a row-block's reach (beyond the causal frontier
+or past every row's valid length) are skipped at runtime — decode against a
+mostly-empty cache touches only the populated blocks.
+
 Validated in interpret mode against kernels/ref.py::mha_ref.
 """
 from __future__ import annotations
@@ -38,9 +57,11 @@ except ImportError:  # pragma: no cover
 NEG_INF = -1e30
 
 
-def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
-            scale: float, causal: bool, bq: int, bk: int, nk: int):
-    iq, ik = pl.program_id(2), pl.program_id(3)
+def _kernel(qpos_ref, kvlen_ref, q_ref, k_ref, v_ref, o_ref,
+            m_ref, l_ref, acc_ref, *,
+            scale: float, causal: bool, soft_cap: Optional[float],
+            bq: int, bk: int, nk: int):
+    ik = pl.program_id(3)
 
     @pl.when(ik == 0)
     def _init():
@@ -48,8 +69,13 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
         l_ref[...] = jnp.zeros_like(l_ref)
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    # causal: skip key blocks strictly in the future of the whole q block
-    run = (iq * bq + bq - 1 >= ik * bk) if causal else True
+    qpos = qpos_ref[0]                                    # (bq, 1) int32
+    kvlen = kvlen_ref[0, 0]                               # scalar int32
+    # Skip key blocks no row of this q block can see: past every valid key,
+    # or (causal) strictly in the future of the furthest query position.
+    run = ik * bk < kvlen
+    if causal:
+        run = jnp.logical_and(run, ik * bk <= jnp.max(qpos))
 
     @pl.when(run)
     def _step():
@@ -59,13 +85,18 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
         s = jax.lax.dot_general(
             q, k, (((1,), (1,)), ((), ())),
             preferred_element_type=jnp.float32) * scale   # (bq, bk)
+        if soft_cap:
+            s = soft_cap * jnp.tanh(s / soft_cap)
+        cols = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        valid = cols < kvlen                              # KV length mask
         if causal:
-            rows = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
-            cols = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
-            s = jnp.where(cols <= rows, s, NEG_INF)
+            valid = jnp.logical_and(valid, cols <= qpos)  # per-row offset
+        s = jnp.where(valid, s, NEG_INF)
         m_prev = m_ref[...]                               # (bq, 1)
         m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
-        p = jnp.exp(s - m_new)                            # (bq, bk)
+        # p is zeroed where invalid (not just -inf-masked): for a fully
+        # masked row m_new stays NEG_INF and exp(s - m_new) would be 1.
+        p = jnp.where(valid, jnp.exp(s - m_new), 0.0)     # (bq, bk)
         corr = jnp.exp(m_prev - m_new)                    # (bq, 1)
         l_ref[...] = l_ref[...] * corr + p.sum(axis=1, keepdims=True)
         acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
@@ -75,21 +106,26 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
 
     @pl.when(ik == nk - 1)
     def _flush():
+        # l == 0 (no valid key anywhere) → zero output row, not NaN.
         o_ref[0, 0] = (acc_ref[...]
                        / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("causal", "scale", "block_q", "block_k", "interpret"),
+    static_argnames=("causal", "scale", "soft_cap", "block_q", "block_k",
+                     "interpret"),
 )
 def flash_attention(
     q: jax.Array,             # (B, H, Sq, D)
     k: jax.Array,             # (B, Hkv, Sk, D)
     v: jax.Array,             # (B, Hkv, Sk, Dv)
+    q_positions: Optional[jax.Array] = None,   # (B, Sq) int32; <0 → masked
+    kv_valid_len: Optional[jax.Array] = None,  # (B,) int32; None → Sk
     *,
     causal: bool = True,
     scale: Optional[float] = None,
+    soft_cap: Optional[float] = None,
     block_q: int = 128,
     block_k: int = 128,
     interpret: bool = False,
@@ -100,26 +136,38 @@ def flash_attention(
     rep = H // Hkv
     scale = scale if scale is not None else 1.0 / math.sqrt(D)
     bq, bk = min(block_q, Sq), min(block_k, Sk)
-    # pad S to block multiples (masked out by the causal/validity logic)
+    if q_positions is None:
+        # bottom-right aligned (mha_ref's tril(k=Sk-Sq)); == arange for Sq==Sk
+        q_positions = jnp.broadcast_to(
+            jnp.arange(Sq, dtype=jnp.int32) + (Sk - Sq), (B, Sq))
+    q_positions = q_positions.astype(jnp.int32)
+    if kv_valid_len is None:
+        kv_valid_len = jnp.full((B,), Sk, jnp.int32)
+    kv_valid_len = jnp.minimum(kv_valid_len.astype(jnp.int32), Sk)
+
+    # pad S to block multiples; padded queries carry position -1 (fully
+    # masked → zero rows, sliced off below) and padded keys sit at indices
+    # >= Sk >= kv_valid_len (zero weight via the KV length mask).
     pq = (-Sq) % bq
     pk = (-Sk) % bk
     if pq:
         q = jnp.pad(q, ((0, 0), (0, 0), (0, pq), (0, 0)))
+        q_positions = jnp.pad(q_positions, ((0, 0), (0, pq)),
+                              constant_values=-1)
     if pk:
-        # padded keys get +inf-masked via causality only when causal; for
-        # non-causal, mask by padding k with NEG_INF-producing zeros and
-        # relying on the extra keys' scores: instead explicitly disallow.
         k = jnp.pad(k, ((0, 0), (0, 0), (0, pk), (0, 0)))
         v = jnp.pad(v, ((0, 0), (0, 0), (0, pk), (0, 0)))
     Sq_p, Sk_p = Sq + pq, Sk + pk
     nq, nk = Sq_p // bq, Sk_p // bk
 
-    if pk and not causal:
-        raise ValueError("non-causal flash requires Sk % block_k == 0")
+    # (B, Sq_p, 1) so the kernel reads a (bq, 1) tile that broadcasts
+    # directly against the (bq, bk) score tile; (B, 1) for the scalar len.
+    qpos_in = q_positions[..., None]
+    kvlen_in = kv_valid_len[:, None]
 
     grid = (B, H, nq, nk)
     kernel = functools.partial(_kernel, scale=scale, causal=causal,
-                               bq=bq, bk=bk, nk=nk)
+                               soft_cap=soft_cap, bq=bq, bk=bk, nk=nk)
     kwargs = {}
     if _CompilerParams is not None and not interpret:
         kwargs["compiler_params"] = _CompilerParams(
@@ -129,6 +177,8 @@ def flash_attention(
         kernel,
         grid=grid,
         in_specs=[
+            pl.BlockSpec((1, bq, 1), lambda b, h, i, j: (b, i, 0)),
+            pl.BlockSpec((1, 1), lambda b, h, i, j: (b, 0)),
             pl.BlockSpec((1, 1, bq, D), lambda b, h, i, j: (b, h, i, 0)),
             pl.BlockSpec((1, 1, bk, D),
                          lambda b, h, i, j, rep=rep: (b, h // rep, j, 0)),
@@ -144,5 +194,5 @@ def flash_attention(
         ],
         interpret=interpret,
         **kwargs,
-    )(q, k, v)
+    )(qpos_in, kvlen_in, q, k, v)
     return out[:, :, :Sq]

@@ -54,18 +54,26 @@ def gemm_preformatted(a_bm: jax.Array, b_bm: jax.Array, *, blk: L.BlockLayout,
 
 
 def mha(q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool = True,
-        scale: Optional[float] = None, impl: Optional[str] = None,
+        scale: Optional[float] = None, soft_cap: Optional[float] = None,
+        q_positions: Optional[jax.Array] = None,
+        kv_valid_len: Optional[jax.Array] = None,
+        impl: Optional[str] = None,
         block_q: int = 128, block_k: int = 128) -> jax.Array:
     """Fused attention over (B, S, H, D)-layout tensors (model layout).
 
-    impl 'ref' uses the pure-jnp oracle; otherwise the Pallas flash kernel
-    (interpret mode off-TPU)."""
+    q_positions (B, Sq) / kv_valid_len (B,) carry the decode/serving offset
+    and cache-length semantics (see kernels/flash_attention.py). impl 'ref'
+    uses the pure-jnp oracle; otherwise the Pallas flash kernel (interpret
+    mode off-TPU)."""
     impl = impl or ("pallas" if _on_tpu() else "interpret")
     if impl == "ref":
-        return ref.mha_ref(q, k, v, causal=causal, scale=scale)
+        return ref.mha_ref(q, k, v, causal=causal, scale=scale,
+                           soft_cap=soft_cap, q_positions=q_positions,
+                           kv_valid_len=kv_valid_len)
     out = flash_attention(
         q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
-        v.transpose(0, 2, 1, 3), causal=causal, scale=scale,
+        v.transpose(0, 2, 1, 3), q_positions, kv_valid_len,
+        causal=causal, scale=scale, soft_cap=soft_cap,
         block_q=block_q, block_k=block_k,
         interpret=(impl == "interpret"))
     return out.transpose(0, 2, 1, 3)

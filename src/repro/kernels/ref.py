@@ -38,10 +38,21 @@ def mha_ref(
     *,
     causal: bool = True,
     scale: Optional[float] = None,
+    soft_cap: Optional[float] = None,
+    q_positions: Optional[jax.Array] = None,   # (B, Sq) int32; <0 → masked
+    kv_valid_len: Optional[jax.Array] = None,  # (B,) int32; None → Sk
 ) -> jax.Array:
-    """Reference grouped-query attention, fp32 softmax."""
+    """Reference grouped-query attention, fp32 softmax.
+
+    Offset/length semantics (the decode/serving contract shared with the
+    flash kernel and the policy backends): key j of batch row b is visible
+    to query i iff ``j < kv_valid_len[b]`` and, when causal,
+    ``j <= q_positions[b, i]``. The default positions are bottom-right
+    aligned (``arange(Sq) + Sk - Sq``). A query row with no visible key —
+    e.g. a serving slot masked at position −1 — returns an all-zero row.
+    """
     B, Sq, H, D = q.shape
-    Hkv = k.shape[2]
+    Sk, Hkv = k.shape[1], k.shape[2]
     assert H % Hkv == 0
     rep = H // Hkv
     if rep > 1:
@@ -49,11 +60,21 @@ def mha_ref(
         v = jnp.repeat(v, rep, axis=2)
     scale = scale if scale is not None else D ** -0.5
     logits = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+    if soft_cap:
+        logits = soft_cap * jnp.tanh(logits / soft_cap)
+    if q_positions is None:
+        q_positions = jnp.broadcast_to(
+            jnp.arange(Sq, dtype=jnp.int32) + (Sk - Sq), (B, Sq))
+    if kv_valid_len is None:
+        kv_valid_len = jnp.full((B,), Sk, jnp.int32)
+    kv_pos = jnp.arange(Sk)[None, None, :]                    # (1,1,Sk)
+    valid = kv_pos < kv_valid_len[:, None, None]              # (B,1,Sk)
     if causal:
-        Sk = k.shape[1]
-        mask = jnp.tril(jnp.ones((Sq, Sk), bool), k=Sk - Sq)
-        logits = jnp.where(mask[None, None], logits, -jnp.inf)
+        valid = valid & (kv_pos <= q_positions[:, :, None])   # (B,Sq,Sk)
+    valid = jnp.broadcast_to(valid, (B, Sq, Sk))[:, None]     # (B,1,Sq,Sk)
+    logits = jnp.where(valid, logits, -1e30)
     p = jax.nn.softmax(logits, axis=-1)
+    p = jnp.where(valid, p, 0.0)     # fully-masked rows → zeros, not uniform
     out = jnp.einsum("bhqk,bkhd->bqhd", p.astype(v.dtype), v)
     return out
 

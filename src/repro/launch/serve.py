@@ -13,7 +13,7 @@ import jax
 import numpy as np
 
 from repro.configs.registry import get_config, get_smoke_config
-from repro.core.plan import GemmPolicy
+from repro.core.plan import AttentionPolicy, GemmPolicy
 from repro.models import transformer as T
 from repro.serving.engine import ServeConfig, ServingEngine
 
@@ -40,18 +40,25 @@ def main(argv=None):
     ap.add_argument("--weight-dtype", default=None, choices=["int8"],
                     help="int8 → quantized W8A8 GEMM route (docs/quant.md); "
                          "with --pack-weights the int8 blocks stay resident")
+    ap.add_argument("--attn-backend", default="auto",
+                    help="attention backend (auto|fused|fused_interpret|"
+                         "unfused|<registered>); fused = the offset-aware "
+                         "flash kernel for prefill AND decode "
+                         "(docs/attention.md)")
     args = ap.parse_args(argv)
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     policy = GemmPolicy(backend=args.gemm_backend, mode=args.gemm_mode)
+    attn = AttentionPolicy(backend=args.attn_backend)
     print(f"[serve] arch={cfg.name} slots={args.batch_slots} "
           f"max_len={args.max_len} gemm={policy.resolved_backend()}/"
-          f"{policy.mode} packed={args.pack_weights} "
+          f"{policy.mode} attn={attn.resolved_backend()} "
+          f"packed={args.pack_weights} "
           f"weight_dtype={args.weight_dtype or 'native'}")
     params, _ = T.init_model(jax.random.PRNGKey(args.seed), cfg)
     engine = ServingEngine(cfg, params, ServeConfig(
         batch_slots=args.batch_slots, max_len=args.max_len,
-        temperature=args.temperature, gemm=policy,
+        temperature=args.temperature, gemm=policy, attention=attn,
         pack_weights=args.pack_weights, weight_dtype=args.weight_dtype))
 
     rng = np.random.default_rng(args.seed)
@@ -74,7 +81,8 @@ def main(argv=None):
         return 0
     engine2 = ServingEngine(cfg, params, ServeConfig(
         batch_slots=args.batch_slots, max_len=args.max_len, gemm=policy,
-        pack_weights=args.pack_weights, weight_dtype=args.weight_dtype))
+        attention=attn, pack_weights=args.pack_weights,
+        weight_dtype=args.weight_dtype))
     lo = max(1, min(4, args.prompt_len))
     pending = [rng.integers(0, cfg.vocab,
                             rng.integers(lo, args.prompt_len + 1))

@@ -3,11 +3,11 @@
 Every projection GEMM routes through repro.core.api under the active
 GemmPolicy; projection weights may be PackedWeights (resident block-major,
 packed once at model build — api.pack_model_weights), realizing the paper's
-Fig. 5 reuse. Attention score/value contractions go through einsum when the
-resolved backend consumes batched contractions natively (api.prefers_einsum,
-e.g. XLA) and through the batched MatrixFlow kernel otherwise — mirroring
-the paper's split where the accelerator takes all GEMMs and the host keeps
-softmax/norm/transpose (§4.4).
+Fig. 5 reuse. Attention routes through api.attention under the active
+AttentionPolicy: the fused offset-aware flash kernel (score tile stays in
+VMEM — the beyond-paper fusion), or the unfused baseline mirroring the
+paper's split where the accelerator takes all GEMMs and the host keeps
+softmax/norm/transpose (§4.4). See docs/attention.md.
 """
 from __future__ import annotations
 
@@ -65,50 +65,21 @@ def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
 
 
 # ---------------------------------------------------------------------------
-# Attention core (shared by GQA and MLA): grouped scores + weighted values
+# Attention core (shared by GQA and MLA): api.attention under the active
+# AttentionPolicy — fused flash kernel or the unfused einsum baseline.
+# _attn_core is kept as a thin alias for downstream callers.
 # ---------------------------------------------------------------------------
 
 def _attn_core(q, k, v, *, q_positions, kv_valid_len, causal, scale,
                soft_cap: Optional[float] = None):
-    """q: (B,Sq,H,Dk); k: (B,T,Hkv,Dk); v: (B,T,Hkv,Dv); GQA via reshape.
+    """q: (B,Sq,H,Dk); k: (B,T,Hkv,Dk); v: (B,T,Hkv,Dv); GQA via Hkv | H.
 
-    q_positions: (B,Sq) absolute positions of the queries.
+    q_positions: (B,Sq) absolute positions of the queries (−1 → masked row).
     kv_valid_len: number of populated cache slots (T for pure prefill).
     """
-    B, Sq, H, Dk = q.shape
-    T, Hkv = k.shape[1], k.shape[2]
-    rep = H // Hkv
-    qg = q.reshape(B, Sq, Hkv, rep, Dk)
-    if api.prefers_einsum():
-        logits = jnp.einsum("bqgrd,bkgd->bgrqk", qg, k,
-                            preferred_element_type=jnp.float32)
-    else:  # MatrixFlow path: fold (B,Hkv,rep) into the vmapped batch
-        qm = qg.transpose(0, 2, 3, 1, 4).reshape(B * Hkv * rep, Sq, Dk)
-        km = (jnp.repeat(k.transpose(0, 2, 1, 3), rep, axis=1)
-              .reshape(B * Hkv * rep, T, Dk))
-        logits = api.matmul(qm, km.transpose(0, 2, 1),
-                            out_dtype=jnp.float32)
-        logits = logits.reshape(B, Hkv, rep, Sq, T)
-    logits = logits.astype(jnp.float32) * scale
-    if soft_cap:
-        logits = soft_cap * jnp.tanh(logits / soft_cap)
-    kv_pos = jnp.arange(T)[None, None, :]                     # (1,1,T)
-    valid = kv_pos < kv_valid_len[:, None, None]              # (B,1,T)
-    if causal:
-        valid = valid & (kv_pos <= q_positions[:, :, None])   # (B,Sq,T)
-    logits = jnp.where(valid[:, None, None, :, :] if valid.ndim == 3
-                       else valid, logits, -1e30)
-    probs = jax.nn.softmax(logits, axis=-1)                   # host-side op
-    if api.prefers_einsum():
-        out = jnp.einsum("bgrqk,bkgd->bqgrd", probs.astype(v.dtype), v)
-    else:
-        pm = probs.reshape(B * Hkv * rep, Sq, T).astype(v.dtype)
-        vm = (jnp.repeat(v.transpose(0, 2, 1, 3), rep, axis=1)
-              .reshape(B * Hkv * rep, T, v.shape[-1]))
-        out = api.matmul(pm, vm)
-        out = (out.reshape(B, Hkv, rep, Sq, v.shape[-1])
-               .transpose(0, 3, 1, 2, 4))
-    return out.reshape(B, Sq, H, v.shape[-1])
+    return api.attention(q, k, v, q_positions=q_positions,
+                         kv_valid_len=kv_valid_len, causal=causal,
+                         scale=scale, soft_cap=soft_cap)
 
 
 # ---------------------------------------------------------------------------

@@ -12,7 +12,10 @@ at engine construction (api.pack_model_weights) and stays resident — the
 paper's Fig. 5 deployment shape, where serving never re-lays-out a weight.
 ``weight_dtype="int8"`` additionally quantizes at pack: weights live as
 int8 blocks + per-channel scales and GEMMs run the W8A8 route
-(core/quant.py, docs/quant.md).
+(core/quant.py, docs/quant.md). Attention execution is governed the same
+way by ServeConfig.attention (an AttentionPolicy): ``fused`` streams K/V
+blocks through the offset-aware flash kernel for both prefill and decode,
+``unfused`` keeps the paper's host-softmax split (docs/attention.md).
 
 Slot admission uses *masked* prefill/decode: batch rows at position -1
 neither write their KV cache nor advance their valid length, so one slot's
@@ -30,7 +33,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import api
-from repro.core.plan import GemmPolicy
+from repro.core.plan import AttentionPolicy, GemmPolicy
 from repro.models import transformer as T
 from repro.models.config import ModelConfig
 
@@ -44,6 +47,9 @@ class ServeConfig:
     gemm: Optional[GemmPolicy] = None   # None → the ambient/default policy
     pack_weights: bool = False          # resident block-major weights
     weight_dtype: Optional[str] = None  # "int8" → quantized W8A8 GEMM route
+    attention: Optional[AttentionPolicy] = None  # None → ambient/default
+    # (AttentionPolicy(backend="fused") routes prefill AND decode through
+    # the offset-aware flash kernel — docs/attention.md)
 
     def policy(self) -> Optional[GemmPolicy]:
         """The effective GemmPolicy: ``gemm`` with ``weight_dtype`` folded
@@ -55,27 +61,34 @@ class ServeConfig:
                                    weight_dtype=self.weight_dtype)
 
 
-def _policy_scope(policy: Optional[GemmPolicy]):
-    return api.use_policy(policy) if policy is not None \
-        else contextlib.nullcontext()
+def _policy_scope(policy: Optional[GemmPolicy],
+                  attn: Optional[AttentionPolicy] = None):
+    stack = contextlib.ExitStack()
+    if policy is not None:
+        stack.enter_context(api.use_policy(policy))
+    if attn is not None:
+        stack.enter_context(api.use_attention_policy(attn))
+    return stack
 
 
-def make_prefill_step(cfg: ModelConfig, policy: Optional[GemmPolicy] = None):
+def make_prefill_step(cfg: ModelConfig, policy: Optional[GemmPolicy] = None,
+                      attn: Optional[AttentionPolicy] = None):
     """(params, batch, caches) → (last_logits, caches). Processes the full
     prompt with causal self-attention while writing the caches."""
     def prefill_step(params, batch, caches):
-        with _policy_scope(policy):
+        with _policy_scope(policy, attn):
             logits, caches, _ = T.forward(params, cfg, batch, caches=caches,
                                           remat=False)
         return logits[:, -1], caches
     return prefill_step
 
 
-def make_decode_step(cfg: ModelConfig, policy: Optional[GemmPolicy] = None):
+def make_decode_step(cfg: ModelConfig, policy: Optional[GemmPolicy] = None,
+                     attn: Optional[AttentionPolicy] = None):
     """(params, tokens(B,1), positions(B,1), caches) → (logits, caches)."""
     def decode_step(params, tokens, positions, caches):
         batch = {"tokens": tokens, "positions": positions}
-        with _policy_scope(policy):
+        with _policy_scope(policy, attn):
             logits, caches, _ = T.forward(params, cfg, batch, caches=caches,
                                           remat=False)
         return logits[:, -1], caches
@@ -93,16 +106,31 @@ class ServingEngine:
         if sc.pack_weights or sc.weight_dtype is not None:
             params = api.pack_model_weights(params, pol)
         self.cfg, self.params, self.sc = cfg, params, sc
-        self.decode = jax.jit(make_decode_step(cfg, pol))
-        self.prefill = jax.jit(make_prefill_step(cfg, pol))
+        self.decode = jax.jit(make_decode_step(cfg, pol, sc.attention))
+        self.prefill = jax.jit(make_prefill_step(cfg, pol, sc.attention))
         self.caches = T.init_caches(cfg, sc.batch_slots, sc.max_len,
                                     jnp.dtype(sc.cache_dtype))
         self.slot_pos = np.zeros(sc.batch_slots, np.int32)
         self.slot_live = np.zeros(sc.batch_slots, bool)
         self.slot_out: List[List[int]] = [[] for _ in range(sc.batch_slots)]
-        # Next greedy token per slot, already decoded but not yet reported:
+        # Next sampled token per slot, already decoded but not yet reported:
         # seeded by submit() from the prefill logits, advanced by step().
         self.slot_next = np.zeros(sc.batch_slots, np.int32)
+        # Draining slots hold a final pending token but may not decode
+        # further (their cache is full): step() reports it, then retires —
+        # the freshly decoded last token is never silently dropped.
+        self.slot_drain = np.zeros(sc.batch_slots, bool)
+
+    def _sample(self, logits: jax.Array,
+                key: Optional[jax.Array] = None) -> jax.Array:
+        """The single sampling rule shared by generate(), submit() and
+        step(): greedy argmax at temperature 0 (or when no PRNG key is
+        supplied), softmax sampling at ServeConfig.temperature otherwise."""
+        if self.sc.temperature > 0 and key is not None:
+            return jax.random.categorical(
+                key, logits.astype(jnp.float32) / self.sc.temperature,
+                axis=-1)
+        return jnp.argmax(logits, axis=-1)
 
     def _reset_slot_caches(self, slot: int):
         """Zero a slot's valid lengths so a recycled slot starts from
@@ -135,23 +163,22 @@ class ServingEngine:
             self.params, {"tokens": jnp.asarray(prompts),
                           "positions": positions}, self.caches)
         out = []
-        tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+        key, sub = (jax.random.split(key) if key is not None
+                    else (None, None))
+        tok = self._sample(logits, sub)[:, None].astype(jnp.int32)
         for i in range(n_tokens):
             out.append(np.asarray(tok)[:, 0])
             pos = jnp.full((B, 1), S + i, jnp.int32)
             logits, self.caches = self.decode(self.params, tok, pos,
                                               self.caches)
-            if self.sc.temperature > 0 and key is not None:
-                key, sub = jax.random.split(key)
-                tok = jax.random.categorical(
-                    sub, logits / self.sc.temperature)[:, None]
-            else:
-                tok = jnp.argmax(logits, axis=-1)[:, None]
-            tok = tok.astype(jnp.int32)
+            key, sub = (jax.random.split(key) if key is not None
+                        else (None, None))
+            tok = self._sample(logits, sub)[:, None].astype(jnp.int32)
         return np.stack(out, axis=1)
 
     # -- continuous batching -------------------------------------------------
-    def submit(self, prompt: List[int]) -> Optional[int]:
+    def submit(self, prompt: List[int],
+               key: Optional[jax.Array] = None) -> Optional[int]:
         """Admit a request into a free slot; returns slot id or None.
 
         Masked single-slot prefill: the whole prompt runs as one prefill
@@ -200,34 +227,51 @@ class ServingEngine:
                           "positions": jnp.asarray(pos)}, self.caches)
         self.slot_pos[slot] = S
         self.slot_live[slot] = True
+        self.slot_drain[slot] = False
         self.slot_out[slot] = []
-        self.slot_next[slot] = int(jnp.argmax(logits[slot]))
+        self.slot_next[slot] = int(self._sample(logits[slot][None], key)[0])
         return slot
 
-    def step(self) -> Dict[int, int]:
-        """One decode iteration across all live slots; non-live slots are
-        masked out (position -1 → no cache write, no length bump).
+    def step(self, key: Optional[jax.Array] = None) -> Dict[int, int]:
+        """One decode iteration across all live slots; non-live and
+        draining slots are masked out (position -1 → no cache write, no
+        length bump).
 
         Reports each slot's *pending* token (decoded last round, or by the
         submit prefill) and pipelines the decode of the one after — the
         same order generate() uses, so slot streams match the batched path
-        token for token.
+        token for token. Sampling honors ServeConfig.temperature when a
+        PRNG ``key`` is supplied (the same _sample rule as generate()).
+
+        A slot whose cache fills (slot_pos reaches max_len — every cache
+        index written) enters a one-round *drain*: its final pending token
+        — freshly decoded last round — is still reported before the slot
+        retires, so no token of the stream is ever dropped at retirement.
         """
         if not self.slot_live.any():
             return {}
-        tok = jnp.asarray(self.slot_next)[:, None]
-        pos = jnp.asarray(np.where(self.slot_live, self.slot_pos,
-                                   -1).astype(np.int32))[:, None]
-        logits, self.caches = self.decode(self.params, tok, pos, self.caches)
-        nxt = np.asarray(jnp.argmax(logits, axis=-1))
+        decodable = self.slot_live & ~self.slot_drain
+        nxt = None
+        if decodable.any():
+            tok = jnp.asarray(self.slot_next)[:, None]
+            pos = jnp.asarray(np.where(decodable, self.slot_pos,
+                                       -1).astype(np.int32))[:, None]
+            logits, self.caches = self.decode(self.params, tok, pos,
+                                              self.caches)
+            nxt = np.asarray(self._sample(logits, key))
         out = {}
         for s in range(self.sc.batch_slots):
-            if self.slot_live[s]:
-                t = int(self.slot_next[s])
-                self.slot_out[s].append(t)
-                out[s] = t
-                self.slot_next[s] = int(nxt[s])
-                self.slot_pos[s] += 1
-                if self.slot_pos[s] >= self.sc.max_len - 1:
-                    self.slot_live[s] = False   # retire full slots
+            if not self.slot_live[s]:
+                continue
+            t = int(self.slot_next[s])
+            self.slot_out[s].append(t)
+            out[s] = t
+            if self.slot_drain[s]:      # final pending token flushed above
+                self.slot_live[s] = False
+                self.slot_drain[s] = False
+                continue
+            self.slot_next[s] = int(nxt[s])
+            self.slot_pos[s] += 1
+            if self.slot_pos[s] >= self.sc.max_len:
+                self.slot_drain[s] = True   # flush slot_next next round
         return out

@@ -1,4 +1,4 @@
-"""Cross-backend differential GEMM harness (backend × dtype × shape grid).
+"""Cross-backend differential harness (GEMM and attention grids).
 
 Every registered GEMM backend must be provably equivalent on every dtype the
 paper's MAC units cover (Table 2): the blockflow oracle (faithful Algorithm
@@ -11,11 +11,21 @@ The grid also sweeps the quantized W8A8 route (``GemmPolicy(weight_dtype=
 rank-1 dequant, so their fp32 outputs must agree bitwise-tight with the
 unfused reference formula.
 
+The **attention grid** applies the same discipline to the AttentionPolicy
+registry (docs/attention.md): every attention backend — the offset-aware
+fused flash kernel (interpret mode on CPU) and the unfused einsum +
+host-softmax baseline — must match ``kernels/ref.py::mha_ref`` on cases
+covering prefill, single-token decode against a long ragged cache, GQA
+head grouping, non-causal ragged keys, and serving's masked position −1
+rows.
+
 Used three ways:
-  * ``tests/test_parity.py`` parametrizes pytest over the grid (tier-1 gate);
-  * CI's dtype-matrix job runs ``python tests/parity.py --dtypes <dt>``;
-  * new backends/dtypes extend BACKENDS / DTYPES / SHAPES and inherit the
-    whole gate.
+  * ``tests/test_parity.py`` parametrizes pytest over the grids (tier-1
+    gate);
+  * CI's dtype-matrix job runs ``python tests/parity.py --dtypes <dt>``
+    (GEMM cells for every dtype, attention cells for the fp dtypes);
+  * new backends/dtypes/cases extend BACKENDS / DTYPES / SHAPES /
+    ATTN_BACKENDS / ATTN_CASES and inherit the whole gate.
 """
 from __future__ import annotations
 
@@ -29,7 +39,8 @@ import numpy as np
 
 from repro.core import api
 from repro.core import quant as Q
-from repro.core.plan import GemmPolicy
+from repro.core.plan import AttentionPolicy, GemmPolicy
+from repro.kernels.ref import mha_ref
 
 BACKENDS = ("xla", "blockflow", "pallas_interpret")
 DTYPES = ("float32", "bfloat16", "int8")
@@ -130,6 +141,129 @@ def check_quantized_cell(backend: str,
     return ParityResult(backend, "int8(w8a8)", shape, err, True)
 
 
+# ---------------------------------------------------------------------------
+# Attention grid (backend × dtype × case)
+# ---------------------------------------------------------------------------
+
+ATTN_BACKENDS = ("unfused", "fused_interpret")
+ATTN_DTYPES = ("float32", "bfloat16")       # fp only: scores are fp32 always
+
+# (atol, rtol) per dtype for attention outputs (post-softmax, O(1) scale).
+ATTN_TOLS = {"float32": (3e-5, 3e-5), "bfloat16": (3e-2, 3e-2)}
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnCase:
+    """One attention-grid cell: shapes plus the offset/length semantics.
+
+    q_offsets: per-batch-row position of the first query (−1 → the whole
+    row is masked, serving's position −1 contract); None → the default
+    bottom-right alignment. kv_lens: per-row valid key count; None → T.
+    """
+
+    name: str
+    B: int
+    Sq: int
+    T: int
+    H: int
+    Hkv: int
+    causal: bool = True
+    q_offsets: Optional[Tuple[int, ...]] = None
+    kv_lens: Optional[Tuple[int, ...]] = None
+
+
+ATTN_CASES = (
+    # pure prefill, MHA, block-aligned
+    AttnCase("prefill_mha", B=2, Sq=32, T=32, H=4, Hkv=4),
+    # prefill with GQA grouping and a ragged (non-block-multiple) length
+    AttnCase("prefill_gqa_ragged", B=2, Sq=33, T=33, H=4, Hkv=2),
+    # single-token decode against a long, partially filled cache (per-row
+    # offsets — the continuous-batching slots)
+    AttnCase("decode_long_cache", B=3, Sq=1, T=96, H=4, Hkv=2,
+             q_offsets=(5, 80, 37), kv_lens=(6, 81, 38)),
+    # decode batch containing masked (position −1) serving rows
+    AttnCase("decode_masked_rows", B=3, Sq=1, T=64, H=2, Hkv=1,
+             q_offsets=(12, -1, 3), kv_lens=(13, 0, 4)),
+    # chunked prefill: a short query block continuing a long cache
+    AttnCase("prefill_chunk_offset", B=2, Sq=8, T=64, H=2, Hkv=2,
+             q_offsets=(24, 40), kv_lens=(32, 48)),
+    # non-causal ragged keys (the old kernel raised ValueError here)
+    AttnCase("noncausal_ragged", B=2, Sq=17, T=45, H=2, Hkv=1, causal=False,
+             kv_lens=(45, 29)),
+)
+
+
+def make_attention_operands(case: AttnCase, dtype: str, seed: int = 0):
+    """Deterministic (q, k, v, q_positions, kv_valid_len) per cell."""
+    rng = np.random.default_rng(
+        (seed * 7919 + case.B * 1000003 + case.Sq * 1009 + case.T) % 2**32)
+    dt = jnp.dtype(dtype)
+    q = jnp.asarray(rng.standard_normal(
+        (case.B, case.Sq, case.H, 16), np.float32)).astype(dt)
+    k = jnp.asarray(rng.standard_normal(
+        (case.B, case.T, case.Hkv, 16), np.float32)).astype(dt)
+    v = jnp.asarray(rng.standard_normal(
+        (case.B, case.T, case.Hkv, 16), np.float32)).astype(dt)
+    if case.q_offsets is None:
+        q_positions = jnp.broadcast_to(
+            jnp.arange(case.Sq, dtype=jnp.int32) + (case.T - case.Sq),
+            (case.B, case.Sq))
+    else:
+        offs = np.asarray(case.q_offsets, np.int32)[:, None]
+        q_positions = jnp.asarray(
+            np.where(offs < 0, -1, offs + np.arange(case.Sq)[None, :])
+            .astype(np.int32))
+    kv_valid_len = jnp.asarray(
+        np.full((case.B,), case.T, np.int32) if case.kv_lens is None
+        else np.asarray(case.kv_lens, np.int32))
+    return q, k, v, q_positions, kv_valid_len
+
+
+def check_attention_cell(backend: str, dtype: str,
+                         case: AttnCase) -> ParityResult:
+    """One attention cell: backend output vs the mha_ref oracle, plus the
+    masked-row zero contract. Raises AssertionError with context."""
+    q, k, v, q_positions, kv_valid_len = make_attention_operands(case, dtype)
+    ref = np.asarray(mha_ref(q, k, v, causal=case.causal,
+                             q_positions=q_positions,
+                             kv_valid_len=kv_valid_len), np.float32)
+    pol = AttentionPolicy(backend=backend, block_q=32, block_k=32)
+    out = api.attention(q, k, v, q_positions=q_positions,
+                        kv_valid_len=kv_valid_len, causal=case.causal,
+                        policy=pol)
+    ctx = f"attention backend={backend} dtype={dtype} case={case.name}"
+    assert out.shape == q.shape[:3] + (v.shape[-1],), (ctx, out.shape)
+    got = np.asarray(out, np.float32)
+    atol, rtol = ATTN_TOLS[dtype]
+    np.testing.assert_allclose(got, ref, atol=atol, rtol=rtol, err_msg=ctx)
+    masked = np.asarray(q_positions)[:, 0] < 0
+    if masked.any():
+        assert np.abs(got[masked]).max() == 0.0, \
+            f"{ctx}: masked rows must be exactly zero"
+    err = float(np.abs(got - ref).max()) if got.size else 0.0
+    return ParityResult(backend, dtype, (case.B, case.Sq, case.T), err, True,
+                        case.name)
+
+
+def run_attention_grid(backends: Sequence[str] = ATTN_BACKENDS,
+                       dtypes: Sequence[str] = ATTN_DTYPES,
+                       cases: Sequence[AttnCase] = ATTN_CASES,
+                       out=sys.stdout) -> list:
+    """Sweep the attention grid; raises on first divergence."""
+    results = []
+    for dtype in dtypes:
+        if dtype not in ATTN_TOLS:
+            continue                    # integer dtypes: GEMM-only
+        for backend in backends:
+            for case in cases:
+                r = check_attention_cell(backend, dtype, case)
+                results.append(r)
+                print(f"parity {backend:17s} {dtype:9s} "
+                      f"attn:{case.name:22s} max_err={r.max_err:.2e}",
+                      file=out)
+    return results
+
+
 def run_grid(backends: Sequence[str] = BACKENDS,
              dtypes: Sequence[str] = DTYPES,
              shapes: Sequence[Tuple[int, int, int]] = SHAPES,
@@ -163,9 +297,15 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     ap.add_argument("--backends", nargs="+", default=list(BACKENDS))
     ap.add_argument("--no-quantized", action="store_true",
                     help="skip the W8A8 weight_dtype route cells")
+    ap.add_argument("--no-attention", action="store_true",
+                    help="skip the attention backend grid (runs for the fp "
+                         "dtypes in --dtypes)")
     args = ap.parse_args(argv)
     results = run_grid(args.backends, args.dtypes,
                        quantized=not args.no_quantized)
+    if not args.no_attention:
+        results += run_attention_grid(
+            dtypes=[d for d in args.dtypes if d in ATTN_TOLS])
     print(f"parity: {len(results)} cells OK "
           f"(backends={args.backends}, dtypes={args.dtypes})")
     return 0

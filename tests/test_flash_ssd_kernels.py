@@ -54,6 +54,107 @@ def test_flash_noncausal():
                                atol=2e-5, rtol=2e-5)
 
 
+def test_flash_noncausal_ragged_keys():
+    """Sk not a block multiple with a per-row KV length mask — the old
+    kernel raised ValueError here; padded key blocks must now contribute
+    exactly zero weight."""
+    B, Sq, Sk, H, D = 2, 17, 45, 2, 16
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, Sq, H, D), jnp.float32)
+    k = jax.random.normal(ks[1], (B, Sk, H, D), jnp.float32)
+    v = jax.random.normal(ks[2], (B, Sk, H, D), jnp.float32)
+    kv_len = jnp.asarray([45, 29], jnp.int32)
+    ref = mha_ref(q, k, v, causal=False, kv_valid_len=kv_len)
+    out = ops.mha(q, k, v, causal=False, kv_valid_len=kv_len,
+                  impl="interpret", block_q=32, block_k=32)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_flash_decode_offsets_long_cache():
+    """Sq=1 against a long, partially populated cache: per-row query
+    positions + valid lengths (the serving decode shape)."""
+    B, T, H, Hkv, D = 4, 128, 4, 2, 32
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, 1, H, D), jnp.float32)
+    k = jax.random.normal(ks[1], (B, T, Hkv, D), jnp.float32)
+    v = jax.random.normal(ks[2], (B, T, Hkv, D), jnp.float32)
+    qpos = jnp.asarray([[0], [17], [63], [127]], jnp.int32)
+    kv_len = jnp.asarray([1, 18, 64, 128], jnp.int32)
+    ref = mha_ref(q, k, v, causal=True, q_positions=qpos, kv_valid_len=kv_len)
+    out = ops.mha(q, k, v, causal=True, q_positions=qpos, kv_valid_len=kv_len,
+                  impl="interpret", block_q=32, block_k=32)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_flash_masked_rows_zero():
+    """Serving's position −1 rows: no valid key → exactly-zero output, no
+    NaN — and live rows in the same batch are unaffected."""
+    B, T, H, D = 3, 64, 2, 16
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, 1, H, D), jnp.float32)
+    k = jax.random.normal(ks[1], (B, T, H, D), jnp.float32)
+    v = jax.random.normal(ks[2], (B, T, H, D), jnp.float32)
+    qpos = jnp.asarray([[9], [-1], [30]], jnp.int32)
+    kv_len = jnp.asarray([10, 0, 31], jnp.int32)
+    out = np.asarray(ops.mha(q, k, v, causal=True, q_positions=qpos,
+                             kv_valid_len=kv_len, impl="interpret",
+                             block_q=32, block_k=32))
+    assert np.isfinite(out).all()
+    assert np.abs(out[1]).max() == 0.0
+    ref = np.asarray(mha_ref(q, k, v, causal=True, q_positions=qpos,
+                             kv_valid_len=kv_len))
+    np.testing.assert_allclose(out, ref, atol=2e-5, rtol=2e-5)
+
+
+def test_flash_chunked_prefill_offset_gqa():
+    """A chunk of queries continuing an existing cache (offset > 0) under
+    GQA head grouping — the serving prefill-continuation shape."""
+    B, Sq, T, H, Hkv, D = 2, 16, 96, 4, 2, 16
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, Sq, H, D), jnp.float32)
+    k = jax.random.normal(ks[1], (B, T, Hkv, D), jnp.float32)
+    v = jax.random.normal(ks[2], (B, T, Hkv, D), jnp.float32)
+    offs = jnp.asarray([24, 50], jnp.int32)
+    qpos = offs[:, None] + jnp.arange(Sq)[None, :]
+    kv_len = offs + Sq
+    ref = mha_ref(q, k, v, causal=True, q_positions=qpos, kv_valid_len=kv_len)
+    out = ops.mha(q, k, v, causal=True, q_positions=qpos, kv_valid_len=kv_len,
+                  impl="interpret", block_q=32, block_k=32)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_flash_bottom_right_aligned_default():
+    """Sq < Sk with no explicit positions: the default is bottom-right
+    aligned (query i sees keys ≤ i + Sk − Sq), matching mha_ref's tril."""
+    B, Sq, Sk, H, D = 1, 16, 64, 2, 16
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, Sq, H, D), jnp.float32)
+    k = jax.random.normal(ks[1], (B, Sk, H, D), jnp.float32)
+    v = jax.random.normal(ks[2], (B, Sk, H, D), jnp.float32)
+    ref = mha_ref(q, k, v, causal=True)
+    out = ops.mha(q, k, v, causal=True, impl="interpret",
+                  block_q=32, block_k=32)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_flash_soft_cap():
+    """Logit soft-capping (gemma2-style) folds into the fused kernel."""
+    B, S, H, D = 1, 32, 2, 16
+    ks = jax.random.split(KEY, 3)
+    q = 3.0 * jax.random.normal(ks[0], (B, S, H, D), jnp.float32)
+    k = 3.0 * jax.random.normal(ks[1], (B, S, H, D), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, H, D), jnp.float32)
+    ref = mha_ref(q, k, v, causal=True, soft_cap=20.0)
+    out = ops.mha(q, k, v, causal=True, soft_cap=20.0, impl="interpret",
+                  block_q=16, block_k=16)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
+
+
 def test_flash_bf16():
     B, S, H, D = 1, 64, 2, 32
     ks = jax.random.split(KEY, 3)

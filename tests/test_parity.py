@@ -25,6 +25,43 @@ def test_quantized_route_parity(backend, shape):
     parity.check_quantized_cell(backend, shape)
 
 
+@pytest.mark.parametrize("backend", parity.ATTN_BACKENDS)
+@pytest.mark.parametrize("dtype", parity.ATTN_DTYPES)
+@pytest.mark.parametrize("case", parity.ATTN_CASES, ids=lambda c: c.name)
+def test_attention_backend_parity(backend, dtype, case):
+    """Every attention backend (fused flash kernel in interpret mode, the
+    unfused host-softmax baseline) must match kernels/ref.py::mha_ref on
+    prefill, decode-with-offsets, GQA, ragged non-causal keys, and masked
+    serving rows — the AttentionPolicy contract (docs/attention.md)."""
+    parity.check_attention_cell(backend, dtype, case)
+
+
+def test_attention_fused_vs_unfused_direct():
+    """Fused and unfused must also agree with *each other* (not just each
+    within tolerance of the oracle) on the decode case — the cell serving
+    exercises every step."""
+    import numpy as np
+    case = parity.ATTN_CASES[2]          # decode_long_cache
+    q, k, v, qp, kl = parity.make_attention_operands(case, "float32")
+    from repro.core import api
+    from repro.core.plan import AttentionPolicy
+    outs = [np.asarray(api.attention(
+        q, k, v, q_positions=qp, kv_valid_len=kl, causal=case.causal,
+        policy=AttentionPolicy(backend=b, block_q=32, block_k=32)))
+        for b in parity.ATTN_BACKENDS]
+    np.testing.assert_allclose(outs[0], outs[1], atol=3e-5, rtol=3e-5)
+
+
+def test_attention_grid_runner_smoke():
+    """The CLI sweep CI uses must run the attention grid end-to-end."""
+    import io
+    results = parity.run_attention_grid(backends=("unfused",),
+                                        dtypes=("float32",),
+                                        cases=parity.ATTN_CASES[:1],
+                                        out=io.StringIO())
+    assert all(r.ok for r in results)
+
+
 def test_int8_blockflow_exactly_matches_reference():
     """Acceptance: int8 blockflow-vs-reference exact integer equality on a
     larger-than-one-block problem (multi K-blocks exercise accumulation)."""

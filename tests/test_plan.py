@@ -249,3 +249,73 @@ def test_policy_is_hashable_and_frozen():
     assert hash(pol) == hash(dataclasses.replace(pol))
     with pytest.raises(dataclasses.FrozenInstanceError):
         pol.backend = "xla"
+
+
+# ---------------------------------------------------------------------------
+# AttentionPolicy + attention backend registry
+# ---------------------------------------------------------------------------
+
+def test_attention_policy_hashable_and_frozen():
+    from repro.core.plan import AttentionPolicy
+    pol = AttentionPolicy(backend="fused_interpret", block_q=64)
+    assert hash(pol) == hash(dataclasses.replace(pol))
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        pol.backend = "unfused"
+
+
+def test_attention_auto_resolution_mirrors_gemm():
+    """"auto" resolves per platform like the GEMM registry: fused on TPU,
+    unfused elsewhere; explicit names pass through untouched."""
+    from repro.core.plan import AttentionPolicy, resolve_attention_backend
+    expect = "fused" if jax.default_backend() == "tpu" else "unfused"
+    assert resolve_attention_backend("auto") == expect
+    assert AttentionPolicy().resolved_backend() == expect
+    assert resolve_attention_backend("fused_interpret") == "fused_interpret"
+
+
+def test_attention_registry_builtins_and_errors():
+    assert {"fused", "fused_interpret", "unfused"} <= set(
+        P.registered_attention_backends())
+    with pytest.raises(ValueError, match="already registered"):
+        P.register_attention_backend("unfused", lambda *a, **k: None)
+    with pytest.raises(ValueError, match="unknown attention backend"):
+        P.get_attention_backend_spec("no-such-attn")
+
+
+def test_attention_registry_custom_backend_dispatch():
+    """A registered backend receives the full offset/length contract and
+    its output is returned untouched — downstream paged/sharded attention
+    implementations plug in without touching dispatch."""
+    from repro.core.plan import AttentionPolicy
+    seen = {}
+
+    def fake(q, k, v, *, q_positions, kv_valid_len, causal, scale, soft_cap,
+             policy):
+        seen.update(causal=causal, scale=scale, policy=policy)
+        return jnp.zeros(q.shape[:3] + (v.shape[-1],), q.dtype)
+
+    P.register_attention_backend("fake_attn", fake)
+    try:
+        q = jnp.ones((1, 4, 2, 8)); kv = jnp.ones((1, 4, 1, 8))
+        pol = AttentionPolicy(backend="fake_attn")
+        out = api.attention(q, kv, kv,
+                            q_positions=jnp.zeros((1, 4), jnp.int32),
+                            kv_valid_len=jnp.full((1,), 4, jnp.int32),
+                            policy=pol)
+        assert out.shape == (1, 4, 2, 8)
+        assert seen["causal"] is True and seen["policy"] is pol
+        assert seen["scale"] == pytest.approx(8 ** -0.5)
+    finally:
+        P.unregister_attention_backend("fake_attn")
+
+
+def test_use_attention_policy_nests_thread_local():
+    from repro.core.plan import AttentionPolicy
+    base = api.current_attention_policy()
+    inner = AttentionPolicy(backend="fused_interpret", block_q=32)
+    with api.use_attention_policy(inner):
+        assert api.current_attention_policy() is inner
+        with api.use_attention_policy(AttentionPolicy(backend="unfused")):
+            assert api.resolved_attention_backend() == "unfused"
+        assert api.current_attention_policy() is inner
+    assert api.current_attention_policy() == base

@@ -1,11 +1,12 @@
 """Serving engine: batched generate, continuous batching slots, greedy
-determinism."""
+determinism, fused-attention parity, retirement/temperature regressions."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.configs.registry import get_smoke_config
+from repro.core.plan import AttentionPolicy
 from repro.models import transformer as T
 from repro.serving.engine import ServeConfig, ServingEngine
 
@@ -127,6 +128,57 @@ def test_recycled_slot_restarts_clean():
     assert eng.slot_out[0] == fresh.slot_out[0]
 
 
+def test_retirement_flushes_final_token():
+    """Regression: step() used to overwrite the freshly decoded slot_next
+    when slot_pos hit max_len - 1, silently dropping the last token of
+    every retired stream. The slot must drain — report the pending token —
+    before retiring, so the slot stream is a strict prefix-match of an
+    unbounded generate() stream of the same length."""
+    cfg = get_smoke_config("smollm-135m", n_layers=2, vocab=64)
+    params, _ = T.init_model(jax.random.PRNGKey(0), cfg)
+    prompt = [1, 2, 3]
+    M = 8
+    eng = ServingEngine(cfg, params, ServeConfig(batch_slots=1, max_len=M))
+    eng.submit(prompt)
+    toks = []
+    while eng.slot_live[0]:
+        toks.append(eng.step()[0])
+    # prefill token + one decode per remaining cache slot (positions
+    # S..M-1), the last of which is flushed by the drain round
+    assert len(toks) == M - len(prompt) + 1, toks
+    big = ServingEngine(cfg, params, ServeConfig(batch_slots=1, max_len=64))
+    want = big.generate(np.asarray([prompt], np.int32),
+                        len(toks))[0].tolist()
+    assert toks == want           # nothing dropped, nothing reordered
+
+
+def test_step_honors_temperature():
+    """Regression: the continuous-batching path always did greedy argmax
+    while generate() sampled. step()/submit() take an optional PRNG key and
+    share generate()'s sampling rule."""
+    cfg = get_smoke_config("smollm-135m", n_layers=2, vocab=64)
+    params, _ = T.init_model(jax.random.PRNGKey(0), cfg)
+    sc = ServeConfig(batch_slots=1, max_len=32, temperature=2.0)
+
+    def run(seed):
+        eng = ServingEngine(cfg, params, sc)
+        s = eng.submit([1, 2, 3], key=jax.random.PRNGKey(seed))
+        return [eng.step(key=jax.random.PRNGKey(100 * seed + i))[s]
+                for i in range(8)]
+
+    sampled = run(1)
+    assert sampled == run(1)            # deterministic under the same keys
+    greedy_eng = ServingEngine(cfg, params,
+                               ServeConfig(batch_slots=1, max_len=32))
+    s = greedy_eng.submit([1, 2, 3])
+    greedy = [greedy_eng.step()[s] for i in range(8)]
+    assert sampled != greedy            # temperature actually applied
+    # without a key the tempered engine still serves (greedy fallback)
+    eng = ServingEngine(cfg, params, sc)
+    s = eng.submit([1, 2, 3])
+    assert [eng.step()[s] for i in range(8)] == greedy
+
+
 def test_submit_rejects_multislot_ssm():
     """SSD/conv recurrent state carries no positions, so masked single-slot
     prefill cannot protect concurrent slots — multi-slot submit() must
@@ -188,6 +240,89 @@ def test_quantized_packed_engine_matches_fp_greedy():
     o_q = e_q.generate(prompts, 8)
     agreement = float((o_fp == o_q).mean())
     assert agreement >= 0.9, f"top-1 agreement {agreement} < 0.9"
+
+
+def test_fused_attention_token_streams_identical():
+    """The acceptance gate: ServingEngine token streams — batched generate
+    AND submit()/step() slot streams — must be identical under the fused
+    flash-attention path and the unfused baseline."""
+    cfg = get_smoke_config("smollm-135m", n_layers=2, vocab=64)
+    params, _ = T.init_model(jax.random.PRNGKey(0), cfg)
+    prompt = [3, 1, 4, 1, 5]
+    prompts = np.random.default_rng(5).integers(0, 64, (2, 6)).astype(np.int32)
+    streams, gens = {}, {}
+    for backend in ("unfused", "fused_interpret"):
+        attn = AttentionPolicy(backend=backend, block_q=16, block_k=16)
+        eng = ServingEngine(cfg, params, ServeConfig(
+            batch_slots=2, max_len=32, attention=attn))
+        slot = eng.submit(prompt)
+        streams[backend] = [eng.step()[slot] for _ in range(6)]
+        eng2 = ServingEngine(cfg, params, ServeConfig(
+            batch_slots=2, max_len=32, attention=attn))
+        gens[backend] = eng2.generate(prompts, 5)
+    assert streams["unfused"] == streams["fused_interpret"]
+    np.testing.assert_array_equal(gens["unfused"], gens["fused_interpret"])
+
+
+def test_fused_interleaved_submit_leaves_other_slots_uncorrupted():
+    """Interleaved submit()/step() with the fused attention path enabled:
+    the masked position −1 rows must not write K/V through the fused
+    kernel — admitting slot 1 mid-stream leaves slot 0's decode
+    byte-identical to an uninterrupted run."""
+    cfg = get_smoke_config("smollm-135m", n_layers=2, vocab=64)
+    params, _ = T.init_model(jax.random.PRNGKey(0), cfg)
+    attn = AttentionPolicy(backend="fused_interpret", block_q=16, block_k=16)
+
+    def run(interleave: bool):
+        eng = ServingEngine(cfg, params, ServeConfig(
+            batch_slots=2, max_len=32, attention=attn))
+        assert eng.submit([1, 2, 3]) == 0
+        outs = []
+        for i in range(5):
+            if interleave and i == 2:
+                assert eng.submit([4, 5]) == 1
+            outs.append(eng.step()[0])
+        return outs
+
+    assert run(False) == run(True)
+
+
+def test_decode_prefill_logit_parity_fused_vs_unfused():
+    """Same tokens through (a) one full prefill and (b) prefill + cached
+    decode steps, on both attention backends: all four last-token logit
+    vectors must agree within fp tolerance — decode-vs-prefill consistency
+    of the offset/length-mask semantics, fused vs unfused."""
+    from repro.serving.engine import make_decode_step, make_prefill_step
+    cfg = get_smoke_config("smollm-135m", n_layers=2, vocab=64)
+    params, _ = T.init_model(jax.random.PRNGKey(0), cfg)
+    toks = np.asarray([[7, 3, 11, 5, 2, 9]], np.int32)
+    B, S = toks.shape
+    logits = {}
+    for backend in ("unfused", "fused_interpret"):
+        attn = AttentionPolicy(backend=backend, block_q=16, block_k=16)
+        prefill = make_prefill_step(cfg, attn=attn)
+        decode = make_decode_step(cfg, attn=attn)
+        # (a) one prefill over the whole sequence
+        caches = T.init_caches(cfg, B, 32, jnp.bfloat16)
+        full, _ = prefill(params, {
+            "tokens": jnp.asarray(toks),
+            "positions": jnp.broadcast_to(jnp.arange(S)[None], (B, S))},
+            caches)
+        # (b) prefill the prefix, then decode the rest token by token
+        caches = T.init_caches(cfg, B, 32, jnp.bfloat16)
+        cut = 3
+        out, caches = prefill(params, {
+            "tokens": jnp.asarray(toks[:, :cut]),
+            "positions": jnp.broadcast_to(jnp.arange(cut)[None], (B, cut))},
+            caches)
+        for i in range(cut, S):
+            out, caches = decode(params, jnp.asarray(toks[:, i:i + 1]),
+                                 jnp.full((B, 1), i, jnp.int32), caches)
+        logits[backend] = (np.asarray(full, np.float32),
+                           np.asarray(out, np.float32))
+    for a in logits["unfused"] + logits["fused_interpret"]:
+        np.testing.assert_allclose(a, logits["unfused"][0],
+                                   atol=5e-2, rtol=5e-2)
 
 
 def test_packed_resident_weights_match_row_major():
