@@ -11,7 +11,7 @@ import sys
 
 from benchmarks import (attention_sweep, gemm_dtype_sweep, gemm_size_sweep,
                         interconnect_sweep, roofline_table, runtime_breakdown,
-                        transformer_e2e)
+                        serving_sweep, transformer_e2e)
 from benchmarks.common import dump_csv
 
 SUITES = {
@@ -22,6 +22,7 @@ SUITES = {
     "fig9": interconnect_sweep.run,
     "roofline": roofline_table.run,
     "attention": attention_sweep.run,
+    "serving": serving_sweep.run,
 }
 
 

@@ -36,8 +36,11 @@ dequant fused into the C-block flush on the block-major backends.
 Attention has the same shape: :func:`attention` routes every model
 attention call through an :class:`~repro.core.plan.AttentionPolicy` and its
 own backend registry — ``fused`` (the offset-aware flash Pallas kernel,
-kernels/flash_attention.py), ``fused_interpret`` (CPU validation), and
-``unfused`` (the paper's §4.4 einsum + host-softmax split). Pin with
+kernels/flash_attention.py), ``fused_interpret`` (CPU validation),
+``unfused`` (the paper's §4.4 einsum + host-softmax split), and ``paged`` /
+``paged_interpret`` (the block-table paged-KV kernel,
+kernels/paged_attention.py — K/V live in a page pool and a per-request
+block table drives the fetch; docs/serving.md). Pin with
 :func:`use_attention_policy`; see docs/attention.md.
 
 Migration from the old stringly-typed API (kept as deprecation shims for one
@@ -301,13 +304,22 @@ def linear(x: jax.Array, w: Union[jax.Array, PackedWeight,
 # Attention: policy-selectable fused/unfused execution (docs/attention.md)
 # ---------------------------------------------------------------------------
 
+def _reject_paged(backend: str, block_tables):
+    if block_tables is not None:
+        raise ValueError(
+            f"attention backend {backend!r} cannot consume a paged KV cache "
+            f"(got a block table); use AttentionPolicy(backend='paged') — "
+            f"docs/serving.md")
+
+
 def _unfused_attention(q, k, v, *, q_positions, kv_valid_len, causal, scale,
-                       soft_cap, policy):
+                       soft_cap, policy, block_tables=None):
     """The einsum + host-softmax baseline (the paper's §4.4 split: GEMMs on
     the accelerator, softmax on the host). GQA via reshape; score/value
     contractions follow the ambient *GEMM* policy — einsum when the resolved
     GEMM backend consumes batched contractions natively, the batched
     MatrixFlow kernel otherwise."""
+    _reject_paged("unfused", block_tables)
     B, Sq, H, Dk = q.shape
     T, Hkv = k.shape[1], k.shape[2]
     rep = H // Hkv
@@ -347,7 +359,9 @@ def _unfused_attention(q, k, v, *, q_positions, kv_valid_len, causal, scale,
 
 def _make_fused_attention(interpret: bool):
     def fused_attention(q, k, v, *, q_positions, kv_valid_len, causal, scale,
-                        soft_cap, policy):
+                        soft_cap, policy, block_tables=None):
+        _reject_paged("fused_interpret" if interpret else "fused",
+                      block_tables)
         from repro.kernels import ops  # lazy: pallas import
         return ops.mha(q, k, v, causal=causal, scale=scale,
                        soft_cap=soft_cap, q_positions=q_positions,
@@ -357,10 +371,40 @@ def _make_fused_attention(interpret: bool):
     return fused_attention
 
 
+def _make_paged_attention(interpret: bool):
+    def paged(q, k, v, *, q_positions, kv_valid_len, causal, scale,
+              soft_cap, policy, block_tables=None):
+        """Block-table paged flash attention (kernels/paged_attention.py).
+
+        With a block table, k/v are the page pools (P, page_size, Hkv, D)
+        and the table drives the kernel's BlockSpec index maps. Without one
+        — cache-less training/scoring, or an MLA latent cache that stays
+        contiguous — the operands are dense and the paged policy degrades
+        to the fused flash kernel (identical contract), so a single policy
+        covers a model end to end.
+        """
+        if block_tables is None:
+            from repro.kernels import ops  # lazy: pallas import
+            return ops.mha(q, k, v, causal=causal, scale=scale,
+                           soft_cap=soft_cap, q_positions=q_positions,
+                           kv_valid_len=kv_valid_len,
+                           impl="interpret" if interpret else "pallas",
+                           block_q=policy.block_q, block_k=policy.block_k)
+        from repro.kernels import paged_attention as PA  # lazy: pallas
+        return PA.paged_attention(
+            q, k, v, block_tables, q_positions, kv_valid_len,
+            causal=causal, scale=scale, soft_cap=soft_cap,
+            block_q=policy.block_q, interpret=interpret)
+    return paged
+
+
 register_attention_backend("unfused", _unfused_attention)
 register_attention_backend("fused", _make_fused_attention(interpret=False))
 register_attention_backend("fused_interpret",
                            _make_fused_attention(interpret=True))
+register_attention_backend("paged", _make_paged_attention(interpret=False))
+register_attention_backend("paged_interpret",
+                           _make_paged_attention(interpret=True))
 
 
 def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
@@ -369,6 +413,7 @@ def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
               causal: bool = True,
               scale: Optional[float] = None,
               soft_cap: Optional[float] = None,
+              block_tables: Optional[jax.Array] = None,
               policy: Optional[AttentionPolicy] = None) -> jax.Array:
     """Scaled-dot-product attention through the active AttentionPolicy.
 
@@ -381,14 +426,23 @@ def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
 
     q_positions: (B, Sq) absolute positions of the queries (int32).
     kv_valid_len: (B,) populated keys/cache slots per batch row.
+    block_tables: (B, n_blocks) int32 — only with the ``paged`` backends,
+    where k/v are page pools (P, page_size, Hkv, D) and the table maps each
+    row's logical key blocks to physical pages (docs/serving.md). Dense
+    backends reject a non-None block table.
     """
     pol = policy if policy is not None else current_attention_policy()
     spec = P.get_attention_backend_spec(pol.resolved_backend())
     if scale is None:
         scale = q.shape[-1] ** -0.5
+    # block_tables is forwarded only when present: backends registered
+    # before the paged subsystem (without the kwarg) keep working for every
+    # dense call, and a paged call against one fails loudly on the kwarg.
+    kwargs = ({"block_tables": block_tables} if block_tables is not None
+              else {})
     return spec.fn(q, k, v, q_positions=q_positions,
                    kv_valid_len=kv_valid_len, causal=causal, scale=scale,
-                   soft_cap=soft_cap, policy=pol)
+                   soft_cap=soft_cap, policy=pol, **kwargs)
 
 
 # ---------------------------------------------------------------------------

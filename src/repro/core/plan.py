@@ -191,21 +191,34 @@ def registered_backends() -> Tuple[str, ...]:
 class AttentionPolicy:
     """How attention executes. Frozen → hashable → jit-static.
 
-    backend   registry name, or "auto" (fused Pallas kernel on TPU, the
-              unfused einsum + host-softmax baseline elsewhere — mirroring
-              the GEMM registry's pallas/xla auto split).
-    block_q   flash-kernel query-block rows (fused backends only).
-    block_k   flash-kernel key-block columns (fused backends only).
+    backend    registry name, or "auto" (fused Pallas kernel on TPU, the
+               unfused einsum + host-softmax baseline elsewhere — mirroring
+               the GEMM registry's pallas/xla auto split).
+    block_q    flash-kernel query-block rows (fused/paged backends).
+    block_k    flash-kernel key-block columns (fused backends only).
+    page_size  tokens per KV page for the ``paged`` backends: the key-block
+               size of the paged kernel IS the page size, so keep it
+               MXU-friendly (a multiple of the sublane tile; the fused
+               kernel's block_k is its natural TPU value). Consumed by
+               ``models/transformer.py::init_paged_caches`` and the serving
+               engine's PagePool (serving/kv_pool.py, docs/serving.md).
 
     All backends share one contract (kernels/ref.py::mha_ref): key j of
     batch row b is visible to query i iff ``j < kv_valid_len[b]`` and, when
     causal, ``j <= q_positions[b, i]``; rows with no visible key (serving's
-    masked position −1 slots) produce zeros.
+    masked position −1 slots) produce zeros. The paged backends add one
+    input — a per-request block table mapping logical key blocks to
+    physical pool pages — and keep the same logical-position semantics.
     """
 
     backend: str = "auto"
     block_q: int = 128
     block_k: int = 128
+    page_size: int = 16
+
+    def __post_init__(self):
+        if self.page_size < 1:
+            raise ValueError(f"page_size must be >= 1, got {self.page_size}")
 
     def resolved_backend(self) -> str:
         return resolve_attention_backend(self.backend)
@@ -215,6 +228,8 @@ class AttentionPolicy:
 FUSED = AttentionPolicy(backend="fused")
 FUSED_INTERPRET = AttentionPolicy(backend="fused_interpret")
 UNFUSED = AttentionPolicy(backend="unfused")
+PAGED = AttentionPolicy(backend="paged")
+PAGED_INTERPRET = AttentionPolicy(backend="paged_interpret")
 
 
 def resolve_attention_backend(name: str) -> str:
@@ -230,9 +245,12 @@ def resolve_attention_backend(name: str) -> str:
 
 # An attention backend implementation:
 #   fn(q, k, v, *, q_positions, kv_valid_len, causal, scale, soft_cap,
-#      policy) -> out
+#      policy, block_tables) -> out
 # with model-layout operands: q (B,Sq,H,Dk), k (B,T,Hkv,Dk), v (B,T,Hkv,Dv),
-# returning (B,Sq,H,Dv).
+# returning (B,Sq,H,Dv). block_tables is None for dense caches; the paged
+# backends instead receive pool-shaped k/v (P, page_size, Hkv, D) plus the
+# (B, n_blocks) block table (docs/serving.md); dense backends must reject a
+# non-None block table rather than misread the pool layout.
 AttentionBackendFn = Callable[..., jax.Array]
 
 

@@ -57,6 +57,57 @@ except ImportError:  # pragma: no cover
 NEG_INF = -1e30
 
 
+# ---------------------------------------------------------------------------
+# The streaming-softmax recurrence, shared by the fused and paged kernels
+# (kernels/paged_attention.py). The two kernels differ ONLY in where a key
+# block comes from — contiguous cache layout vs a block-table page fetch —
+# never in these numerics: the masked-row zero contract, the fp32 online
+# softmax, and the l==0 flush guard must stay bit-identical across them.
+# ---------------------------------------------------------------------------
+
+def attention_block_init(m_ref, l_ref, acc_ref):
+    m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+    l_ref[...] = jnp.zeros_like(l_ref)
+    acc_ref[...] = jnp.zeros_like(acc_ref)
+
+
+def attention_block_step(q, k, v, cols, qpos, kvlen, m_ref, l_ref, acc_ref,
+                         *, scale: float, causal: bool,
+                         soft_cap: Optional[float]):
+    """One online-softmax step over a key block.
+
+    q (bq, d); k (bk, d); v (bk, dv); cols (bq, bk) — the *logical* key
+    positions of this block (a paged caller derives them from the logical
+    block index, not the physical page); qpos (bq, 1); kvlen scalar;
+    m/l/acc are the VMEM scratch of the flash recurrence.
+    """
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale       # (bq, bk)
+    if soft_cap:
+        s = soft_cap * jnp.tanh(s / soft_cap)
+    valid = cols < kvlen                                  # KV length mask
+    if causal:
+        valid = jnp.logical_and(valid, cols <= qpos)      # per-row offset
+    s = jnp.where(valid, s, NEG_INF)
+    m_prev = m_ref[...]                                   # (bq, 1)
+    m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+    # p is zeroed where invalid (not just -inf-masked): for a fully
+    # masked row m_new stays NEG_INF and exp(s - m_new) would be 1.
+    p = jnp.where(valid, jnp.exp(s - m_new), 0.0)         # (bq, bk)
+    corr = jnp.exp(m_prev - m_new)                        # (bq, 1)
+    l_ref[...] = l_ref[...] * corr + p.sum(axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+
+def attention_block_flush(l_ref, acc_ref, dtype):
+    """l == 0 (no valid key anywhere) → zero output row, not NaN."""
+    return (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(dtype)
+
+
 def _kernel(qpos_ref, kvlen_ref, q_ref, k_ref, v_ref, o_ref,
             m_ref, l_ref, acc_ref, *,
             scale: float, causal: bool, soft_cap: Optional[float],
@@ -65,9 +116,7 @@ def _kernel(qpos_ref, kvlen_ref, q_ref, k_ref, v_ref, o_ref,
 
     @pl.when(ik == 0)
     def _init():
-        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
-        l_ref[...] = jnp.zeros_like(l_ref)
-        acc_ref[...] = jnp.zeros_like(acc_ref)
+        attention_block_init(m_ref, l_ref, acc_ref)
 
     qpos = qpos_ref[0]                                    # (bq, 1) int32
     kvlen = kvlen_ref[0, 0]                               # scalar int32
@@ -79,36 +128,14 @@ def _kernel(qpos_ref, kvlen_ref, q_ref, k_ref, v_ref, o_ref,
 
     @pl.when(run)
     def _step():
-        q = q_ref[0, 0]                                   # (bq, d)
-        k = k_ref[0, 0]                                   # (bk, d)
-        v = v_ref[0, 0]                                   # (bk, dv)
-        s = jax.lax.dot_general(
-            q, k, (((1,), (1,)), ((), ())),
-            preferred_element_type=jnp.float32) * scale   # (bq, bk)
-        if soft_cap:
-            s = soft_cap * jnp.tanh(s / soft_cap)
         cols = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
-        valid = cols < kvlen                              # KV length mask
-        if causal:
-            valid = jnp.logical_and(valid, cols <= qpos)  # per-row offset
-        s = jnp.where(valid, s, NEG_INF)
-        m_prev = m_ref[...]                               # (bq, 1)
-        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
-        # p is zeroed where invalid (not just -inf-masked): for a fully
-        # masked row m_new stays NEG_INF and exp(s - m_new) would be 1.
-        p = jnp.where(valid, jnp.exp(s - m_new), 0.0)     # (bq, bk)
-        corr = jnp.exp(m_prev - m_new)                    # (bq, 1)
-        l_ref[...] = l_ref[...] * corr + p.sum(axis=1, keepdims=True)
-        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
-            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
-            preferred_element_type=jnp.float32)
-        m_ref[...] = m_new
+        attention_block_step(q_ref[0, 0], k_ref[0, 0], v_ref[0, 0], cols,
+                             qpos, kvlen, m_ref, l_ref, acc_ref,
+                             scale=scale, causal=causal, soft_cap=soft_cap)
 
     @pl.when(ik == nk - 1)
     def _flush():
-        # l == 0 (no valid key anywhere) → zero output row, not NaN.
-        o_ref[0, 0] = (acc_ref[...]
-                       / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+        o_ref[0, 0] = attention_block_flush(l_ref, acc_ref, o_ref.dtype)
 
 
 @functools.partial(

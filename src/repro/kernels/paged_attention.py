@@ -1,0 +1,196 @@
+"""Paged (block-table) flash attention as a Pallas TPU kernel.
+
+The serving engine's largest tensor is the KV cache, and a contiguous
+``(batch_slots, max_len)`` slab violates the paper's core discipline —
+stream page/block-sized operand tiles and never materialize the worst case
+(§4.3–4.4). This kernel closes that gap: K/V live in a **page pool** of
+fixed ``page_size``-token pages (``serving/kv_pool.py``) and each request
+owns a **block table** mapping its logical key blocks to physical pages.
+The block table drives the BlockSpec index maps through Pallas scalar
+prefetch (``pltpu.PrefetchScalarGridSpec``): grid step ``(b, h, i, j)``
+DMA-fetches physical page ``block_tables[b, j]`` — the MatrixFlow "fetch
+exactly the block you need" property, applied to the KV cache.
+
+Everything else is PR 3's offset-aware flash recurrence, unchanged:
+
+  * the logical position of page-``j`` slot ``t`` is ``j * page_size + t``,
+    so ``q_positions`` (per-row absolute query positions, −1 → masked row)
+    and ``kv_valid_len`` (populated cache slots per row) mask *logical*
+    key indices exactly as ``kernels/flash_attention.py`` does — one kernel
+    covers paged prefill, paged decode, and GQA (kv head = h // rep in the
+    index map);
+  * key blocks past a row's valid length or causal frontier are skipped at
+    runtime, so decode against a mostly-empty pool touches only the
+    populated pages;
+  * a fully masked query row produces exactly zeros, never NaN.
+
+Unallocated block-table entries must simply be *valid* page indices (the
+engine leaves them at 0): the length mask already gives their keys zero
+weight, so the fetched bytes are dead — they only have to be fetchable.
+
+Validated in interpret mode against kernels/ref.py::mha_ref (the pool is
+gathered back to a dense cache for the oracle) in tests/parity.py and
+tests/test_paged_attention.py.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:
+    from jax.experimental.pallas import tpu as pltpu
+    _CompilerParams = getattr(pltpu, "CompilerParams", None) or getattr(
+        pltpu, "TPUCompilerParams", None)
+except ImportError:  # pragma: no cover
+    pltpu = None
+    _CompilerParams = None
+
+from repro.kernels.flash_attention import (attention_block_flush,
+                                           attention_block_init,
+                                           attention_block_step)
+
+
+def _kernel(bt_ref, kvlen_ref, qpos_ref, q_ref, k_ref, v_ref, o_ref,
+            m_ref, l_ref, acc_ref, *,
+            scale: float, causal: bool, soft_cap: Optional[float],
+            bq: int, ps: int, nb: int):
+    b = pl.program_id(0)
+    ij = pl.program_id(3)                                 # logical key block
+
+    @pl.when(ij == 0)
+    def _init():
+        attention_block_init(m_ref, l_ref, acc_ref)
+
+    qpos = qpos_ref[0]                                    # (bq, 1) int32
+    kvlen = kvlen_ref[b]                                  # scalar int32
+    # Skip logical key blocks no row of this q block can see: past every
+    # valid key, or (causal) strictly beyond the furthest query position.
+    run = ij * ps < kvlen
+    if causal:
+        run = jnp.logical_and(run, ij * ps <= jnp.max(qpos))
+
+    @pl.when(run)
+    def _step():
+        # cols are LOGICAL key positions: the block table only redirects the
+        # physical fetch (this kernel's BlockSpec index maps), never the
+        # masking arithmetic — the numerics are flash_attention.py's
+        # recurrence, shared verbatim.
+        cols = ij * ps + jax.lax.broadcasted_iota(jnp.int32, (bq, ps), 1)
+        attention_block_step(q_ref[0, :, 0], k_ref[0, :, 0], v_ref[0, :, 0],
+                             cols, qpos, kvlen, m_ref, l_ref, acc_ref,
+                             scale=scale, causal=causal, soft_cap=soft_cap)
+
+    @pl.when(ij == nb - 1)
+    def _flush():
+        o_ref[0, :, 0] = attention_block_flush(l_ref, acc_ref, o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "scale", "soft_cap", "block_q", "interpret"),
+)
+def paged_attention(
+    q: jax.Array,             # (B, Sq, H, D)   — model layout
+    k_pages: jax.Array,       # (P, page_size, Hkv, D)
+    v_pages: jax.Array,       # (P, page_size, Hkv, Dv)
+    block_tables: jax.Array,  # (B, n_blocks) int32 physical page per block
+    q_positions: Optional[jax.Array] = None,   # (B, Sq) int32; <0 → masked
+    kv_valid_len: Optional[jax.Array] = None,  # (B,) int32; None → all keys
+    *,
+    causal: bool = True,
+    scale: Optional[float] = None,
+    soft_cap: Optional[float] = None,
+    block_q: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """Flash attention reading K/V through a block table.
+
+    The key-block size IS the page size (``k_pages.shape[1]``): page
+    granularity and kernel block granularity coincide by construction, the
+    alignment the paper's block-streaming datapath assumes. Returns
+    (B, Sq, H, Dv) in model layout.
+    """
+    B, Sq, H, D = q.shape
+    P, ps, Hkv, Dv = v_pages.shape
+    assert H % Hkv == 0, (H, Hkv)
+    assert k_pages.shape[:3] == (P, ps, Hkv), (k_pages.shape, v_pages.shape)
+    nb = block_tables.shape[1]
+    rep = H // Hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    bq = min(block_q, Sq)
+    if q_positions is None:
+        q_positions = jnp.broadcast_to(
+            jnp.arange(Sq, dtype=jnp.int32), (B, Sq))
+    q_positions = q_positions.astype(jnp.int32)
+    if kv_valid_len is None:
+        kv_valid_len = jnp.full((B,), nb * ps, jnp.int32)
+    kv_valid_len = jnp.minimum(kv_valid_len.astype(jnp.int32), nb * ps)
+    block_tables = block_tables.astype(jnp.int32)
+
+    # pad Sq to a block multiple; padded query rows carry position -1
+    # (fully masked → zero rows, sliced off below).
+    pq = (-Sq) % bq
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0)))
+        q_positions = jnp.pad(q_positions, ((0, 0), (0, pq)),
+                              constant_values=-1)
+    Sq_p = Sq + pq
+    nq = Sq_p // bq
+
+    qpos_in = q_positions[..., None]        # (B, Sq_p, 1): (bq, 1) tiles
+
+    kernel = functools.partial(_kernel, scale=scale, causal=causal,
+                               soft_cap=soft_cap, bq=bq, ps=ps, nb=nb)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,              # block_tables, kv_valid_len
+        grid=(B, H, nq, nb),
+        in_specs=[
+            pl.BlockSpec((1, bq, 1), lambda b, h, i, j, bt, kvl: (b, i, 0)),
+            pl.BlockSpec((1, bq, 1, D),
+                         lambda b, h, i, j, bt, kvl: (b, i, h, 0)),
+            # the paged indirection: the block table entry IS the index
+            pl.BlockSpec((1, ps, 1, D),
+                         lambda b, h, i, j, bt, kvl, rep=rep:
+                         (bt[b, j], 0, h // rep, 0)),
+            pl.BlockSpec((1, ps, 1, Dv),
+                         lambda b, h, i, j, bt, kvl, rep=rep:
+                         (bt[b, j], 0, h // rep, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, 1, Dv),
+                               lambda b, h, i, j, bt, kvl: (b, i, h, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, Dv), jnp.float32),
+        ],
+    )
+    kwargs = {}
+    if _CompilerParams is not None and not interpret:
+        kwargs["compiler_params"] = _CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary"))
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Sq_p, H, Dv), q.dtype),
+        interpret=interpret,
+        **kwargs,
+    )(block_tables, kv_valid_len, qpos_in, q, k_pages, v_pages)
+    return out[:, :Sq]
+
+
+def gather_pages(pages: jax.Array, block_tables: jax.Array,
+                 max_len: Optional[int] = None) -> jax.Array:
+    """Gather a (P, page_size, Hkv, D) pool back to dense (B, T, Hkv, D)
+    caches through the block tables — the oracle/debug inverse of the paged
+    layout (used by parity tests to feed mha_ref, never by the hot path)."""
+    P, ps, Hkv, D = pages.shape
+    B, nb = block_tables.shape
+    dense = pages[block_tables.astype(jnp.int32)]       # (B, nb, ps, Hkv, D)
+    dense = dense.reshape(B, nb * ps, Hkv, D)
+    return dense if max_len is None else dense[:, :max_len]

@@ -42,24 +42,41 @@ def main(argv=None):
                          "with --pack-weights the int8 blocks stay resident")
     ap.add_argument("--attn-backend", default="auto",
                     help="attention backend (auto|fused|fused_interpret|"
-                         "unfused|<registered>); fused = the offset-aware "
-                         "flash kernel for prefill AND decode "
-                         "(docs/attention.md)")
+                         "unfused|paged|paged_interpret|<registered>); "
+                         "fused = the offset-aware flash kernel for prefill "
+                         "AND decode (docs/attention.md); paged = the "
+                         "block-table paged KV cache with page-bound "
+                         "admission and preemption (docs/serving.md)")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="paged backends: tokens per KV page (the paged "
+                         "kernel's key-block size)")
+    ap.add_argument("--cache-pages", type=int, default=None,
+                    help="paged backends: total pages in the KV pool; "
+                         "default = the contiguous-equivalent "
+                         "batch_slots * ceil(max_len / page_size). Smaller "
+                         "values oversubscribe memory (page-bound "
+                         "admission + preemption)")
     args = ap.parse_args(argv)
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     policy = GemmPolicy(backend=args.gemm_backend, mode=args.gemm_mode)
-    attn = AttentionPolicy(backend=args.attn_backend)
+    attn = AttentionPolicy(backend=args.attn_backend,
+                           page_size=args.page_size)
     print(f"[serve] arch={cfg.name} slots={args.batch_slots} "
           f"max_len={args.max_len} gemm={policy.resolved_backend()}/"
           f"{policy.mode} attn={attn.resolved_backend()} "
           f"packed={args.pack_weights} "
           f"weight_dtype={args.weight_dtype or 'native'}")
-    params, _ = T.init_model(jax.random.PRNGKey(args.seed), cfg)
-    engine = ServingEngine(cfg, params, ServeConfig(
+    sc = ServeConfig(
         batch_slots=args.batch_slots, max_len=args.max_len,
         temperature=args.temperature, gemm=policy, attention=attn,
-        pack_weights=args.pack_weights, weight_dtype=args.weight_dtype))
+        pack_weights=args.pack_weights, weight_dtype=args.weight_dtype,
+        cache_pages=args.cache_pages)
+    if sc.paged():
+        print(f"[serve] paged KV: page_size={args.page_size} pages="
+              f"{args.cache_pages or 'contiguous-equivalent'}")
+    params, _ = T.init_model(jax.random.PRNGKey(args.seed), cfg)
+    engine = ServingEngine(cfg, params, sc)
 
     rng = np.random.default_rng(args.seed)
     # batched generate path (one full batch)
@@ -82,7 +99,7 @@ def main(argv=None):
     engine2 = ServingEngine(cfg, params, ServeConfig(
         batch_slots=args.batch_slots, max_len=args.max_len, gemm=policy,
         attention=attn, pack_weights=args.pack_weights,
-        weight_dtype=args.weight_dtype))
+        weight_dtype=args.weight_dtype, cache_pages=args.cache_pages))
     lo = max(1, min(4, args.prompt_len))
     pending = [rng.integers(0, cfg.vocab,
                             rng.integers(lo, args.prompt_len + 1))
@@ -99,10 +116,10 @@ def main(argv=None):
             live += 1
         stepped = engine2.step()
         done_tokens += len(stepped)
-        # retire a random live slot occasionally to exercise slot reuse
-        if live and done_tokens % 29 == 0:
-            s = next(iter(stepped))
-            engine2.slot_live[s] = False
+        # retire a random live request occasionally to exercise recycling
+        # (cancel frees the slot — and, when paged, its pool pages)
+        if live and done_tokens % 29 == 0 and stepped:
+            engine2.cancel(next(iter(stepped)))
             live -= 1
         if done_tokens > args.n_requests * args.gen_len:
             break

@@ -71,15 +71,18 @@ def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
 # ---------------------------------------------------------------------------
 
 def _attn_core(q, k, v, *, q_positions, kv_valid_len, causal, scale,
-               soft_cap: Optional[float] = None):
+               soft_cap: Optional[float] = None, block_tables=None):
     """q: (B,Sq,H,Dk); k: (B,T,Hkv,Dk); v: (B,T,Hkv,Dv); GQA via Hkv | H.
 
     q_positions: (B,Sq) absolute positions of the queries (−1 → masked row).
     kv_valid_len: number of populated cache slots (T for pure prefill).
+    block_tables: (B, n_blocks) — paged caches only, where k/v are page
+    pools (P, page_size, Hkv, D); see docs/serving.md.
     """
     return api.attention(q, k, v, q_positions=q_positions,
                          kv_valid_len=kv_valid_len, causal=causal,
-                         scale=scale, soft_cap=soft_cap)
+                         scale=scale, soft_cap=soft_cap,
+                         block_tables=block_tables)
 
 
 # ---------------------------------------------------------------------------
@@ -107,8 +110,45 @@ def init_attention(key, cfg: ModelConfig, dtype):
     return p, a
 
 
-def attention(p, cfg: ModelConfig, x, *, positions, cache=None):
-    """x: (B,S,D). cache: {"k","v": (B,Smax,Hkv,dh), "len": (B,)} or None.
+def _written_per_row(positions, len_dtype):
+    """Tokens actually written per batch row: positions < 0 — masked rows
+    AND bucket-padding columns (docs/serving.md) — don't count."""
+    return (positions >= 0).sum(axis=1).astype(len_dtype)
+
+
+def _paged_cache_update(cache, k, v, positions, block_tables):
+    """Scatter new K/V into the page pools through the block tables.
+
+    cache: {"kp","vp": (P, page_size, Hkv, dh), "len": (B,)}. Token (b, s)
+    at position p lands in page ``block_tables[b, p // page_size]`` at
+    offset ``p % page_size``; positions < 0 (masked rows, bucket padding)
+    are routed out of range and dropped. One scatter covers paged prefill,
+    chunked prefill, and decode — the page indirection replaces both the
+    dynamic-slice and the one-hot contiguous paths.
+    """
+    B, S = positions.shape
+    P, ps, Hkv, dh = cache["kp"].shape
+    pos = jnp.clip(positions, 0)
+    page = jnp.take_along_axis(block_tables, pos // ps, axis=1)   # (B,S)
+    flat = jnp.where(positions >= 0, page * ps + pos % ps, P * ps)
+    flat = flat.reshape(-1)
+
+    def scatter(pool, new):
+        pooled = pool.reshape(P * ps, Hkv, dh)
+        pooled = pooled.at[flat].set(new.reshape(B * S, Hkv, dh),
+                                     mode="drop")
+        return pooled.reshape(P, ps, Hkv, dh)
+
+    return {"kp": scatter(cache["kp"], k), "vp": scatter(cache["vp"], v),
+            "len": cache["len"] + _written_per_row(positions,
+                                                   cache["len"].dtype)}
+
+
+def attention(p, cfg: ModelConfig, x, *, positions, cache=None,
+              block_tables=None):
+    """x: (B,S,D). cache: {"k","v": (B,Smax,Hkv,dh), "len": (B,)}, a paged
+    {"kp","vp": (P,page_size,Hkv,dh), "len": (B,)} pool (then
+    ``block_tables`` (B, n_blocks) is required), or None.
 
     Returns (y, new_cache). Without a cache, self-attention over x
     (causal per cfg). With a cache, writes K/V at ``positions`` then
@@ -127,21 +167,35 @@ def attention(p, cfg: ModelConfig, x, *, positions, cache=None):
     k = shard(k, "act_batch", "act_seq", "act_kv_heads", None)
     v = shard(v, "act_batch", "act_seq", "act_kv_heads", None)
 
+    bt = None
     if cache is None:
         kv_k, kv_v = k, v
         kv_valid = jnp.full((B,), S)
+    elif "kp" in cache:
+        # Paged pool: writes and reads both go through the block table.
+        if block_tables is None:
+            raise ValueError("paged KV cache requires block_tables "
+                             "(batch['block_tables'] — docs/serving.md)")
+        cache = _paged_cache_update(cache, k, v, positions, block_tables)
+        kv_k, kv_v, kv_valid = cache["kp"], cache["vp"], cache["len"]
+        bt = block_tables
     else:
         # Rows whose position is negative are masked out: they neither
         # write K/V nor advance their valid length. The serving engine uses
         # this for single-slot prefill/decode — other live slots' caches
-        # must stay untouched (the submit-corruption regression).
-        row_ok = positions[:, 0] >= 0                         # (B,)
-        if S > 1:  # prefill chunk: unmasked rows share the write offset
-            idx = jnp.max(positions[:, 0])     # masked rows carry -1
-            up_k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, idx, 1)
-            up_v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, idx, 1)
-            kv_k = jnp.where(row_ok[:, None, None, None], up_k, cache["k"])
-            kv_v = jnp.where(row_ok[:, None, None, None], up_v, cache["v"])
+        # must stay untouched (the submit-corruption regression). The same
+        # contract holds per *column* for bucketed prefill padding
+        # (position −1 columns — docs/serving.md).
+        if S > 1:  # prefill chunk: per-(row, column) masked scatter.
+            # (A scatter, unlike the old shared-offset dynamic slice, keeps
+            # bucket-padding columns out of the cache and cannot clamp-
+            # shift near max_len; under seq sharding it costs the §Perf H2
+            # collective, which prefill amortizes over S columns.)
+            T = cache["k"].shape[1]
+            bi = jnp.broadcast_to(jnp.arange(B)[:, None], (B, S))
+            pos_safe = jnp.where(positions >= 0, positions, T)  # OOB → drop
+            kv_k = cache["k"].at[bi, pos_safe].set(k, mode="drop")
+            kv_v = cache["v"].at[bi, pos_safe].set(v, mode="drop")
         else:      # decode: per-row offsets (continuous batching slots).
             # One-hot masked update, NOT a scatter: a (B,·) scatter makes
             # GSPMD replicate-then-repartition the whole cache when its seq
@@ -151,13 +205,13 @@ def attention(p, cfg: ModelConfig, x, *, positions, cache=None):
             at_pos = (jnp.arange(T)[None, :] == positions)[..., None, None]
             kv_k = jnp.where(at_pos, k[:, 0][:, None], cache["k"])
             kv_v = jnp.where(at_pos, v[:, 0][:, None], cache["v"])
-        written = jnp.where(row_ok, S, 0).astype(cache["len"].dtype)
+        written = _written_per_row(positions, cache["len"].dtype)
         cache = {"k": kv_k, "v": kv_v, "len": cache["len"] + written}
         kv_valid = cache["len"]
 
     out = _attn_core(q, kv_k, kv_v, q_positions=positions,
                      kv_valid_len=kv_valid, causal=cfg.causal,
-                     scale=1.0 / math.sqrt(dh))
+                     scale=1.0 / math.sqrt(dh), block_tables=bt)
     y = api.linear(out.reshape(B, S, H * dh), p["wo"])
     return shard(y, "act_batch", "act_seq", "act_embed"), cache
 
@@ -167,6 +221,21 @@ def init_attention_cache(cfg: ModelConfig, batch: int, max_len: int, dtype):
     return {
         "k": jnp.zeros((batch, max_len, Hkv, dh), dtype),
         "v": jnp.zeros((batch, max_len, Hkv, dh), dtype),
+        "len": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def init_paged_attention_cache(cfg: ModelConfig, batch: int, n_pages: int,
+                               page_size: int, dtype):
+    """Paged variant of :func:`init_attention_cache`: K/V live in a pool of
+    ``n_pages`` fixed-size pages shared by every batch row; per-request
+    block tables (serving/kv_pool.py) map logical blocks to pages. ``len``
+    stays per-row — the kernel masks logical positions, exactly as the
+    contiguous cache does."""
+    Hkv, dh = cfg.n_kv_heads, cfg.head_dim
+    return {
+        "kp": jnp.zeros((n_pages, page_size, Hkv, dh), dtype),
+        "vp": jnp.zeros((n_pages, page_size, Hkv, dh), dtype),
         "len": jnp.zeros((batch,), jnp.int32),
     }
 
@@ -195,10 +264,15 @@ def init_mla(key, cfg: ModelConfig, dtype):
     return p, a
 
 
-def mla_attention(p, cfg: ModelConfig, x, *, positions, cache=None):
+def mla_attention(p, cfg: ModelConfig, x, *, positions, cache=None,
+                  block_tables=None):
     """MLA with latent KV cache. cache: {"ckv": (B,Smax,r), "krope":
     (B,Smax,dr), "len": (B,)}. Prefill materializes K/V per head; the cache
     itself stays compressed (the MLA memory saving)."""
+    if block_tables is not None:
+        raise NotImplementedError(
+            "paged KV caches cover GQA attention only; the MLA latent cache "
+            "stays contiguous (docs/serving.md)")
     B, S, D = x.shape
     H = cfg.n_heads
     dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
@@ -216,21 +290,23 @@ def mla_attention(p, cfg: ModelConfig, x, *, positions, cache=None):
     k_rope = rope(k_rope[:, :, None, :], positions, cfg.rope_theta)[:, :, 0]
 
     if cache is not None:
-        # negative positions mask a row out of the update entirely
-        # (single-slot prefill/decode — same contract as the GQA path)
-        row_ok = positions[:, 0] >= 0
+        # negative positions mask a row — or, for bucketed prefill padding,
+        # a single column — out of the update entirely (same contract as
+        # the GQA path, docs/serving.md)
         if S > 1:
-            idx = jnp.max(positions[:, 0])
-            up = lambda buf, new: jnp.where(
-                row_ok[:, None, None],
-                jax.lax.dynamic_update_slice_in_dim(buf, new, idx, 1), buf)
+            # per-(row, column) masked scatter (see the GQA path's note on
+            # bucket padding vs the old shared-offset dynamic slice)
+            T = cache["ckv"].shape[1]
+            bi = jnp.broadcast_to(jnp.arange(B)[:, None], (B, S))
+            pos_safe = jnp.where(positions >= 0, positions, T)  # OOB → drop
+            up = lambda buf, new: buf.at[bi, pos_safe].set(new, mode="drop")
         else:
             # masked update, not scatter — shard-local under seq sharding
             # (same rationale as the GQA path, §Perf H2)
             T = cache["ckv"].shape[1]
             at_pos = (jnp.arange(T)[None, :] == positions)[..., None]
             up = lambda buf, new: jnp.where(at_pos, new[:, 0][:, None], buf)
-        written = jnp.where(row_ok, S, 0).astype(cache["len"].dtype)
+        written = _written_per_row(positions, cache["len"].dtype)
         cache = {"ckv": up(cache["ckv"], c_kv),
                  "krope": up(cache["krope"], k_rope),
                  "len": cache["len"] + written}

@@ -47,8 +47,10 @@ def _init_block(key, cfg: ModelConfig, dtype, moe_layer: bool,
     return p, a
 
 
-def _apply_block(p, cfg: ModelConfig, x, *, positions, cache=None):
-    """Returns (y, new_cache, aux_loss)."""
+def _apply_block(p, cfg: ModelConfig, x, *, positions, cache=None,
+                 block_tables=None):
+    """Returns (y, new_cache, aux_loss). ``block_tables`` (B, n_blocks)
+    accompanies paged KV caches (docs/serving.md); None otherwise."""
     aux = jnp.zeros((), jnp.float32)
     if "ssd" in p:
         h, cache = SSM.ssd_block(p["ssd"], cfg,
@@ -56,7 +58,7 @@ def _apply_block(p, cfg: ModelConfig, x, *, positions, cache=None):
         return x + h, cache, aux
     h, cache = (Lyr.mla_attention if cfg.is_mla else Lyr.attention)(
         p["attn"], cfg, Lyr.apply_norm(cfg, p["attn_norm"], x),
-        positions=positions, cache=cache)
+        positions=positions, cache=cache, block_tables=block_tables)
     x = x + h
     h2 = Lyr.apply_norm(cfg, p["mlp_norm"], x)
     if "moe" in p:
@@ -146,7 +148,8 @@ def _stack_tree(trees):
     return jax.tree_util.tree_map(lambda *ts: jnp.stack(ts), *trees)
 
 
-def _loop_layers(p, cfg: ModelConfig, x, positions, caches, remat: bool):
+def _loop_layers(p, cfg: ModelConfig, x, positions, caches, remat: bool,
+                 block_tables=None):
     """Unrolled (Python-loop) layer stack — numerically identical to
     _scan_layers; used by the dry-run for exact cost accounting (XLA's
     cost_analysis counts scan bodies once) and available for short models
@@ -155,7 +158,8 @@ def _loop_layers(p, cfg: ModelConfig, x, positions, caches, remat: bool):
     aux = jnp.zeros((), jnp.float32)
 
     def block(lp, x, lc):
-        return _apply_block(lp, cfg, x, positions=positions, cache=lc)
+        return _apply_block(lp, cfg, x, positions=positions, cache=lc,
+                            block_tables=block_tables)
 
     block_fn = _remat(block, cfg) if remat else block
 
@@ -194,10 +198,11 @@ def _loop_layers(p, cfg: ModelConfig, x, positions, caches, remat: bool):
     return x, out_caches, aux
 
 
-def _scan_layers(p, cfg: ModelConfig, x, positions, caches, remat: bool):
+def _scan_layers(p, cfg: ModelConfig, x, positions, caches, remat: bool,
+                 block_tables=None):
     """Scan the stacked layer params (+ optional stacked caches) over x."""
     if not cfg.scan_layers:
-        return _loop_layers(p, cfg, x, positions, caches, remat)
+        return _loop_layers(p, cfg, x, positions, caches, remat, block_tables)
     n_scan = cfg.n_layers - cfg.first_dense_layers
     zero = jnp.zeros((), jnp.float32)
 
@@ -205,7 +210,7 @@ def _scan_layers(p, cfg: ModelConfig, x, positions, caches, remat: bool):
         x, aux = carry
         lp, lc = inp if caches is not None else (inp, None)
         y, new_c, aux_i = _apply_block(lp, cfg, x, positions=positions,
-                                       cache=lc)
+                                       cache=lc, block_tables=block_tables)
         return (y, aux + aux_i), new_c
 
     body_fn = _remat(body, cfg) if remat else body
@@ -244,7 +249,10 @@ def _scan_layers(p, cfg: ModelConfig, x, positions, caches, remat: bool):
 def forward(params, cfg: ModelConfig, batch, *, caches=None,
             remat: Optional[bool] = None):
     """Returns (logits, new_caches, aux). batch: tokens (B,S) [+ embeds,
-    positions]. caches=None → full self-attention (training/scoring)."""
+    positions, block_tables]. caches=None → full self-attention
+    (training/scoring). ``block_tables`` (B, n_blocks) int32 accompanies
+    paged KV caches (init_paged_caches): every layer's attention reads and
+    writes its page pool through the same table (docs/serving.md)."""
     remat = cfg.remat if remat is None else remat
     if cfg.remat_policy == "none":
         remat = False
@@ -253,6 +261,7 @@ def forward(params, cfg: ModelConfig, batch, *, caches=None,
     positions = batch.get("positions")
     if positions is None:
         positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+    block_tables = batch.get("block_tables")
     x = shard(x, "act_batch", "act_seq", "act_embed")
     aux_total = jnp.zeros((), jnp.float32)
 
@@ -267,11 +276,13 @@ def forward(params, cfg: ModelConfig, batch, *, caches=None,
         dense_cfg = dataclasses.replace(cfg, n_experts=0)
         c_i = dense_caches[i] if dense_caches is not None else None
         x, c_i, aux_i = _apply_block(params[f"dense_layer{i}"], dense_cfg, x,
-                                     positions=positions, cache=c_i)
+                                     positions=positions, cache=c_i,
+                                     block_tables=block_tables)
         new_dense.append(c_i)
         aux_total += aux_i
 
-    x, new_scan, aux = _scan_layers(params, cfg, x, positions, caches, remat)
+    x, new_scan, aux = _scan_layers(params, cfg, x, positions, caches, remat,
+                                    block_tables)
     aux_total += aux
     x = Lyr.apply_norm(cfg, params["final_norm"], x)
     logits = api.linear(x, params["head"])
@@ -316,6 +327,45 @@ def init_caches(cfg: ModelConfig, batch: int, max_len: int, dtype):
             (Lyr.init_mla_cache(dense_cfg, batch, max_len, dtype)
              if cfg.is_mla else
              Lyr.init_attention_cache(dense_cfg, batch, max_len, dtype))
+            for _ in range(cfg.first_dense_layers)]
+    return caches
+
+
+def init_paged_caches(cfg: ModelConfig, batch: int, n_pages: int,
+                      page_size: int, dtype):
+    """Paged variant of :func:`init_caches`: every layer's KV cache is a
+    pool of ``n_pages`` fixed-size pages instead of a contiguous
+    ``(batch, max_len)`` slab, so cache memory scales with resident tokens,
+    not worst-case length (docs/serving.md). One ``(batch, n_blocks)``
+    block table — passed per call via ``batch["block_tables"]`` — addresses
+    every layer's pool identically (each layer writes the same logical
+    positions), the vLLM layout.
+
+    Covers the GQA/MQA attention families only: SSD/conv recurrent state
+    has no positions to page, and the MLA latent cache stays contiguous.
+    """
+    if cfg.family in ("ssm", "hybrid") or cfg.attn_every:
+        raise NotImplementedError(
+            f"paged KV caches require pure-attention layer stacks; family="
+            f"{cfg.family!r} attn_every={cfg.attn_every} carries SSD "
+            f"recurrent state (docs/serving.md)")
+    if cfg.is_mla:
+        raise NotImplementedError(
+            "paged KV caches cover GQA attention; the MLA latent cache "
+            "stays contiguous (docs/serving.md)")
+    n_scan = cfg.n_layers - cfg.first_dense_layers
+
+    def stack(n, tree):
+        return jax.tree_util.tree_map(
+            lambda t: jnp.broadcast_to(t[None], (n,) + t.shape).copy(), tree)
+
+    caches = {"scan": stack(n_scan, Lyr.init_paged_attention_cache(
+        cfg, batch, n_pages, page_size, dtype))}
+    if cfg.first_dense_layers:
+        dense_cfg = dataclasses.replace(cfg, n_experts=0)
+        caches["dense"] = [
+            Lyr.init_paged_attention_cache(dense_cfg, batch, n_pages,
+                                           page_size, dtype)
             for _ in range(cfg.first_dense_layers)]
     return caches
 

@@ -2,9 +2,9 @@
 
 ``prefill_step``/``decode_step`` are the functions the dry-run lowers for the
 ``prefill_*`` / ``decode_*`` / ``long_*`` shape cells. The engine adds a
-simple continuous-batching front end: a slot-based scheduler that admits
-queued requests into free batch slots between decode iterations (the
-vLLM-style pattern, reduced to its core).
+continuous-batching front end: a slot-based scheduler that admits queued
+requests into free batch slots between decode iterations (the vLLM-style
+pattern, reduced to its core).
 
 GEMM execution is governed by a GemmPolicy (ServeConfig.gemm); with
 ``pack_weights=True`` every projection weight is laid out block-major once
@@ -15,18 +15,30 @@ int8 blocks + per-channel scales and GEMMs run the W8A8 route
 (core/quant.py, docs/quant.md). Attention execution is governed the same
 way by ServeConfig.attention (an AttentionPolicy): ``fused`` streams K/V
 blocks through the offset-aware flash kernel for both prefill and decode,
-``unfused`` keeps the paper's host-softmax split (docs/attention.md).
+``unfused`` keeps the paper's host-softmax split (docs/attention.md), and
+``paged`` swaps the contiguous ``(batch_slots, max_len)`` KV slab for a
+**page pool** with per-request block tables (serving/kv_pool.py,
+kernels/paged_attention.py, docs/serving.md). In paged mode admission is
+**page-bound** instead of slot-bound: a request is admitted while free
+pages cover its prompt, decode steps allocate pages on demand, retirement
+returns them, and when the pool runs dry the lowest-priority (youngest)
+request is preempted — spilled to a wait queue and resumed later with a
+token stream identical to an uninterrupted run. ``submit``/``step`` then
+key their results by *request id* (the handle submit returns), since a
+request may migrate across slots.
 
-Slot admission uses *masked* prefill/decode: batch rows at position -1
-neither write their KV cache nor advance their valid length, so one slot's
-prefill cannot corrupt concurrent slots (SSD/conv caches don't carry
-positions and are outside this masking contract).
+Slot admission uses *masked* prefill/decode: batch rows — and, for the
+power-of-two **bucketed prefill** that bounds per-prompt-length recompiles,
+padding columns — at position -1 neither write the KV cache nor advance
+the valid length, so one slot's prefill cannot corrupt concurrent slots
+(SSD/conv caches don't carry positions and are outside this masking
+contract).
 """
 from __future__ import annotations
 
 import contextlib
 import dataclasses
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -36,6 +48,13 @@ from repro.core import api
 from repro.core.plan import AttentionPolicy, GemmPolicy
 from repro.models import transformer as T
 from repro.models.config import ModelConfig
+from repro.serving.kv_pool import BlockTable, PagePool
+
+PAGED_BACKENDS = ("paged", "paged_interpret")
+
+
+def _next_pow2(n: int) -> int:
+    return 1 << max(n - 1, 0).bit_length() if n > 1 else 1
 
 
 @dataclasses.dataclass
@@ -49,7 +68,13 @@ class ServeConfig:
     weight_dtype: Optional[str] = None  # "int8" → quantized W8A8 GEMM route
     attention: Optional[AttentionPolicy] = None  # None → ambient/default
     # (AttentionPolicy(backend="fused") routes prefill AND decode through
-    # the offset-aware flash kernel — docs/attention.md)
+    # the offset-aware flash kernel; backend="paged" additionally pages the
+    # KV cache — docs/attention.md, docs/serving.md)
+    cache_pages: Optional[int] = None
+    # paged backends only: total pages in the KV pool. None → the
+    # contiguous-equivalent budget batch_slots * ceil(max_len / page_size);
+    # smaller values make admission page-bound (the memory-oversubscription
+    # regime the paged subsystem exists for).
 
     def policy(self) -> Optional[GemmPolicy]:
         """The effective GemmPolicy: ``gemm`` with ``weight_dtype`` folded
@@ -59,6 +84,21 @@ class ServeConfig:
             return self.gemm
         return dataclasses.replace(self.gemm or GemmPolicy(),
                                    weight_dtype=self.weight_dtype)
+
+    def paged(self) -> bool:
+        return (self.attention is not None
+                and self.attention.resolved_backend() in PAGED_BACKENDS)
+
+
+@dataclasses.dataclass
+class _Waiting:
+    """A preempted (or re-queued) request parked off-device: everything
+    needed to rebuild its cache by re-prefilling ``prompt + out`` and
+    continue the stream exactly where it stopped."""
+    rid: int
+    prompt: List[int]            # the ORIGINAL prompt, never rewritten
+    out: List[int]               # reported tokens — the live stream list
+    next_tok: int                # sampled but not yet reported/written
 
 
 def _policy_scope(policy: Optional[GemmPolicy],
@@ -74,20 +114,32 @@ def _policy_scope(policy: Optional[GemmPolicy],
 def make_prefill_step(cfg: ModelConfig, policy: Optional[GemmPolicy] = None,
                       attn: Optional[AttentionPolicy] = None):
     """(params, batch, caches) → (last_logits, caches). Processes the full
-    prompt with causal self-attention while writing the caches."""
+    prompt with causal self-attention while writing the caches.
+
+    batch may carry ``last_cols`` (B,) — the column holding each row's last
+    *real* token under bucketed (position −1 padded) prefill — and
+    ``block_tables`` for paged caches; absent both, this is the plain
+    dense prefill returning the final column's logits."""
     def prefill_step(params, batch, caches):
         with _policy_scope(policy, attn):
             logits, caches, _ = T.forward(params, cfg, batch, caches=caches,
                                           remat=False)
-        return logits[:, -1], caches
+        last = batch.get("last_cols")
+        if last is None:
+            return logits[:, -1], caches
+        picked = jnp.take_along_axis(logits, last[:, None, None], axis=1)
+        return picked[:, 0], caches
     return prefill_step
 
 
 def make_decode_step(cfg: ModelConfig, policy: Optional[GemmPolicy] = None,
                      attn: Optional[AttentionPolicy] = None):
-    """(params, tokens(B,1), positions(B,1), caches) → (logits, caches)."""
-    def decode_step(params, tokens, positions, caches):
+    """(params, tokens(B,1), positions(B,1), caches[, block_tables]) →
+    (logits, caches). ``block_tables`` is None for contiguous caches."""
+    def decode_step(params, tokens, positions, caches, block_tables=None):
         batch = {"tokens": tokens, "positions": positions}
+        if block_tables is not None:
+            batch["block_tables"] = block_tables
         with _policy_scope(policy, attn):
             logits, caches, _ = T.forward(params, cfg, batch, caches=caches,
                                           remat=False)
@@ -96,7 +148,16 @@ def make_decode_step(cfg: ModelConfig, policy: Optional[GemmPolicy] = None,
 
 
 class ServingEngine:
-    """Greedy/temperature sampling with slot-based continuous batching."""
+    """Greedy/temperature sampling with slot-based continuous batching.
+
+    With a paged attention policy (``ServeConfig.attention`` backend
+    "paged"/"paged_interpret") the engine runs **memory-bound continuous
+    batching**: submit() returns a *request id*, admission holds while free
+    pages cover the prompt, decode grows block tables on demand, and pool
+    exhaustion preempts the youngest request into a wait queue from which
+    step() resumes it (oldest first) once pages and a slot free up —
+    docs/serving.md walks the full lifecycle.
+    """
 
     def __init__(self, cfg: ModelConfig, params, sc: ServeConfig):
         pol = sc.policy()
@@ -108,19 +169,48 @@ class ServingEngine:
         self.cfg, self.params, self.sc = cfg, params, sc
         self.decode = jax.jit(make_decode_step(cfg, pol, sc.attention))
         self.prefill = jax.jit(make_prefill_step(cfg, pol, sc.attention))
-        self.caches = T.init_caches(cfg, sc.batch_slots, sc.max_len,
-                                    jnp.dtype(sc.cache_dtype))
-        self.slot_pos = np.zeros(sc.batch_slots, np.int32)
-        self.slot_live = np.zeros(sc.batch_slots, bool)
-        self.slot_out: List[List[int]] = [[] for _ in range(sc.batch_slots)]
+        B = sc.batch_slots
+        self.paged = sc.paged()
+        if self.paged:
+            ps = sc.attention.page_size
+            self.n_blocks = -(-sc.max_len // ps)
+            n_pages = (sc.cache_pages if sc.cache_pages is not None
+                       else B * self.n_blocks)
+            if n_pages < self.n_blocks:
+                raise ValueError(
+                    f"cache_pages={n_pages} cannot back even one full-length"
+                    f" request (ceil(max_len/page_size) = {self.n_blocks} "
+                    f"pages); a preempted request could never resume")
+            self.pool = PagePool(n_pages, ps)
+            self.caches = T.init_paged_caches(cfg, B, n_pages, ps,
+                                              jnp.dtype(sc.cache_dtype))
+            self.block_tables = np.zeros((B, self.n_blocks), np.int32)
+            self.slot_tables: List[Optional[BlockTable]] = [None] * B
+            self.slot_rid = np.full(B, -1, np.int64)
+            self.slot_prompt: List[List[int]] = [[] for _ in range(B)]
+            self.wait: List[_Waiting] = []
+            # rid → accumulated output stream. Entries persist past natural
+            # retirement so the caller can read the finished stream; a
+            # long-running server should request_out.pop(rid) once consumed
+            # (cancel() and generate()'s reset drop theirs automatically).
+            self.request_out: Dict[int, List[int]] = {}
+            self._next_rid = 0
+            self.n_preemptions = 0
+        else:
+            self.caches = T.init_caches(cfg, B, sc.max_len,
+                                        jnp.dtype(sc.cache_dtype))
+        self.slot_pos = np.zeros(B, np.int32)
+        self.slot_live = np.zeros(B, bool)
+        self.slot_out: List[List[int]] = [[] for _ in range(B)]
         # Next sampled token per slot, already decoded but not yet reported:
         # seeded by submit() from the prefill logits, advanced by step().
-        self.slot_next = np.zeros(sc.batch_slots, np.int32)
+        self.slot_next = np.zeros(B, np.int32)
         # Draining slots hold a final pending token but may not decode
         # further (their cache is full): step() reports it, then retires —
         # the freshly decoded last token is never silently dropped.
-        self.slot_drain = np.zeros(sc.batch_slots, bool)
+        self.slot_drain = np.zeros(B, bool)
 
+    # -- shared helpers -----------------------------------------------------
     def _sample(self, logits: jax.Array,
                 key: Optional[jax.Array] = None) -> jax.Array:
         """The single sampling rule shared by generate(), submit() and
@@ -134,7 +224,8 @@ class ServingEngine:
 
     def _reset_slot_caches(self, slot: int):
         """Zero a slot's valid lengths so a recycled slot starts from
-        position 0 (stale K/V beyond len=0 is invisible to attention)."""
+        position 0 (stale K/V beyond len=0 — contiguous rows or recycled
+        pool pages alike — is invisible to attention)."""
         def rec(node):
             if isinstance(node, dict):
                 if "state" in node:
@@ -151,17 +242,52 @@ class ServingEngine:
             return node
         self.caches = rec(self.caches)
 
+    def _bt_device(self) -> jnp.ndarray:
+        return jnp.asarray(self.block_tables)
+
+    def _handle(self, slot: int) -> int:
+        """What submit()/step() key results by: request id in paged mode
+        (requests migrate across slots under preemption), slot id else."""
+        return int(self.slot_rid[slot]) if self.paged else slot
+
     # -- single-prompt helpers (used by tests/examples) ---------------------
     def generate(self, prompts: np.ndarray, n_tokens: int,
                  key: Optional[jax.Array] = None) -> np.ndarray:
         """prompts: (B, S) int32 — B must equal batch_slots. Returns
-        (B, n_tokens) generated ids."""
+        (B, n_tokens) generated ids. In paged mode the pool is reset (all
+        in-flight submit() requests dropped) and every row gets pages for
+        its full S + n_tokens horizon up front."""
         B, S = prompts.shape
-        assert B == self.sc.batch_slots
+        if B != self.sc.batch_slots:
+            raise ValueError(
+                f"generate() got prompts shaped {tuple(prompts.shape)} "
+                f"(batch {B}), but this engine was built with "
+                f"ServeConfig.batch_slots={self.sc.batch_slots}; the "
+                f"batched path needs one prompt per slot")
+        bt = None
+        if self.paged:
+            if S + n_tokens > self.sc.max_len:
+                raise ValueError(
+                    f"generate() horizon S+n_tokens = {S + n_tokens} "
+                    f"exceeds max_len={self.sc.max_len}")
+            self._reset_paged_state()
+            need = self.pool.pages_needed(S + n_tokens)
+            if not self.pool.can_alloc(need * B):
+                raise ValueError(
+                    f"batched generate needs {need * B} pages "
+                    f"({need}/row), pool holds {self.pool.n_pages}; raise "
+                    f"cache_pages or use submit()/step() admission")
+            for s in range(B):
+                tbl = BlockTable(self.pool)
+                tbl.ensure(S + n_tokens)
+                self.slot_tables[s] = tbl
+                tbl.as_row(self.n_blocks, out=self.block_tables[s])
+            bt = self._bt_device()
         positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
-        logits, self.caches = self.prefill(
-            self.params, {"tokens": jnp.asarray(prompts),
-                          "positions": positions}, self.caches)
+        batch = {"tokens": jnp.asarray(prompts), "positions": positions}
+        if bt is not None:
+            batch["block_tables"] = bt
+        logits, self.caches = self.prefill(self.params, batch, self.caches)
         out = []
         key, sub = (jax.random.split(key) if key is not None
                     else (None, None))
@@ -170,16 +296,53 @@ class ServingEngine:
             out.append(np.asarray(tok)[:, 0])
             pos = jnp.full((B, 1), S + i, jnp.int32)
             logits, self.caches = self.decode(self.params, tok, pos,
-                                              self.caches)
+                                              self.caches, bt)
             key, sub = (jax.random.split(key) if key is not None
                         else (None, None))
             tok = self._sample(logits, sub)[:, None].astype(jnp.int32)
+        if self.paged:
+            # the generated tokens are complete and no slot is live — the
+            # horizon pages are dead; returning them keeps a later
+            # submit() from inheriting (and silently dropping) ownership
+            self._reset_paged_state()
         return np.stack(out, axis=1)
+
+    def _reset_paged_state(self):
+        """Drop every in-flight request and return all pages to the pool
+        (batched generate() owns the whole engine)."""
+        for s in range(self.sc.batch_slots):
+            if self.slot_tables[s] is not None:
+                self.slot_tables[s].free()
+                self.slot_tables[s] = None
+            if self.slot_live[s]:       # dropped mid-flight: stream is dead
+                self.request_out.pop(int(self.slot_rid[s]), None)
+        for w in self.wait:
+            self.request_out.pop(w.rid, None)
+        # Zero every row's valid length unconditionally: generate() writes
+        # caches without advancing slot_pos, so per-slot reset heuristics
+        # would let `len` accumulate across generate() calls (inflating
+        # kv_valid_len past the block-table-backed range — garbage keys
+        # under non-causal attention, dead block-skip under causal).
+        def rec(node):
+            if isinstance(node, dict):
+                return {k: (jnp.zeros_like(v) if k == "len" else rec(v))
+                        for k, v in node.items()}
+            if isinstance(node, (list, tuple)):
+                return type(node)(rec(v) for v in node)
+            return node
+        self.caches = rec(self.caches)
+        self.block_tables[:] = 0
+        self.slot_rid[:] = -1
+        self.slot_live[:] = False
+        self.slot_drain[:] = False
+        self.slot_pos[:] = 0
+        self.wait.clear()
 
     # -- continuous batching -------------------------------------------------
     def submit(self, prompt: List[int],
                key: Optional[jax.Array] = None) -> Optional[int]:
-        """Admit a request into a free slot; returns slot id or None.
+        """Admit a request; returns its handle (paged: request id,
+        contiguous: slot id) or None when it cannot be admitted now.
 
         Masked single-slot prefill: the whole prompt runs as one prefill
         call in which every *other* batch row carries position -1 — the
@@ -189,15 +352,23 @@ class ServingEngine:
         other live slot's cache and inflated their lengths — the
         interleaved-submit corruption regression in tests/test_serving.py.)
 
+        **Bucketed prefill**: the prompt is right-padded to the next
+        power-of-two length with position −1 columns (dropped from the
+        cache write, zero rows in attention), so at most log2(max_len)
+        prefill programs ever compile instead of one per distinct prompt
+        length; the logits seeding the first token are read from the last
+        *real* column, leaving the token stream bit-identical to an
+        unpadded prefill (the regression test in tests/test_serving.py).
+
         The prefill's last-position logits seed the slot's pending greedy
         token, so the first decode step is conditioned on the real prompt,
         not a pseudo-BOS; step() reports that token first — no token of the
         stream is lost. Recycled slots restart from position 0 with their
         valid lengths zeroed.
 
-        Known trade: each distinct prompt length S compiles its own (B, S)
-        prefill. Callers with many lengths should bucket/pad prompts; the
-        position masking is per-row, so column padding needs care.
+        Paged admission is page-bound: a free slot AND enough free pages to
+        cover the prompt (decode growth allocates on demand; the padding
+        columns cost nothing — pages back real tokens only).
         """
         if self.cfg.family in ("ssm", "hybrid") and self.sc.batch_slots > 1:
             raise NotImplementedError(
@@ -214,28 +385,170 @@ class ServingEngine:
         if free.size == 0:
             return None
         slot = int(free[0])
+        prompt = [int(t) for t in prompt]
+        if not self.paged:
+            self._admit(slot, prompt, key=key)
+            return slot
+        if not self.pool.can_alloc(self.pool.pages_needed(len(prompt))):
+            return None              # page-bound admission, not slot-bound
+        assert self.slot_tables[slot] is None, \
+            f"free slot {slot} still owns a block table (page leak)"
+        rid = self._next_rid
+        self._next_rid += 1
+        tbl = BlockTable(self.pool)
+        tbl.ensure(len(prompt))
+        self.slot_tables[slot] = tbl
+        tbl.as_row(self.n_blocks, out=self.block_tables[slot])
+        self.slot_rid[slot] = rid
+        self.slot_prompt[slot] = prompt
+        self._admit(slot, prompt, key=key)
+        self.request_out[rid] = self.slot_out[slot]
+        return rid
+
+    def _admit(self, slot: int, tokens: List[int], *,
+               restore: Optional[_Waiting] = None,
+               key: Optional[jax.Array] = None):
+        """Masked, bucketed prefill of ``tokens`` into ``slot``. With
+        ``restore`` (resume after preemption) the pending token and output
+        stream are carried over instead of re-sampled, so the resumed
+        stream is identical to an uninterrupted one under any sampling."""
         if self.slot_pos[slot]:        # recycled slot: restart from pos 0
             self._reset_slot_caches(slot)
             self.slot_pos[slot] = 0
-        B, S = self.sc.batch_slots, len(prompt)
-        tok = np.zeros((B, S), np.int32)
-        tok[slot] = np.asarray(prompt, np.int32)
-        pos = np.full((B, S), -1, np.int32)
-        pos[slot] = np.arange(S)
-        logits, self.caches = self.prefill(
-            self.params, {"tokens": jnp.asarray(tok),
-                          "positions": jnp.asarray(pos)}, self.caches)
+        B, S = self.sc.batch_slots, len(tokens)
+        # Bucket padding relies on the position −1 masking contract, which
+        # SSD/conv recurrent state is outside of (it carries no positions):
+        # pad columns would enter the recurrence as real tokens. Those
+        # families (admitted only with batch_slots == 1) prefill unpadded.
+        if self.cfg.family in ("ssm", "hybrid"):
+            Sb = S
+        else:
+            Sb = min(_next_pow2(S), max(self.sc.max_len, S))
+        tok = np.zeros((B, Sb), np.int32)
+        tok[slot, :S] = tokens
+        pos = np.full((B, Sb), -1, np.int32)
+        pos[slot, :S] = np.arange(S)
+        batch = {"tokens": jnp.asarray(tok), "positions": jnp.asarray(pos),
+                 "last_cols": jnp.full((B,), S - 1, jnp.int32)}
+        if self.paged:
+            batch["block_tables"] = self._bt_device()
+        logits, self.caches = self.prefill(self.params, batch, self.caches)
         self.slot_pos[slot] = S
         self.slot_live[slot] = True
+        self.slot_drain[slot] = S >= self.sc.max_len
+        if restore is None:
+            self.slot_out[slot] = []
+            self.slot_next[slot] = int(self._sample(logits[slot][None],
+                                                    key)[0])
+        else:
+            self.slot_out[slot] = restore.out
+            self.slot_next[slot] = restore.next_tok
+
+    # -- paged scheduling ---------------------------------------------------
+    def _preempt(self, slot: int):
+        """Spill ``slot``'s request to the wait queue: free its pages, park
+        prompt/stream/pending-token host-side. Its cache pages are
+        recycled; resume re-prefills prompt+out (docs/serving.md)."""
+        self.wait.append(_Waiting(
+            rid=int(self.slot_rid[slot]), prompt=self.slot_prompt[slot],
+            out=self.slot_out[slot], next_tok=int(self.slot_next[slot])))
+        self.n_preemptions += 1
+        self.slot_tables[slot].free()
+        self.slot_tables[slot] = None
+        self.block_tables[slot] = 0
+        self.slot_rid[slot] = -1
+        self.slot_live[slot] = False
         self.slot_drain[slot] = False
-        self.slot_out[slot] = []
-        self.slot_next[slot] = int(self._sample(logits[slot][None], key)[0])
-        return slot
+        # slot_pos stays nonzero → the next _admit resets this slot's lens
+
+    def _try_resume(self):
+        """Re-admit waiting requests (strict FIFO — oldest first, no
+        queue-jumping) while a slot and pages for their full re-prefill are
+        available."""
+        while self.wait:
+            free = np.where(~self.slot_live)[0]
+            if free.size == 0:
+                return
+            w = self.wait[0]
+            tokens = w.prompt + w.out
+            if not self.pool.can_alloc(self.pool.pages_needed(len(tokens))):
+                return
+            self.wait.pop(0)
+            slot = int(free[0])
+            assert self.slot_tables[slot] is None, \
+                f"free slot {slot} still owns a block table (page leak)"
+            tbl = BlockTable(self.pool)
+            tbl.ensure(len(tokens))
+            self.slot_tables[slot] = tbl
+            tbl.as_row(self.n_blocks, out=self.block_tables[slot])
+            self.slot_rid[slot] = w.rid
+            self.slot_prompt[slot] = w.prompt
+            self._admit(slot, tokens, restore=w)
+
+    def _grow_pages_for_decode(self):
+        """Back every decodable slot's next position with a page, oldest
+        request first; when the pool is dry, preempt the youngest live
+        request (possibly the requester itself) until it isn't."""
+        order = sorted(
+            (s for s in range(self.sc.batch_slots)
+             if self.slot_live[s] and not self.slot_drain[s]),
+            key=lambda s: self.slot_rid[s])
+        for s in order:
+            if not self.slot_live[s]:
+                continue               # preempted by an older slot's growth
+            pos = int(self.slot_pos[s])
+            if pos < self.slot_tables[s].capacity():
+                continue
+            while not self.pool.can_alloc(1):
+                victim = max(
+                    (t for t in range(self.sc.batch_slots)
+                     if self.slot_live[t]),
+                    key=lambda t: self.slot_rid[t])
+                self._preempt(victim)
+                if victim == s:
+                    break              # self-preempted: wait queue, no grow
+            if not self.slot_live[s]:
+                continue
+            self.slot_tables[s].ensure(pos + 1)
+            self.slot_tables[s].as_row(self.n_blocks,
+                                       out=self.block_tables[s])
+
+    def _retire(self, slot: int):
+        self.slot_live[slot] = False
+        self.slot_drain[slot] = False
+        if self.paged:
+            self.slot_tables[slot].free()
+            self.slot_tables[slot] = None
+            self.block_tables[slot] = 0
+            self.slot_rid[slot] = -1
+
+    def cancel(self, handle: int) -> bool:
+        """Abort a request by the handle submit() returned (request id in
+        paged mode, slot id else), releasing its slot — and, when paged,
+        its pages (or its wait-queue entry). Returns True if found."""
+        if not self.paged:
+            if 0 <= handle < self.sc.batch_slots and self.slot_live[handle]:
+                self.slot_live[handle] = False
+                self.slot_drain[handle] = False
+                return True
+            return False
+        for s in range(self.sc.batch_slots):
+            if self.slot_live[s] and self.slot_rid[s] == handle:
+                self._retire(s)
+                self.request_out.pop(handle, None)
+                return True
+        for i, w in enumerate(self.wait):
+            if w.rid == handle:
+                self.wait.pop(i)
+                self.request_out.pop(handle, None)
+                return True
+        return False
 
     def step(self, key: Optional[jax.Array] = None) -> Dict[int, int]:
         """One decode iteration across all live slots; non-live and
         draining slots are masked out (position -1 → no cache write, no
-        length bump).
+        length bump). Returns {handle: token} — handles are request ids in
+        paged mode, slot ids else.
 
         Reports each slot's *pending* token (decoded last round, or by the
         submit prefill) and pipelines the decode of the one after — the
@@ -243,21 +556,31 @@ class ServingEngine:
         token for token. Sampling honors ServeConfig.temperature when a
         PRNG ``key`` is supplied (the same _sample rule as generate()).
 
+        Paged mode first resumes waiting requests (oldest-first) into free
+        slots, then backs each decodable slot's next position with a page —
+        preempting the youngest request when the pool is dry — and only
+        then decodes. Retirement returns pages to the pool.
+
         A slot whose cache fills (slot_pos reaches max_len — every cache
         index written) enters a one-round *drain*: its final pending token
         — freshly decoded last round — is still reported before the slot
         retires, so no token of the stream is ever dropped at retirement.
         """
+        if self.paged:
+            self._try_resume()
         if not self.slot_live.any():
             return {}
+        if self.paged:
+            self._grow_pages_for_decode()
         decodable = self.slot_live & ~self.slot_drain
         nxt = None
         if decodable.any():
             tok = jnp.asarray(self.slot_next)[:, None]
             pos = jnp.asarray(np.where(decodable, self.slot_pos,
                                        -1).astype(np.int32))[:, None]
+            bt = self._bt_device() if self.paged else None
             logits, self.caches = self.decode(self.params, tok, pos,
-                                              self.caches)
+                                              self.caches, bt)
             nxt = np.asarray(self._sample(logits, key))
         out = {}
         for s in range(self.sc.batch_slots):
@@ -265,10 +588,9 @@ class ServingEngine:
                 continue
             t = int(self.slot_next[s])
             self.slot_out[s].append(t)
-            out[s] = t
+            out[self._handle(s)] = t
             if self.slot_drain[s]:      # final pending token flushed above
-                self.slot_live[s] = False
-                self.slot_drain[s] = False
+                self._retire(s)
                 continue
             self.slot_next[s] = int(nxt[s])
             self.slot_pos[s] += 1

@@ -1,0 +1,169 @@
+"""Page pool for the paged KV cache: fixed-size pages, free list, ref counts.
+
+The contiguous serving cache reserves ``batch_slots × max_len`` KV rows —
+memory scales with the *worst case* length of every slot. This module is
+the allocator side of the paged subsystem (docs/serving.md): the cache is a
+pool of fixed-size pages (``page_size`` tokens each, sized to the paged
+attention kernel's key-block — ``kernels/paged_attention.py``), requests
+own pages through per-request :class:`BlockTable`\\ s, and memory scales
+with the tokens actually resident. Admission becomes **page-bound** instead
+of slot-bound, and when the pool runs dry the engine spills the lowest-
+priority request back to its wait queue (``serving/engine.py`` owns that
+scheduling decision; the pool owns the accounting it relies on).
+
+Everything here is host-side bookkeeping (plain ints/numpy) — the device
+only ever sees the resulting ``(B, n_blocks)`` int32 block-table array and
+the page-pool tensors it indexes.
+
+Invariants (property-tested in tests/test_kv_pool.py):
+
+  * a page is either on the free list or referenced, never both;
+    ``free_pages + pages_in_use == n_pages`` at all times;
+  * no page is referenced by two live block tables (ref counts exist for
+    future prefix sharing, but allocation always hands out count-1 pages);
+  * release is idempotent-safe only through ownership: double-free raises.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+__all__ = ["PagePool", "BlockTable", "PoolExhausted", "pages_needed"]
+
+
+class PoolExhausted(RuntimeError):
+    """Raised by :meth:`PagePool.alloc` when the free list cannot cover a
+    request — the engine's cue to preempt or defer."""
+
+
+def pages_needed(n_tokens: int, page_size: int) -> int:
+    """Pages covering ``n_tokens`` cache slots (ceil division; 0 → 0)."""
+    return -(-n_tokens // page_size)
+
+
+class PagePool:
+    """A pool of ``n_pages`` KV pages of ``page_size`` tokens each.
+
+    ``alloc`` pops from the free list and sets the page's ref count to 1;
+    ``release`` decrements and returns count-0 pages to the free list.
+    ``retain`` exists for sharing (e.g. prefix caching) but the serving
+    engine never shares today, so the no-two-live-tables invariant holds.
+    """
+
+    def __init__(self, n_pages: int, page_size: int):
+        if n_pages < 1 or page_size < 1:
+            raise ValueError(
+                f"PagePool needs n_pages >= 1 and page_size >= 1, got "
+                f"n_pages={n_pages}, page_size={page_size}")
+        self.n_pages = int(n_pages)
+        self.page_size = int(page_size)
+        # popped from the tail → ascending page ids first (determinism)
+        self._free: List[int] = list(range(n_pages - 1, -1, -1))
+        self.refcount = np.zeros(n_pages, np.int64)
+
+    # -- accounting ---------------------------------------------------------
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def pages_in_use(self) -> int:
+        return int((self.refcount > 0).sum())
+
+    def pages_needed(self, n_tokens: int) -> int:
+        return pages_needed(n_tokens, self.page_size)
+
+    def can_alloc(self, n: int) -> bool:
+        return n <= self.free_pages
+
+    # -- alloc / free -------------------------------------------------------
+    def alloc(self, n: int) -> List[int]:
+        """Pop ``n`` pages off the free list (ref count 1 each); raises
+        :class:`PoolExhausted` without side effects when short."""
+        if n < 0:
+            raise ValueError(f"alloc({n})")
+        if n > self.free_pages:
+            raise PoolExhausted(
+                f"need {n} pages, {self.free_pages} free of {self.n_pages}")
+        pages = [self._free.pop() for _ in range(n)]
+        self.refcount[pages] += 1
+        return pages
+
+    def retain(self, pages: Sequence[int]) -> None:
+        """Add a reference to already-allocated pages (sharing)."""
+        for p in pages:
+            if self.refcount[p] <= 0:
+                raise ValueError(f"retain of unallocated page {p}")
+        self.refcount[list(pages)] += 1
+
+    def release(self, pages: Sequence[int]) -> None:
+        """Drop one reference per page; count-0 pages rejoin the free list."""
+        for p in pages:
+            if self.refcount[p] <= 0:
+                raise ValueError(f"double free of page {p}")
+            self.refcount[p] -= 1
+            if self.refcount[p] == 0:
+                self._free.append(int(p))
+
+    def check(self) -> None:
+        """Assert the free-list/ref-count invariants (tests, debugging)."""
+        free = set(self._free)
+        assert len(free) == len(self._free), "duplicate free-list entries"
+        used = {int(p) for p in np.nonzero(self.refcount > 0)[0]}
+        assert not (free & used), f"pages both free and referenced: {free & used}"
+        assert len(free) + len(used) == self.n_pages, (
+            f"page leak: {len(free)} free + {len(used)} used != {self.n_pages}")
+        assert (self.refcount >= 0).all()
+
+
+@dataclasses.dataclass
+class BlockTable:
+    """One request's logical-block → physical-page map.
+
+    ``pages[j]`` backs logical key positions ``[j*ps, (j+1)*ps)``. The
+    engine grows it one page at a time during decode (:meth:`ensure`) and
+    renders it into the fixed-width device array with :meth:`as_row`
+    (unallocated entries are 0 — any *valid* page id works, the kernel's
+    length mask gives those keys zero weight).
+    """
+
+    pool: PagePool
+    pages: List[int] = dataclasses.field(default_factory=list)
+
+    @property
+    def n_pages(self) -> int:
+        return len(self.pages)
+
+    def capacity(self) -> int:
+        """Token positions currently backed by pages."""
+        return len(self.pages) * self.pool.page_size
+
+    def ensure(self, n_tokens: int) -> List[int]:
+        """Allocate pages until ``n_tokens`` positions are backed; returns
+        the newly allocated pages. Raises PoolExhausted (allocating nothing)
+        when the pool cannot cover the growth."""
+        need = self.pool.pages_needed(n_tokens) - len(self.pages)
+        if need <= 0:
+            return []
+        fresh = self.pool.alloc(need)
+        self.pages.extend(fresh)
+        return fresh
+
+    def free(self) -> None:
+        """Return every page to the pool (request retirement/preemption)."""
+        self.pool.release(self.pages)
+        self.pages = []
+
+    def as_row(self, n_blocks: int, out: Optional[np.ndarray] = None
+               ) -> np.ndarray:
+        """The (n_blocks,) int32 device row; unallocated entries are 0."""
+        if len(self.pages) > n_blocks:
+            raise ValueError(
+                f"block table holds {len(self.pages)} pages > n_blocks="
+                f"{n_blocks}")
+        row = out if out is not None else np.zeros(n_blocks, np.int32)
+        row[:] = 0
+        row[:len(self.pages)] = self.pages
+        return row

@@ -13,11 +13,15 @@ unfused reference formula.
 
 The **attention grid** applies the same discipline to the AttentionPolicy
 registry (docs/attention.md): every attention backend — the offset-aware
-fused flash kernel (interpret mode on CPU) and the unfused einsum +
-host-softmax baseline — must match ``kernels/ref.py::mha_ref`` on cases
-covering prefill, single-token decode against a long ragged cache, GQA
-head grouping, non-causal ragged keys, and serving's masked position −1
-rows.
+fused flash kernel (interpret mode on CPU), the unfused einsum +
+host-softmax baseline, and the block-table **paged** kernel
+(kernels/paged_attention.py, docs/serving.md) — must match
+``kernels/ref.py::mha_ref`` on cases covering prefill, single-token decode
+against a long ragged cache, GQA head grouping, non-causal ragged keys,
+and serving's masked position −1 rows. Paged cells scatter the dense K/V
+into a page pool under a *shuffled* page assignment with garbage-filled
+distractor pages, so any fetch outside the block table, any masking slip
+past ``kv_valid_len``, or any logical/physical confusion diverges loudly.
 
 Used three ways:
   * ``tests/test_parity.py`` parametrizes pytest over the grids (tier-1
@@ -145,8 +149,9 @@ def check_quantized_cell(backend: str,
 # Attention grid (backend × dtype × case)
 # ---------------------------------------------------------------------------
 
-ATTN_BACKENDS = ("unfused", "fused_interpret")
+ATTN_BACKENDS = ("unfused", "fused_interpret", "paged_interpret")
 ATTN_DTYPES = ("float32", "bfloat16")       # fp only: scores are fp32 always
+ATTN_PAGE_SIZE = 16                          # key-block of the paged cells
 
 # (atol, rtol) per dtype for attention outputs (post-softmax, O(1) scale).
 ATTN_TOLS = {"float32": (3e-5, 3e-5), "bfloat16": (3e-2, 3e-2)}
@@ -219,18 +224,55 @@ def make_attention_operands(case: AttnCase, dtype: str, seed: int = 0):
     return q, k, v, q_positions, kv_valid_len
 
 
+def make_paged_operands(k, v, page_size: int = ATTN_PAGE_SIZE,
+                        seed: int = 0, n_distractors: int = 3,
+                        garbage: float = 100.0):
+    """Scatter dense (B, T, Hkv, D) K/V into page pools under a shuffled
+    page assignment. Returns (k_pages, v_pages, block_tables); distractor
+    pages and every unwritten slot are filled with large garbage so an
+    out-of-table fetch cannot silently agree with the oracle. (Also the
+    single pool-construction helper for tests/test_paged_attention.py.)"""
+    B, T, Hkv, D = k.shape
+    nb = -(-T // page_size)
+    P = B * nb + n_distractors                  # garbage distractor pages
+    rng = np.random.default_rng(seed * 31 + B * 101 + T)
+    kp = (rng.standard_normal((P, page_size, Hkv, D)) * garbage).astype(
+        np.float32)
+    vp = (rng.standard_normal((P, page_size, Hkv, D)) * garbage).astype(
+        np.float32)
+    assign = rng.permutation(P)[:B * nb].reshape(B, nb)
+    kn, vn = np.asarray(k, np.float32), np.asarray(v, np.float32)
+    for b in range(B):
+        for t in range(T):
+            page = assign[b, t // page_size]
+            kp[page, t % page_size] = kn[b, t]
+            vp[page, t % page_size] = vn[b, t]
+    dt = jnp.dtype(k.dtype)
+    return (jnp.asarray(kp).astype(dt), jnp.asarray(vp).astype(dt),
+            jnp.asarray(assign.astype(np.int32)))
+
+
 def check_attention_cell(backend: str, dtype: str,
                          case: AttnCase) -> ParityResult:
     """One attention cell: backend output vs the mha_ref oracle, plus the
-    masked-row zero contract. Raises AssertionError with context."""
+    masked-row zero contract. Raises AssertionError with context. Paged
+    backends read K/V through a shuffled block table over a distractor-
+    laden pool; the oracle still sees the dense cache."""
     q, k, v, q_positions, kv_valid_len = make_attention_operands(case, dtype)
     ref = np.asarray(mha_ref(q, k, v, causal=case.causal,
                              q_positions=q_positions,
                              kv_valid_len=kv_valid_len), np.float32)
-    pol = AttentionPolicy(backend=backend, block_q=32, block_k=32)
-    out = api.attention(q, k, v, q_positions=q_positions,
-                        kv_valid_len=kv_valid_len, causal=case.causal,
-                        policy=pol)
+    pol = AttentionPolicy(backend=backend, block_q=32, block_k=32,
+                          page_size=ATTN_PAGE_SIZE)
+    if backend.startswith("paged"):
+        kp, vp, bt = make_paged_operands(k, v)
+        out = api.attention(q, kp, vp, q_positions=q_positions,
+                            kv_valid_len=kv_valid_len, causal=case.causal,
+                            block_tables=bt, policy=pol)
+    else:
+        out = api.attention(q, k, v, q_positions=q_positions,
+                            kv_valid_len=kv_valid_len, causal=case.causal,
+                            policy=pol)
     ctx = f"attention backend={backend} dtype={dtype} case={case.name}"
     assert out.shape == q.shape[:3] + (v.shape[-1],), (ctx, out.shape)
     got = np.asarray(out, np.float32)
@@ -300,11 +342,17 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     ap.add_argument("--no-attention", action="store_true",
                     help="skip the attention backend grid (runs for the fp "
                          "dtypes in --dtypes)")
+    ap.add_argument("--attn-backends", nargs="+",
+                    default=list(ATTN_BACKENDS),
+                    help="attention grid backends; paged_interpret cells "
+                         "read K/V through shuffled block tables over a "
+                         "distractor-laden page pool")
     args = ap.parse_args(argv)
     results = run_grid(args.backends, args.dtypes,
                        quantized=not args.no_quantized)
     if not args.no_attention:
         results += run_attention_grid(
+            backends=args.attn_backends,
             dtypes=[d for d in args.dtypes if d in ATTN_TOLS])
     print(f"parity: {len(results)} cells OK "
           f"(backends={args.backends}, dtypes={args.dtypes})")

@@ -1,0 +1,161 @@
+"""PagePool / BlockTable invariants: unit tests + hypothesis properties.
+
+The properties the paged serving engine's correctness rests on
+(docs/serving.md):
+
+  * no page is ever referenced by two live block tables;
+  * free-list accounting balances across arbitrary admit / grow / retire /
+    preempt cycles (free + in-use == n_pages, no page both free and used);
+  * allocation hands out each page at most once until released.
+
+The third pillar — a preempted-then-resumed request's token stream being
+identical to an uninterrupted run — needs a real model and lives in
+tests/test_serving.py.
+"""
+import numpy as np
+import pytest
+
+from hypcompat import given, settings, st
+
+from repro.serving.kv_pool import (BlockTable, PagePool, PoolExhausted,
+                                   pages_needed)
+
+
+# ---------------------------------------------------------------------------
+# Unit tests
+# ---------------------------------------------------------------------------
+
+def test_pages_needed():
+    assert pages_needed(0, 8) == 0
+    assert pages_needed(1, 8) == 1
+    assert pages_needed(8, 8) == 1
+    assert pages_needed(9, 8) == 2
+
+
+def test_alloc_release_roundtrip():
+    pool = PagePool(4, 8)
+    a = pool.alloc(3)
+    assert len(set(a)) == 3 and pool.free_pages == 1
+    pool.release(a)
+    assert pool.free_pages == 4
+    pool.check()
+
+
+def test_exhaustion_raises_without_side_effects():
+    pool = PagePool(2, 8)
+    pool.alloc(1)
+    with pytest.raises(PoolExhausted):
+        pool.alloc(2)
+    assert pool.free_pages == 1          # the failed alloc took nothing
+    pool.check()
+
+
+def test_double_free_raises():
+    pool = PagePool(2, 8)
+    a = pool.alloc(1)
+    pool.release(a)
+    with pytest.raises(ValueError, match="double free"):
+        pool.release(a)
+
+
+def test_retain_release_refcount():
+    pool = PagePool(2, 8)
+    a = pool.alloc(1)
+    pool.retain(a)
+    pool.release(a)
+    assert pool.free_pages == 1          # still one reference out
+    pool.release(a)
+    assert pool.free_pages == 2
+    pool.check()
+
+
+def test_block_table_grows_and_frees():
+    pool = PagePool(8, 4)
+    tbl = BlockTable(pool)
+    assert tbl.ensure(3) and tbl.n_pages == 1 and tbl.capacity() == 4
+    assert tbl.ensure(4) == []           # already covered
+    assert tbl.ensure(9) and tbl.n_pages == 3
+    row = tbl.as_row(6)
+    assert row.dtype == np.int32 and (row[3:] == 0).all()
+    assert list(row[:3]) == tbl.pages
+    tbl.free()
+    assert tbl.n_pages == 0 and pool.free_pages == 8
+    pool.check()
+
+
+def test_as_row_rejects_overflow():
+    pool = PagePool(8, 4)
+    tbl = BlockTable(pool)
+    tbl.ensure(16)
+    with pytest.raises(ValueError, match="n_blocks"):
+        tbl.as_row(2)
+
+
+def test_invalid_config_rejected():
+    with pytest.raises(ValueError):
+        PagePool(0, 8)
+    with pytest.raises(ValueError):
+        PagePool(8, 0)
+
+
+# ---------------------------------------------------------------------------
+# Property tests: random admit / grow / retire / preempt schedules
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=200, deadline=None)
+@given(st.integers(4, 32), st.integers(1, 16),
+       st.lists(st.tuples(st.integers(0, 3), st.integers(1, 40)),
+                min_size=1, max_size=60))
+def test_pool_invariants_under_random_schedules(n_pages, page_size, ops):
+    """Ops: (0, n) admit request of n tokens; (1, i) grow request i by one
+    token; (2, i) retire request i; (3, i) preempt request i (identical
+    accounting to retire — the engine re-admits from scratch). After every
+    op: live tables disjoint, accounting balanced."""
+    pool = PagePool(n_pages, page_size)
+    live = {}                           # rid -> (BlockTable, n_tokens)
+    next_rid = 0
+    for kind, arg in ops:
+        if kind == 0:                   # admit
+            need = pool.pages_needed(arg)
+            tbl = BlockTable(pool)
+            if pool.can_alloc(need):
+                tbl.ensure(arg)
+                live[next_rid] = [tbl, arg]
+                next_rid += 1
+            else:
+                with pytest.raises(PoolExhausted):
+                    pool.alloc(need)
+        elif kind in (1, 2, 3) and live:
+            rid = sorted(live)[arg % len(live)]
+            tbl, n = live[rid]
+            if kind == 1:               # grow one token (decode step)
+                if pool.can_alloc(pool.pages_needed(n + 1) - tbl.n_pages):
+                    tbl.ensure(n + 1)
+                    live[rid][1] = n + 1
+            else:                       # retire / preempt: free everything
+                tbl.free()
+                del live[rid]
+        # -- invariants ----------------------------------------------------
+        pool.check()
+        owned = [p for tbl, _ in live.values() for p in tbl.pages]
+        assert len(owned) == len(set(owned)), \
+            "a page is referenced by two live block tables"
+        assert pool.free_pages + len(owned) == pool.n_pages
+        for tbl, n in live.values():
+            assert tbl.capacity() >= n   # every resident token is backed
+    # final drain balances exactly
+    for tbl, _ in live.values():
+        tbl.free()
+    pool.check()
+    assert pool.free_pages == pool.n_pages
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.integers(1, 64), st.integers(1, 16))
+def test_alloc_is_duplicate_free(n, page_size):
+    pool = PagePool(64, page_size)
+    pages = pool.alloc(n)
+    assert len(set(pages)) == n
+    assert (pool.refcount[pages] == 1).all()
+    pool.release(pages)
+    assert pool.free_pages == 64

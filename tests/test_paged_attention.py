@@ -1,0 +1,118 @@
+"""Paged attention kernel: block-table indirection vs the mha_ref oracle.
+
+The parity grid (tests/parity.py) covers the backend-level contract; these
+tests hit kernels/paged_attention.py directly for the properties only the
+paged layout can break: shuffled physical assignment, garbage distractor
+pages, unallocated-tail block-table entries, partial last pages, and the
+page-gather inverse.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from parity import make_paged_operands
+
+from repro.kernels.paged_attention import gather_pages, paged_attention
+from repro.kernels.ref import mha_ref
+
+
+def build_paged(rng, B, T, Hkv, D, ps, garbage=100.0):
+    """Dense K/V plus an equivalent shuffled, distractor-laden pool —
+    pool construction shared with the parity harness (one layout helper,
+    tests/parity.py::make_paged_operands)."""
+    k = jnp.asarray(rng.standard_normal((B, T, Hkv, D)).astype(np.float32))
+    v = jnp.asarray(rng.standard_normal((B, T, Hkv, D)).astype(np.float32))
+    kp, vp, bt = make_paged_operands(k, v, page_size=ps,
+                                     seed=int(rng.integers(1 << 16)),
+                                     garbage=garbage)
+    return k, v, kp, vp, bt
+
+
+@pytest.mark.parametrize("case", [
+    # name, B, Sq, T, H, Hkv, ps, causal, q_offsets, kv_lens
+    ("prefill", 2, 32, 32, 4, 4, 8, True, None, None),
+    ("prefill_gqa_ragged", 2, 33, 33, 4, 2, 8, True, None, None),
+    ("decode_offsets", 3, 1, 96, 4, 2, 16, True, (5, 80, 37), (6, 81, 38)),
+    ("decode_masked_row", 3, 1, 64, 2, 1, 16, True, (12, -1, 3), (13, 0, 4)),
+    ("chunked_prefill", 2, 8, 64, 2, 2, 16, True, (24, 40), (32, 48)),
+    ("noncausal_ragged", 2, 17, 45, 2, 1, 16, False, None, (45, 29)),
+], ids=lambda c: c[0])
+def test_paged_kernel_matches_ref(case):
+    name, B, Sq, T, H, Hkv, ps, causal, q_off, kv_lens = case
+    D = 16
+    rng = np.random.default_rng(hash(name) % 2**32)
+    k, v, kp, vp, bt = build_paged(rng, B, T, Hkv, D, ps)
+    q = jnp.asarray(rng.standard_normal((B, Sq, H, D)).astype(np.float32))
+    if q_off is None:
+        qpos = jnp.broadcast_to(
+            jnp.arange(Sq, dtype=jnp.int32) + (T - Sq), (B, Sq))
+    else:
+        offs = np.asarray(q_off, np.int32)[:, None]
+        qpos = jnp.asarray(np.where(
+            offs < 0, -1, offs + np.arange(Sq)[None]).astype(np.int32))
+    kvl = jnp.asarray(np.asarray(kv_lens, np.int32) if kv_lens is not None
+                      else np.full((B,), T, np.int32))
+    out = paged_attention(q, kp, vp, bt, qpos, kvl, causal=causal,
+                          block_q=8, interpret=True)
+    ref = mha_ref(q, k, v, causal=causal, q_positions=qpos,
+                  kv_valid_len=kvl)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=3e-5, rtol=3e-5)
+    masked = np.asarray(qpos)[:, 0] < 0
+    if masked.any():
+        assert np.abs(np.asarray(out, np.float32)[masked]).max() == 0.0
+
+
+def test_unallocated_tail_entries_are_dead():
+    """Block-table entries past kv_valid_len may point anywhere valid (the
+    engine leaves them at 0): they must contribute nothing."""
+    rng = np.random.default_rng(7)
+    B, T, H, D, ps = 2, 24, 2, 8, 8
+    k, v, kp, vp, bt = build_paged(rng, B, T, H, D, ps)
+    q = jnp.asarray(rng.standard_normal((B, 1, H, D)).astype(np.float32))
+    qpos = jnp.asarray([[4], [9]], jnp.int32)
+    kvl = jnp.asarray([5, 10], jnp.int32)
+    base = paged_attention(q, kp, vp, bt, qpos, kvl, block_q=8,
+                           interpret=True)
+    # rewrite every tail entry (blocks past the valid prefix) to page 0
+    bt_n = np.asarray(bt).copy()
+    for b in range(B):
+        first_dead = -(-int(np.asarray(kvl)[b]) // ps)
+        bt_n[b, first_dead:] = 0
+    redirected = paged_attention(q, kp, vp, jnp.asarray(bt_n), qpos, kvl,
+                                 block_q=8, interpret=True)
+    np.testing.assert_array_equal(np.asarray(base), np.asarray(redirected))
+
+
+def test_gather_pages_inverts_layout():
+    rng = np.random.default_rng(3)
+    B, T, H, D, ps = 3, 40, 2, 8, 8
+    k, v, kp, vp, bt = build_paged(rng, B, T, H, D, ps)
+    np.testing.assert_array_equal(
+        np.asarray(gather_pages(kp, bt, T)), np.asarray(k))
+    np.testing.assert_array_equal(
+        np.asarray(gather_pages(vp, bt, T)), np.asarray(v))
+
+
+def test_soft_cap_and_bf16():
+    rng = np.random.default_rng(11)
+    B, T, H, D, ps = 1, 32, 2, 16, 16
+    k, v, kp, vp, bt = build_paged(rng, B, T, H, D, ps, garbage=3.0)
+    q = jnp.asarray(rng.standard_normal((B, 16, H, D)).astype(np.float32))
+    for dt, tol in ((jnp.float32, 3e-5), (jnp.bfloat16, 3e-2)):
+        out = paged_attention(q.astype(dt), kp.astype(dt), vp.astype(dt),
+                              bt, causal=True, soft_cap=5.0, block_q=8,
+                              interpret=True,
+                              q_positions=jnp.broadcast_to(
+                                  jnp.arange(16, dtype=jnp.int32) + 16,
+                                  (B, 16)),
+                              kv_valid_len=jnp.full((B,), T, jnp.int32))
+        ref = mha_ref(q.astype(dt), k.astype(dt), v.astype(dt), causal=True,
+                      soft_cap=5.0,
+                      q_positions=jnp.broadcast_to(
+                          jnp.arange(16, dtype=jnp.int32) + 16, (B, 16)),
+                      kv_valid_len=jnp.full((B,), T, jnp.int32))
+        np.testing.assert_allclose(np.asarray(out, np.float32),
+                                   np.asarray(ref, np.float32),
+                                   atol=tol, rtol=tol)

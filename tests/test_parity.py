@@ -37,19 +37,50 @@ def test_attention_backend_parity(backend, dtype, case):
 
 
 def test_attention_fused_vs_unfused_direct():
-    """Fused and unfused must also agree with *each other* (not just each
+    """The backends must also agree with *each other* (not just each
     within tolerance of the oracle) on the decode case — the cell serving
-    exercises every step."""
+    exercises every step. The paged backend reads the same K/V through a
+    shuffled block table; with page_size == block_k its blocking (and
+    hence accumulation order) is identical to fused, so those two must
+    agree *bitwise*."""
     import numpy as np
     case = parity.ATTN_CASES[2]          # decode_long_cache
     q, k, v, qp, kl = parity.make_attention_operands(case, "float32")
     from repro.core import api
     from repro.core.plan import AttentionPolicy
-    outs = [np.asarray(api.attention(
-        q, k, v, q_positions=qp, kv_valid_len=kl, causal=case.causal,
-        policy=AttentionPolicy(backend=b, block_q=32, block_k=32)))
-        for b in parity.ATTN_BACKENDS]
-    np.testing.assert_allclose(outs[0], outs[1], atol=3e-5, rtol=3e-5)
+    ps = parity.ATTN_PAGE_SIZE
+    kp, vp, bt = parity.make_paged_operands(k, v, page_size=ps)
+    outs = {}
+    for b in parity.ATTN_BACKENDS:
+        pol = AttentionPolicy(backend=b, block_q=32, block_k=ps,
+                              page_size=ps)
+        kw = (dict(block_tables=bt) if b.startswith("paged") else {})
+        operands = (q, kp, vp) if b.startswith("paged") else (q, k, v)
+        outs[b] = np.asarray(api.attention(
+            *operands, q_positions=qp, kv_valid_len=kl, causal=case.causal,
+            policy=pol, **kw))
+    np.testing.assert_allclose(outs["unfused"], outs["fused_interpret"],
+                               atol=3e-5, rtol=3e-5)
+    np.testing.assert_array_equal(outs["paged_interpret"],
+                                  outs["fused_interpret"])
+
+
+def test_dense_backends_reject_block_tables():
+    """Handing a paged pool + block table to a dense backend must fail
+    loudly (it would silently misread the pool layout otherwise)."""
+    import jax.numpy as jnp
+    import pytest
+    from repro.core import api
+    from repro.core.plan import AttentionPolicy
+    q = jnp.zeros((1, 1, 2, 8))
+    kp = jnp.zeros((4, 16, 1, 8))
+    bt = jnp.zeros((1, 2), jnp.int32)
+    for b in ("unfused", "fused_interpret"):
+        with pytest.raises(ValueError, match="paged"):
+            api.attention(q, kp, kp, q_positions=jnp.zeros((1, 1), jnp.int32),
+                          kv_valid_len=jnp.ones((1,), jnp.int32),
+                          block_tables=bt,
+                          policy=AttentionPolicy(backend=b))
 
 
 def test_attention_grid_runner_smoke():

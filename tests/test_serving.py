@@ -342,3 +342,257 @@ def test_packed_resident_weights_match_row_major():
     assert isinstance(e_packed.params["head"], PackedWeight)
     np.testing.assert_array_equal(e_row.generate(prompts, 4),
                                   e_packed.generate(prompts, 4))
+
+
+# ---------------------------------------------------------------------------
+# Bucketed prefill (bounded recompiles) + generate() input validation
+# ---------------------------------------------------------------------------
+
+def test_generate_batch_mismatch_raises_with_shapes():
+    """generate() must reject a prompts batch that doesn't match
+    batch_slots with a ValueError naming both shapes (was a bare assert)."""
+    cfg = get_smoke_config("smollm-135m", n_layers=1, vocab=64)
+    params, _ = T.init_model(jax.random.PRNGKey(0), cfg)
+    eng = ServingEngine(cfg, params, ServeConfig(batch_slots=2, max_len=16))
+    bad = np.zeros((3, 4), np.int32)
+    with pytest.raises(ValueError) as ei:
+        eng.generate(bad, 2)
+    assert "(3, 4)" in str(ei.value) and "batch_slots=2" in str(ei.value)
+
+
+def test_bucketed_prefill_stream_unchanged():
+    """Satellite regression: submit() pads prompts to the next power-of-two
+    width with position −1 columns (bounding per-length recompiles to
+    log2(max_len) buckets); the token stream must be unchanged — identical
+    to the unpadded batched generate() path — for lengths below, at, and
+    above a bucket boundary."""
+    from repro.serving.engine import _next_pow2
+    assert [_next_pow2(n) for n in (1, 2, 3, 4, 5, 7, 8, 9)] == \
+        [1, 2, 4, 4, 8, 8, 8, 16]
+    cfg = get_smoke_config("smollm-135m", n_layers=2, vocab=64)
+    params, _ = T.init_model(jax.random.PRNGKey(0), cfg)
+    for prompt in ([7, 3, 11], [3, 1, 4, 1, 5], [9, 8, 7, 6, 5, 4, 3, 2]):
+        e_batch = ServingEngine(cfg, params,
+                                ServeConfig(batch_slots=1, max_len=32))
+        want = e_batch.generate(np.asarray([prompt], np.int32),
+                                4)[0].tolist()
+        e_slot = ServingEngine(cfg, params,
+                               ServeConfig(batch_slots=2, max_len=32))
+        slot = e_slot.submit(prompt)
+        got = [e_slot.step()[slot] for _ in range(4)]
+        assert got == want, (prompt, got, want)
+
+
+# ---------------------------------------------------------------------------
+# Paged KV-cache serving (docs/serving.md)
+# ---------------------------------------------------------------------------
+
+PAGED8 = AttentionPolicy(backend="paged_interpret", page_size=8, block_q=8)
+FUSED8 = AttentionPolicy(backend="fused_interpret", block_q=8, block_k=8)
+
+
+@pytest.fixture(scope="module")
+def paged_setup():
+    cfg = get_smoke_config("smollm-135m", n_layers=2, vocab=64)
+    params, _ = T.init_model(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def test_paged_token_streams_identical(paged_setup):
+    """The acceptance gate: the paged engine's token streams — batched
+    generate() AND submit()/step() — must be identical to the fused and
+    unfused contiguous engines'."""
+    cfg, params = paged_setup
+    prompt = [3, 1, 4, 1, 5]
+    prompts = np.random.default_rng(5).integers(0, 64, (2, 6)).astype(np.int32)
+    streams, gens = {}, {}
+    for name, attn in (("unfused", AttentionPolicy(backend="unfused")),
+                       ("fused", FUSED8), ("paged", PAGED8)):
+        eng = ServingEngine(cfg, params, ServeConfig(
+            batch_slots=2, max_len=32, attention=attn))
+        h = eng.submit(prompt)
+        streams[name] = [eng.step()[h] for _ in range(6)]
+        eng2 = ServingEngine(cfg, params, ServeConfig(
+            batch_slots=2, max_len=32, attention=attn))
+        gens[name] = eng2.generate(prompts, 5)
+    assert streams["paged"] == streams["fused"] == streams["unfused"]
+    np.testing.assert_array_equal(gens["paged"], gens["fused"])
+    np.testing.assert_array_equal(gens["paged"], gens["unfused"])
+
+
+def test_paged_interleaved_submit_leaves_other_slots_uncorrupted(paged_setup):
+    """Admitting a second request mid-stream must not perturb the first:
+    page-pool writes go through disjoint block tables, and the masked
+    position −1 prefill rows must not write any page."""
+    cfg, params = paged_setup
+
+    def run(interleave: bool):
+        eng = ServingEngine(cfg, params, ServeConfig(
+            batch_slots=2, max_len=32, attention=PAGED8))
+        r0 = eng.submit([1, 2, 3])
+        outs = []
+        for i in range(5):
+            if interleave and i == 2:
+                assert eng.submit([4, 5]) is not None
+            outs.append(eng.step()[r0])
+        return outs
+
+    assert run(False) == run(True)
+
+
+def test_paged_capacity_admission_is_page_bound(paged_setup):
+    """The capacity acceptance gate: a request set whose summed
+    max_len-padded footprint exceeds the pool budget is served
+    *concurrently* — admission tracks pages (resident tokens), not
+    slot-count × max_len."""
+    cfg, params = paged_setup
+    # 4 slots × max_len 32 = 128 padded tokens; pool = 8 pages × 8 = 64.
+    sc = ServeConfig(batch_slots=4, max_len=32, attention=PAGED8,
+                     cache_pages=8)
+    eng = ServingEngine(cfg, params, sc)
+    rids = [eng.submit([1 + i, 2, 3]) for i in range(4)]
+    assert all(r is not None for r in rids)
+    assert int(eng.slot_live.sum()) == 4           # all concurrently live
+    padded = 4 * sc.max_len
+    pool_tokens = eng.pool.n_pages * eng.pool.page_size
+    assert padded > pool_tokens                    # genuinely oversubscribed
+    # and the streams are still exact: compare two of them to solo runs
+    for _ in range(4):
+        eng.step()
+    for i in (0, 3):
+        solo = ServingEngine(cfg, params, sc)
+        r = solo.submit([1 + i, 2, 3])
+        want = [solo.step()[r] for _ in range(4)]
+        assert eng.request_out[rids[i]] == want
+
+
+def test_paged_preempt_resume_stream_identical(paged_setup):
+    """Pool exhaustion must preempt the youngest request (pages freed,
+    request parked) and later resume it with a token stream identical to
+    an uninterrupted run — for every request in the workload."""
+    cfg, params = paged_setup
+    sc = ServeConfig(batch_slots=2, max_len=16, attention=PAGED8,
+                     cache_pages=2)       # 2 pages of 8 = half the padded need
+    eng = ServingEngine(cfg, params, sc)
+    prompts = [[1, 2, 3], [4, 5, 6]]
+    rids = [eng.submit(p) for p in prompts]
+    assert all(r is not None for r in rids)
+    for _ in range(60):
+        eng.step()
+        if not eng.slot_live.any() and not eng.wait:
+            break
+    assert eng.n_preemptions > 0                   # pressure actually hit
+    assert not eng.slot_live.any() and not eng.wait
+    eng.pool.check()
+    assert eng.pool.free_pages == eng.pool.n_pages  # everything reclaimed
+    for rid, p in zip(rids, prompts):
+        solo = ServingEngine(cfg, params, sc)
+        r = solo.submit(p)
+        want = []
+        while solo.slot_live.any():
+            st = solo.step()
+            if r in st:
+                want.append(st[r])
+        assert eng.request_out[rid] == want, (rid, p)
+
+
+def test_paged_cancel_returns_pages(paged_setup):
+    cfg, params = paged_setup
+    eng = ServingEngine(cfg, params, ServeConfig(
+        batch_slots=2, max_len=16, attention=PAGED8))
+    r = eng.submit([1, 2, 3, 4, 5])
+    assert eng.pool.pages_in_use > 0
+    assert eng.cancel(r) is True
+    assert eng.pool.free_pages == eng.pool.n_pages
+    assert eng.cancel(r) is False                  # already gone
+    eng.pool.check()
+
+
+def test_paged_rejects_undersized_pool(paged_setup):
+    """A pool that cannot back even one full-length request would wedge
+    the wait queue forever — refuse at construction."""
+    cfg, params = paged_setup
+    with pytest.raises(ValueError, match="cache_pages"):
+        ServingEngine(cfg, params, ServeConfig(
+            batch_slots=2, max_len=32, attention=PAGED8, cache_pages=3))
+
+
+def test_paged_generate_resets_pool(paged_setup):
+    """Batched generate() owns the engine: it drops in-flight requests,
+    reclaims every page, and two consecutive calls are deterministic."""
+    cfg, params = paged_setup
+    eng = ServingEngine(cfg, params, ServeConfig(
+        batch_slots=2, max_len=32, attention=PAGED8))
+    assert eng.submit([1, 2, 3]) is not None
+    prompts = np.random.default_rng(2).integers(0, 64, (2, 4)).astype(np.int32)
+    o1 = eng.generate(prompts, 4)
+    o2 = eng.generate(prompts, 4)
+    np.testing.assert_array_equal(o1, o2)
+    eng.pool.check()
+
+
+def test_paged_rejects_ssm_and_mla_families(paged_setup):
+    from repro.models.transformer import init_paged_caches
+    cfg_ssm = get_smoke_config("mamba2-1.3b", n_layers=2, vocab=64)
+    with pytest.raises(NotImplementedError, match="recurrent"):
+        init_paged_caches(cfg_ssm, 2, 8, 8, jnp.bfloat16)
+    cfg_mla = get_smoke_config("deepseek-v2-236b", n_layers=2, vocab=64)
+    with pytest.raises(NotImplementedError, match="MLA"):
+        init_paged_caches(cfg_mla, 2, 8, 8, jnp.bfloat16)
+
+
+def test_paged_generate_then_submit_no_page_leak(paged_setup):
+    """Review regression: generate() pre-allocates horizon pages with no
+    live slot owning them; a following submit() must not inherit-and-drop
+    those tables (pages would leak unreleasable). The pool must stay
+    exactly balanced across generate → submit → retire cycles."""
+    cfg, params = paged_setup
+    eng = ServingEngine(cfg, params, ServeConfig(
+        batch_slots=2, max_len=32, attention=PAGED8))
+    prompts = np.random.default_rng(4).integers(0, 64, (2, 4)).astype(np.int32)
+    eng.generate(prompts, 8)
+    assert eng.pool.free_pages == eng.pool.n_pages   # horizon pages returned
+    r = eng.submit([1, 2, 3])
+    assert r is not None
+    for _ in range(3):
+        eng.step()
+    assert eng.cancel(r)
+    eng.pool.check()
+    assert eng.pool.free_pages == eng.pool.n_pages
+
+
+def test_ssm_submit_stream_unaffected_by_bucketing():
+    """Review regression: bucket padding columns carry position −1, a
+    contract SSD/conv recurrent state is outside of (no positions) — a
+    padded prefill would feed the pad tokens into the recurrence. SSM
+    submit() (batch_slots=1) must prefill unpadded and match generate()
+    token for token on a non-power-of-two prompt."""
+    cfg = get_smoke_config("mamba2-1.3b", n_layers=2, vocab=64)
+    params, _ = T.init_model(jax.random.PRNGKey(0), cfg)
+    prompt = [7, 3, 11]                        # len 3: would bucket to 4
+    gen = ServingEngine(cfg, params, ServeConfig(batch_slots=1, max_len=32))
+    want = gen.generate(np.asarray([prompt], np.int32), 4)[0].tolist()
+    slot_eng = ServingEngine(cfg, params,
+                             ServeConfig(batch_slots=1, max_len=32))
+    s = slot_eng.submit(prompt)
+    assert [slot_eng.step()[s] for _ in range(4)] == want
+
+
+def test_paged_generate_does_not_accumulate_cache_lens(paged_setup):
+    """Review regression: generate() never advances slot_pos, so the paged
+    reset must zero cache lens unconditionally — otherwise kv_valid_len
+    inflates past the block-table-backed range on every generate() call
+    (stale-garbage keys under non-causal attention, dead block-skip under
+    causal)."""
+    cfg, params = paged_setup
+    eng = ServingEngine(cfg, params, ServeConfig(
+        batch_slots=2, max_len=32, attention=PAGED8))
+    prompts = np.random.default_rng(6).integers(0, 64, (2, 4)).astype(np.int32)
+    o1 = eng.generate(prompts, 4)
+    lens1 = np.asarray(eng.caches["scan"]["len"]).copy()
+    o2 = eng.generate(prompts, 4)
+    lens2 = np.asarray(eng.caches["scan"]["len"])
+    np.testing.assert_array_equal(lens1, lens2)      # no accumulation
+    np.testing.assert_array_equal(lens2, 0)          # reset on completion
+    np.testing.assert_array_equal(o1, o2)            # hence deterministic
+    assert eng.pool.free_pages == eng.pool.n_pages
