@@ -23,6 +23,9 @@ SUITES = {
     "roofline": roofline_table.run,
     "attention": attention_sweep.run,
     "serving": serving_sweep.run,
+    # TP column: paged serving over a (data, model) host mesh (skips with
+    # a message on 1-device hosts; force devices via XLA_FLAGS)
+    "serving-tp": serving_sweep.run_tp,
 }
 
 

@@ -10,11 +10,18 @@ capacity acceptance gate (asserted hard in tests/test_serving.py, reported
 here as the ``oversubscription`` column).
 
 Reported per engine: tokens/s, peak cache bytes actually backing tokens,
+**per-shard** peak cache bytes (the resident KV footprint each model shard
+holds — pool tensors split on the KV-head dim under TP, docs/serving.md),
 peak concurrently-live requests, preemptions, and oversubscription =
 (peak live requests × max_len-padded bytes) / cache budget. On CPU the
 paged kernel runs in Pallas *interpret* mode — a correctness substrate, not
 a speed one — so tokens/s only becomes a fair fight on TPU (backend
 "paged" vs "fused"); the memory columns are platform-independent.
+
+``--tp N`` adds a ``paged_tpN`` cell: the same paged engine sharded over a
+(data, model) host mesh with an N-way model axis (ServeConfig.mesh,
+repro/distributed/tp.py). Needs ``len(jax.devices())`` divisible by N —
+force host devices via XLA_FLAGS=--xla_force_host_platform_device_count.
 
 Rows go to the shared CSV (benchmarks/common.py) and, matching
 benchmarks/hillclimb.py, to ``serving_sweep.jsonl``.
@@ -22,6 +29,8 @@ benchmarks/hillclimb.py, to ``serving_sweep.jsonl``.
   python -m benchmarks.serving_sweep
   python -m benchmarks.serving_sweep --max-len 128 --n-requests 24 \
       --cache-pages-frac 0.5
+  XLA_FLAGS=--xla_force_host_platform_device_count=2 \
+      python -m benchmarks.serving_sweep --tp 2
 """
 from __future__ import annotations
 
@@ -60,10 +69,10 @@ def kv_bytes_per_token(cfg) -> int:
 
 
 def serve_workload(cfg, params, sc: ServeConfig, prompts: List[List[int]],
-                   gen_len: int):
+                   gen_len: int, axes=None):
     """Serve every prompt for gen_len tokens via submit()/step(); returns
     measured stats. Peak memory is sampled after every step."""
-    eng = ServingEngine(cfg, params, sc)
+    eng = ServingEngine(cfg, params, sc, axes=axes)
     per_tok = kv_bytes_per_token(cfg)
     pending = [list(p) for p in prompts]
     done: dict = {}
@@ -106,11 +115,16 @@ def serve_workload(cfg, params, sc: ServeConfig, prompts: List[List[int]],
     total = total_done + sum(done.values())
     budget_tokens = (eng.pool.n_pages * eng.pool.page_size if eng.paged
                      else eng.sc.batch_slots * eng.sc.max_len)
+    kv_shards = eng.kv_shards()
     return {
         "tokens": total,
         "finished": n_finished,
         "tok_per_s": total / max(dt, 1e-9),
         "peak_cache_bytes": peak_tokens * per_tok,
+        # what each model shard actually holds resident: the pool splits
+        # on the KV-head dim, the page *count* is identical per shard
+        "kv_shards": kv_shards,
+        "per_shard_peak_cache_bytes": peak_tokens * per_tok // kv_shards,
         "budget_cache_bytes": budget_tokens * per_tok,
         "padded_peak_bytes": peak_live * sc.max_len * per_tok,
         "oversubscription": (peak_live * sc.max_len) / budget_tokens,
@@ -123,37 +137,57 @@ def serve_workload(cfg, params, sc: ServeConfig, prompts: List[List[int]],
 def sweep(arch: str = "smollm-135m", n_layers: int = 2, max_len: int = 64,
           batch_slots: int = 4, n_requests: int = 12, gen_len: int = 8,
           page_size: int = 8, cache_pages_frac: float = 0.5,
-          seed: int = 0, jsonl_path: Optional[str] = None):
-    cfg = get_smoke_config(arch, n_layers=n_layers, vocab=64)
-    params, _ = T.init_model(jax.random.PRNGKey(seed), cfg)
+          seed: int = 0, jsonl_path: Optional[str] = None, tp: int = 1):
+    # --tp shards the KV pool only when the smoke config's heads divide the
+    # model axis AND the kv_heads rule allows it; clear the per-arch
+    # replication overrides so the TP cell measures an actually-split pool.
+    cfg_kw = dict(n_layers=n_layers, vocab=64)
+    if tp > 1:
+        cfg_kw["sharding_overrides"] = ()
+    cfg = get_smoke_config(arch, **cfg_kw)
+    params, axes = T.init_model(jax.random.PRNGKey(seed), cfg)
     rng = np.random.default_rng(seed)
     prompts = skewed_prompts(rng, n_requests, max_len)
 
     n_blocks = -(-max_len // page_size)
     cache_pages = max(n_blocks,
                       int(batch_slots * n_blocks * cache_pages_frac))
+    paged_attn = AttentionPolicy(backend="paged_interpret",
+                                 page_size=page_size, block_q=16)
     cells = {
         "contiguous": ServeConfig(
             batch_slots=batch_slots, max_len=max_len,
             attention=AttentionPolicy(backend="unfused")),
         "paged": ServeConfig(
-            batch_slots=batch_slots, max_len=max_len,
-            attention=AttentionPolicy(backend="paged_interpret",
-                                      page_size=page_size, block_q=16),
+            batch_slots=batch_slots, max_len=max_len, attention=paged_attn,
             cache_pages=cache_pages),
     }
+    if tp > 1:
+        from repro.launch.mesh import make_host_mesh
+        if len(jax.devices()) % tp:
+            print(f"[serving] skipping --tp {tp}: {len(jax.devices())} "
+                  f"device(s) not divisible (set XLA_FLAGS="
+                  f"--xla_force_host_platform_device_count=N)")
+        else:
+            cells[f"paged_tp{tp}"] = ServeConfig(
+                batch_slots=batch_slots, max_len=max_len,
+                attention=paged_attn, cache_pages=cache_pages,
+                mesh=make_host_mesh(model=tp))
     rows = []
     for name, sc in cells.items():
-        stats = serve_workload(cfg, params, sc, prompts, gen_len)
+        stats = serve_workload(cfg, params, sc, prompts, gen_len, axes=axes)
         row = {"engine": name, "arch": cfg.name, "max_len": max_len,
                "batch_slots": batch_slots, "page_size": page_size,
-               "cache_pages": cache_pages if name == "paged" else None,
+               "cache_pages": cache_pages if name.startswith("paged")
+               else None, "tp": tp if name.endswith(f"tp{tp}") else 1,
                **stats}
         rows.append(row)
         emit("serving", f"{name}_tok_per_s", round(stats["tok_per_s"], 2),
              "tok/s", requests=n_requests, gen_len=gen_len)
         emit("serving", f"{name}_peak_cache", stats["peak_cache_bytes"],
              "bytes", budget=stats["budget_cache_bytes"],
+             per_shard=stats["per_shard_peak_cache_bytes"],
+             kv_shards=stats["kv_shards"],
              oversubscription=round(stats["oversubscription"], 3),
              peak_live=stats["peak_live_requests"],
              preemptions=stats["preemptions"])
@@ -176,6 +210,17 @@ def run():
     sweep()
 
 
+def run_tp():
+    """TP suite entry (benchmarks.run serving-tp): adds the paged_tp2 cell
+    when the host has the devices for a 2-way model axis; prints a skip on
+    the stock 1-device CPU (force devices via XLA_FLAGS to enable)."""
+    if len(jax.devices()) < 2:
+        print("[serving] serving-tp skipped: 1 local device (set XLA_FLAGS="
+              "--xla_force_host_platform_device_count=2 before jax init)")
+        return
+    sweep(arch="qwen3-8b", tp=2)
+
+
 def main(argv: Optional[Sequence[str]] = None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--arch", default="smollm-135m")
@@ -188,12 +233,17 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     ap.add_argument("--cache-pages-frac", type=float, default=0.5,
                     help="paged pool size as a fraction of the contiguous-"
                          "equivalent page count")
+    ap.add_argument("--tp", type=int, default=1,
+                    help="add a paged_tpN cell: the paged engine over a "
+                         "(data, model) host mesh with an N-way model axis "
+                         "(tokens/s + per-shard peak cache bytes)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
     sweep(arch=args.arch, n_layers=args.n_layers, max_len=args.max_len,
           batch_slots=args.batch_slots, n_requests=args.n_requests,
           gen_len=args.gen_len, page_size=args.page_size,
-          cache_pages_frac=args.cache_pages_frac, seed=args.seed)
+          cache_pages_frac=args.cache_pages_frac, seed=args.seed,
+          tp=args.tp)
     return 0
 
 

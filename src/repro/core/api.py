@@ -64,7 +64,7 @@ from repro.core import plan as P
 from repro.core import quant as Q
 from repro.core.plan import (  # re-exported: the public policy surface
     GemmPolicy, ExecutionPlan, PackedWeight, QuantizedPackedWeight,
-    AttentionPolicy, pack_weight, pack_model_weights,
+    AttentionPolicy, ShardingPolicy, pack_weight, pack_model_weights,
     plan, plan_cache_info, plan_cache_clear, register_backend,
     unregister_backend, registered_backends,
     register_attention_backend, unregister_attention_backend,
@@ -78,7 +78,7 @@ __all__ = [
     "register_backend", "unregister_backend", "registered_backends",
     "matmul", "linear", "use_policy", "current_policy", "resolved_backend",
     "prefers_einsum", "gemm_backend", "current_backend",
-    "AttentionPolicy", "attention", "use_attention_policy",
+    "AttentionPolicy", "ShardingPolicy", "attention", "use_attention_policy",
     "current_attention_policy", "resolved_attention_backend",
     "register_attention_backend", "unregister_attention_backend",
     "registered_attention_backends",

@@ -50,6 +50,7 @@ __all__ = [
     "register_attention_backend", "unregister_attention_backend",
     "get_attention_backend_spec", "registered_attention_backends",
     "resolve_attention_backend",
+    "ShardingPolicy",
 ]
 
 DEFAULT_VMEM_BUDGET = 96 * 1024 * 1024
@@ -241,6 +242,40 @@ def resolve_attention_backend(name: str) -> str:
     except Exception:  # pragma: no cover
         plat = "cpu"
     return "fused" if plat == "tpu" else "unfused"
+
+
+# ---------------------------------------------------------------------------
+# Sharding policy (consumed by repro/distributed/tp.py)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ShardingPolicy:
+    """How execution shards over a (data, model) device mesh.
+
+    The third member of the policy family (GemmPolicy: how GEMMs execute;
+    AttentionPolicy: how attention executes; ShardingPolicy: how both span
+    a mesh). Frozen → hashable → safe to carry in jit-static config. The
+    mesh itself is a runtime handle (ServeConfig.mesh, launch/mesh.py);
+    this policy only names the axes and rule overrides.
+
+    data_axis    mesh axis for data parallelism (activations' batch dim;
+                 TP serving keeps weights/caches replicated along it).
+    model_axis   mesh axis for tensor parallelism: QKV/up projections
+                 column-parallel, out/down projections row-parallel with a
+                 psum on the contraction, attention/KV-pool heads sharded
+                 (repro/distributed/tp.py, docs/serving.md).
+    overrides    logical-rule overrides layered onto
+                 :data:`repro.distributed.sharding.DEFAULT_RULES`, as a
+                 hashable tuple of ``(logical_name, mesh_axes)`` pairs —
+                 e.g. ``(("heads", None),)`` pins attention replicated.
+    """
+
+    data_axis: str = "data"
+    model_axis: str = "model"
+    overrides: Tuple[Tuple[str, Any], ...] = ()
+
+    def overrides_dict(self) -> Dict[str, Any]:
+        return dict(self.overrides)
 
 
 # An attention backend implementation:

@@ -15,7 +15,22 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.make_mesh(shape, axes)
 
 
-def make_host_mesh():
-    """Whatever devices exist locally, as a (data, model) mesh (CPU tests)."""
+def make_host_mesh(*, model: int = 1):
+    """Whatever devices exist locally, as a (data, model) mesh (CPU tests,
+    TP serving on one host).
+
+    ``model`` is the model-axis (tensor-parallel) factor; the data axis
+    takes the rest. The old signature silently pinned the model axis to 1
+    — callers asking for TP got a mesh that could never shard. Now the
+    factor is explicit and an impossible split fails loudly.
+    """
     n = len(jax.devices())
-    return jax.make_mesh((n, 1), ("data", "model"))
+    if model < 1:
+        raise ValueError(f"model axis factor must be >= 1, got {model}")
+    if n % model:
+        raise ValueError(
+            f"cannot build a (data, model) host mesh: {n} local device(s) "
+            f"not divisible by model={model}; pick a factor of {n} (or "
+            f"force host devices via XLA_FLAGS="
+            f"--xla_force_host_platform_device_count=N before jax init)")
+    return jax.make_mesh((n // model, model), ("data", "model"))

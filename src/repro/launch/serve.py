@@ -14,6 +14,7 @@ import numpy as np
 
 from repro.configs.registry import get_config, get_smoke_config
 from repro.core.plan import AttentionPolicy, GemmPolicy
+from repro.launch.mesh import make_host_mesh
 from repro.models import transformer as T
 from repro.serving.engine import ServeConfig, ServingEngine
 
@@ -50,6 +51,14 @@ def main(argv=None):
     ap.add_argument("--page-size", type=int, default=16,
                     help="paged backends: tokens per KV page (the paged "
                          "kernel's key-block size)")
+    ap.add_argument("--tp", type=int, default=1,
+                    help="tensor-parallel degree: builds a (data, model) "
+                         "host mesh with a model axis of this size and "
+                         "runs prefill/decode sharded over it — "
+                         "column/row-parallel GEMMs, head-sharded "
+                         "attention, per-shard paged KV pools "
+                         "(docs/serving.md). Needs len(jax.devices()) "
+                         "divisible by --tp")
     ap.add_argument("--cache-pages", type=int, default=None,
                     help="paged backends: total pages in the KV pool; "
                          "default = the contiguous-equivalent "
@@ -62,21 +71,25 @@ def main(argv=None):
     policy = GemmPolicy(backend=args.gemm_backend, mode=args.gemm_mode)
     attn = AttentionPolicy(backend=args.attn_backend,
                            page_size=args.page_size)
+    mesh = make_host_mesh(model=args.tp) if args.tp > 1 else None
     print(f"[serve] arch={cfg.name} slots={args.batch_slots} "
           f"max_len={args.max_len} gemm={policy.resolved_backend()}/"
           f"{policy.mode} attn={attn.resolved_backend()} "
           f"packed={args.pack_weights} "
           f"weight_dtype={args.weight_dtype or 'native'}")
+    if mesh is not None:
+        print(f"[serve] TP: mesh={dict(mesh.shape)} "
+              f"(model axis = {args.tp}-way tensor parallel)")
     sc = ServeConfig(
         batch_slots=args.batch_slots, max_len=args.max_len,
         temperature=args.temperature, gemm=policy, attention=attn,
         pack_weights=args.pack_weights, weight_dtype=args.weight_dtype,
-        cache_pages=args.cache_pages)
+        cache_pages=args.cache_pages, mesh=mesh)
     if sc.paged():
         print(f"[serve] paged KV: page_size={args.page_size} pages="
               f"{args.cache_pages or 'contiguous-equivalent'}")
-    params, _ = T.init_model(jax.random.PRNGKey(args.seed), cfg)
-    engine = ServingEngine(cfg, params, sc)
+    params, axes = T.init_model(jax.random.PRNGKey(args.seed), cfg)
+    engine = ServingEngine(cfg, params, sc, axes=axes)
 
     rng = np.random.default_rng(args.seed)
     # batched generate path (one full batch)
@@ -99,7 +112,8 @@ def main(argv=None):
     engine2 = ServingEngine(cfg, params, ServeConfig(
         batch_slots=args.batch_slots, max_len=args.max_len, gemm=policy,
         attention=attn, pack_weights=args.pack_weights,
-        weight_dtype=args.weight_dtype, cache_pages=args.cache_pages))
+        weight_dtype=args.weight_dtype, cache_pages=args.cache_pages,
+        mesh=mesh), axes=axes)
     lo = max(1, min(4, args.prompt_len))
     pending = [rng.integers(0, cfg.vocab,
                             rng.integers(lo, args.prompt_len + 1))

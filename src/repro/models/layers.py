@@ -18,6 +18,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import api
+from repro.distributed import tp as TP
 from repro.distributed.sharding import shard
 from repro.models.config import ModelConfig
 from repro.models.module import ax, dense_init, fold, norm_init
@@ -78,11 +79,16 @@ def _attn_core(q, k, v, *, q_positions, kv_valid_len, causal, scale,
     kv_valid_len: number of populated cache slots (T for pure prefill).
     block_tables: (B, n_blocks) — paged caches only, where k/v are page
     pools (P, page_size, Hkv, D); see docs/serving.md.
+
+    Routed through repro.distributed.tp: under an active TP context the
+    heads shard over the model mesh axis (shard_map'd, so the Pallas
+    fused/paged kernels run unmodified per shard); otherwise this is
+    api.attention verbatim.
     """
-    return api.attention(q, k, v, q_positions=q_positions,
-                         kv_valid_len=kv_valid_len, causal=causal,
-                         scale=scale, soft_cap=soft_cap,
-                         block_tables=block_tables)
+    return TP.attention(q, k, v, q_positions=q_positions,
+                        kv_valid_len=kv_valid_len, causal=causal,
+                        scale=scale, soft_cap=soft_cap,
+                        block_tables=block_tables)
 
 
 # ---------------------------------------------------------------------------
@@ -156,9 +162,14 @@ def attention(p, cfg: ModelConfig, x, *, positions, cache=None,
     """
     B, S, D = x.shape
     H, Hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
-    q = api.linear(x, p["wq"], p.get("bq")).reshape(B, S, H, dh)
-    k = api.linear(x, p["wk"], p.get("bk")).reshape(B, S, Hkv, dh)
-    v = api.linear(x, p["wv"], p.get("bv")).reshape(B, S, Hkv, dh)
+    # Column-parallel under TP: output heads shard over the model axis
+    # (units bound the split to whole heads); no-op without a TP context.
+    q = TP.linear(x, p["wq"], p.get("bq"), axes=("embed", "heads"),
+                  units=H).reshape(B, S, H, dh)
+    k = TP.linear(x, p["wk"], p.get("bk"), axes=("embed", "kv_heads"),
+                  units=Hkv).reshape(B, S, Hkv, dh)
+    v = TP.linear(x, p["wv"], p.get("bv"), axes=("embed", "kv_heads"),
+                  units=Hkv).reshape(B, S, Hkv, dh)
     if cfg.qk_norm:
         q, k = rmsnorm(p["q_norm"], q), rmsnorm(p["k_norm"], k)
     q = rope(q, positions, cfg.rope_theta)
@@ -212,7 +223,9 @@ def attention(p, cfg: ModelConfig, x, *, positions, cache=None,
     out = _attn_core(q, kv_k, kv_v, q_positions=positions,
                      kv_valid_len=kv_valid, causal=cfg.causal,
                      scale=1.0 / math.sqrt(dh), block_tables=bt)
-    y = api.linear(out.reshape(B, S, H * dh), p["wo"])
+    # Row-parallel under TP: contraction over the sharded heads, psum'd.
+    y = TP.linear(out.reshape(B, S, H * dh), p["wo"],
+                  axes=("heads", "embed"), units=H)
     return shard(y, "act_batch", "act_seq", "act_embed"), cache
 
 
@@ -280,7 +293,8 @@ def mla_attention(p, cfg: ModelConfig, x, *, positions, cache=None,
 
     q = api.linear(x, p["wq_a"])
     q = rmsnorm(p["q_norm"], q)
-    q = api.linear(q, p["wq_b"]).reshape(B, S, H, dn + dr)
+    q = TP.linear(q, p["wq_b"], axes=("kv_lora", "heads"),
+                  units=H).reshape(B, S, H, dn + dr)
     q_nope, q_rope = q[..., :dn], q[..., dn:]
     q_rope = rope(q_rope, positions, cfg.rope_theta)
 
@@ -316,7 +330,11 @@ def mla_attention(p, cfg: ModelConfig, x, *, positions, cache=None,
 
     # Up-project the latent cache to per-head K (nope) and V. (The fully
     # "absorbed" decode path is a §Perf optimization — see serving/engine.)
-    kv = api.linear(c_all, p["wkv_b"]).reshape(B, -1, H, dn + dv)
+    # Under TP the up-projection is column-parallel per head slice: the
+    # latent cache stays replicated, each shard materializes only its own
+    # heads' K/V (the MLA-TP memory shape).
+    kv = TP.linear(c_all, p["wkv_b"], axes=("kv_lora", "heads"),
+                   units=H).reshape(B, -1, H, dn + dv)
     k_nope, v = kv[..., :dn], kv[..., dn:]
     k = jnp.concatenate(
         [k_nope, jnp.broadcast_to(kr_all[:, :, None, :],
@@ -325,7 +343,8 @@ def mla_attention(p, cfg: ModelConfig, x, *, positions, cache=None,
     out = _attn_core(q_full, k, v, q_positions=positions,
                      kv_valid_len=kv_valid, causal=True,
                      scale=1.0 / math.sqrt(dn + dr))
-    y = api.linear(out.reshape(B, S, H * dv), p["wo"])
+    y = TP.linear(out.reshape(B, S, H * dv), p["wo"],
+                  axes=("heads", "embed"), units=H)
     return shard(y, "act_batch", "act_seq", "act_embed"), cache
 
 
@@ -361,15 +380,19 @@ def init_mlp(key, cfg: ModelConfig, dtype, d_ff: Optional[int] = None,
 
 
 def mlp(p, cfg: ModelConfig, x):
+    # Up/gate column-parallel, down row-parallel under TP (no-op without a
+    # context). The swiglu gate‖up split happens on the *global* array, so
+    # the activation stays correct for any shard count; GSPMD reconciles
+    # the layouts between the two shard_map'd GEMMs.
     if cfg.mlp_act == "swiglu":
-        h = api.linear(x, p["wi"])
+        h = TP.linear(x, p["wi"], axes=("embed", "mlp"))
         gate, up = jnp.split(h, 2, axis=-1)
         h = jax.nn.silu(gate) * up
     else:
-        h = api.linear(x, p["wi"], p.get("bi"))
+        h = TP.linear(x, p["wi"], p.get("bi"), axes=("embed", "mlp"))
         h = jax.nn.gelu(h)
     h = shard(h, "act_batch", "act_seq", "act_mlp")
-    return api.linear(h, p["wo"], p.get("bo"))
+    return TP.linear(h, p["wo"], p.get("bo"), axes=("mlp", "embed"))
 
 
 # ---------------------------------------------------------------------------

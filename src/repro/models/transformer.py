@@ -14,6 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import api
+from repro.distributed import tp as TP
 from repro.distributed.sharding import shard, stack_axes
 from repro.models import layers as Lyr
 from repro.models import ssm as SSM
@@ -71,6 +72,23 @@ def _apply_block(p, cfg: ModelConfig, x, *, positions, cache=None,
 # ---------------------------------------------------------------------------
 # Model init
 # ---------------------------------------------------------------------------
+
+def model_axes(cfg: ModelConfig) -> Dict:
+    """The logical-axis tree of :func:`init_model`'s params, without
+    materializing a single weight: the init is traced abstractly
+    (jax.eval_shape — no allocation, no RNG work) and the axes tree, which
+    is plain Python metadata, is captured on the side. Used by TP serving
+    to place params when the caller didn't keep init_model's second
+    return (serving/engine.py)."""
+    box = {}
+
+    def capture(key):
+        _, box["axes"] = init_model(key, cfg)
+        return 0.0
+
+    jax.eval_shape(capture, jax.random.PRNGKey(0))
+    return box["axes"]
+
 
 def init_model(key, cfg: ModelConfig) -> Tuple[Dict, Dict]:
     dtype = cfg.param_dtype
@@ -285,7 +303,9 @@ def forward(params, cfg: ModelConfig, batch, *, caches=None,
                                     block_tables)
     aux_total += aux
     x = Lyr.apply_norm(cfg, params["final_norm"], x)
-    logits = api.linear(x, params["head"])
+    # vocab-column-parallel under TP (each shard computes its logit slice;
+    # sampling consumes the global array) — api.linear without a context
+    logits = TP.linear(x, params["head"], axes=("embed", "vocab"))
     logits = shard(logits, "act_batch", "act_seq", "act_vocab")
     if cfg.n_codebooks:
         logits = logits.reshape(B, S, cfg.n_codebooks, cfg.vocab)
@@ -295,8 +315,21 @@ def forward(params, cfg: ModelConfig, batch, *, caches=None,
     return logits, new_caches, aux_total
 
 
-def init_caches(cfg: ModelConfig, batch: int, max_len: int, dtype):
-    """Stacked per-layer decode caches matching the scan structure."""
+def _place_caches(cfg: ModelConfig, caches, tpctx):
+    """Shard fresh caches onto a TP mesh: K/V leaves split on the KV-head
+    dim exactly when tp.attention will shard them (tp.head_sharding), the
+    rest replicated. No-op without a context."""
+    if tpctx is None:
+        return caches
+    _, shard_kv = TP.head_sharding(tpctx, cfg.n_heads, cfg.n_kv_heads)
+    return TP.shard_caches(caches, tpctx, shard_kv=shard_kv)
+
+
+def init_caches(cfg: ModelConfig, batch: int, max_len: int, dtype,
+                tpctx=None):
+    """Stacked per-layer decode caches matching the scan structure.
+    ``tpctx`` (a :class:`repro.distributed.tp.TPContext`) places the caches
+    mesh-sharded for TP serving."""
     n_scan = cfg.n_layers - cfg.first_dense_layers
 
     def one_cache():
@@ -328,11 +361,11 @@ def init_caches(cfg: ModelConfig, batch: int, max_len: int, dtype):
              if cfg.is_mla else
              Lyr.init_attention_cache(dense_cfg, batch, max_len, dtype))
             for _ in range(cfg.first_dense_layers)]
-    return caches
+    return _place_caches(cfg, caches, tpctx)
 
 
 def init_paged_caches(cfg: ModelConfig, batch: int, n_pages: int,
-                      page_size: int, dtype):
+                      page_size: int, dtype, tpctx=None):
     """Paged variant of :func:`init_caches`: every layer's KV cache is a
     pool of ``n_pages`` fixed-size pages instead of a contiguous
     ``(batch, max_len)`` slab, so cache memory scales with resident tokens,
@@ -343,6 +376,12 @@ def init_paged_caches(cfg: ModelConfig, batch: int, n_pages: int,
 
     Covers the GQA/MQA attention families only: SSD/conv recurrent state
     has no positions to page, and the MLA latent cache stays contiguous.
+
+    With ``tpctx`` each model shard owns its slice of every page pool —
+    the (P, page_size, Hkv, dh) tensors shard on the KV-head dim, so the
+    paged kernel reads/writes only its own heads' pages per shard while
+    the host-side PagePool accounting (logical pages, identical on every
+    shard) stays unchanged (docs/serving.md).
     """
     if cfg.family in ("ssm", "hybrid") or cfg.attn_every:
         raise NotImplementedError(
@@ -367,7 +406,7 @@ def init_paged_caches(cfg: ModelConfig, batch: int, n_pages: int,
             Lyr.init_paged_attention_cache(dense_cfg, batch, n_pages,
                                            page_size, dtype)
             for _ in range(cfg.first_dense_layers)]
-    return caches
+    return _place_caches(cfg, caches, tpctx)
 
 
 # ---------------------------------------------------------------------------

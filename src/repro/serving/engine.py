@@ -45,7 +45,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import api
-from repro.core.plan import AttentionPolicy, GemmPolicy
+from repro.core.plan import AttentionPolicy, GemmPolicy, ShardingPolicy
+from repro.distributed import tp as TP
 from repro.models import transformer as T
 from repro.models.config import ModelConfig
 from repro.serving.kv_pool import BlockTable, PagePool
@@ -75,6 +76,13 @@ class ServeConfig:
     # contiguous-equivalent budget batch_slots * ceil(max_len / page_size);
     # smaller values make admission page-bound (the memory-oversubscription
     # regime the paged subsystem exists for).
+    mesh: Optional[object] = None       # jax.sharding.Mesh → TP serving:
+    # prefill/decode run under a repro.distributed.tp context — QKV/up
+    # column-parallel, out/down row-parallel (psum), attention heads and
+    # the per-shard paged KV pools split over the mesh's model axis
+    # (docs/serving.md). None → single-device serving, unchanged.
+    sharding: Optional[ShardingPolicy] = None  # axis names + rule overrides
+    # for the mesh; None → ShardingPolicy() (("data", "model") axes).
 
     def policy(self) -> Optional[GemmPolicy]:
         """The effective GemmPolicy: ``gemm`` with ``weight_dtype`` folded
@@ -102,26 +110,31 @@ class _Waiting:
 
 
 def _policy_scope(policy: Optional[GemmPolicy],
-                  attn: Optional[AttentionPolicy] = None):
+                  attn: Optional[AttentionPolicy] = None,
+                  tpctx: Optional[TP.TPContext] = None):
     stack = contextlib.ExitStack()
     if policy is not None:
         stack.enter_context(api.use_policy(policy))
     if attn is not None:
         stack.enter_context(api.use_attention_policy(attn))
+    if tpctx is not None:
+        stack.enter_context(TP.use_tp(tpctx))
     return stack
 
 
 def make_prefill_step(cfg: ModelConfig, policy: Optional[GemmPolicy] = None,
-                      attn: Optional[AttentionPolicy] = None):
+                      attn: Optional[AttentionPolicy] = None,
+                      tpctx: Optional[TP.TPContext] = None):
     """(params, batch, caches) → (last_logits, caches). Processes the full
     prompt with causal self-attention while writing the caches.
 
     batch may carry ``last_cols`` (B,) — the column holding each row's last
     *real* token under bucketed (position −1 padded) prefill — and
     ``block_tables`` for paged caches; absent both, this is the plain
-    dense prefill returning the final column's logits."""
+    dense prefill returning the final column's logits. ``tpctx`` runs the
+    forward tensor-parallel over its mesh (repro/distributed/tp.py)."""
     def prefill_step(params, batch, caches):
-        with _policy_scope(policy, attn):
+        with _policy_scope(policy, attn, tpctx):
             logits, caches, _ = T.forward(params, cfg, batch, caches=caches,
                                           remat=False)
         last = batch.get("last_cols")
@@ -133,14 +146,15 @@ def make_prefill_step(cfg: ModelConfig, policy: Optional[GemmPolicy] = None,
 
 
 def make_decode_step(cfg: ModelConfig, policy: Optional[GemmPolicy] = None,
-                     attn: Optional[AttentionPolicy] = None):
+                     attn: Optional[AttentionPolicy] = None,
+                     tpctx: Optional[TP.TPContext] = None):
     """(params, tokens(B,1), positions(B,1), caches[, block_tables]) →
     (logits, caches). ``block_tables`` is None for contiguous caches."""
     def decode_step(params, tokens, positions, caches, block_tables=None):
         batch = {"tokens": tokens, "positions": positions}
         if block_tables is not None:
             batch["block_tables"] = block_tables
-        with _policy_scope(policy, attn):
+        with _policy_scope(policy, attn, tpctx):
             logits, caches, _ = T.forward(params, cfg, batch, caches=caches,
                                           remat=False)
         return logits[:, -1], caches
@@ -157,18 +171,46 @@ class ServingEngine:
     exhaustion preempts the youngest request into a wait queue from which
     step() resumes it (oldest first) once pages and a slot free up —
     docs/serving.md walks the full lifecycle.
+
+    With ``ServeConfig.mesh`` the same engine serves **tensor-parallel**:
+    prefill/decode run under a repro/distributed/tp.py context (shard_map'd
+    column/row-parallel GEMMs, head-sharded attention, per-shard paged KV
+    pools), with params and caches placed mesh-resident at construction.
+    Host-side scheduling — admission, page accounting, preemption — is
+    unchanged (pages are logical; every shard mirrors the allocation over
+    its head slice), so TP token streams are identical to single-device
+    streams (tests/test_tp_serving.py).
     """
 
-    def __init__(self, cfg: ModelConfig, params, sc: ServeConfig):
+    def __init__(self, cfg: ModelConfig, params, sc: ServeConfig,
+                 axes=None):
         pol = sc.policy()
+        self.tp = None
+        if sc.mesh is not None:
+            if sc.pack_weights or sc.weight_dtype is not None:
+                raise NotImplementedError(
+                    "TP serving (ServeConfig.mesh) does not yet cover "
+                    "resident packed/quantized weights — block-major "
+                    "PackedWeight pytrees would need per-shard re-packing; "
+                    "drop pack_weights/weight_dtype or the mesh")
+            self.tp = TP.make_context(sc.mesh, sc.sharding,
+                                      cfg.overrides_dict())
+            if axes is None:
+                # placement needs the logical-axis tree; derived by
+                # abstract tracing (no weight materialization) when the
+                # caller didn't keep init_model's second return
+                axes = T.model_axes(cfg)
+            params = TP.shard_params(params, axes, self.tp)
         # Quantizing per call inside the jitted forward would redo the
         # O(K·N) weight quantization on every decode token; weights are
         # static across calls, so weight_dtype always quantizes-at-pack.
         if sc.pack_weights or sc.weight_dtype is not None:
             params = api.pack_model_weights(params, pol)
         self.cfg, self.params, self.sc = cfg, params, sc
-        self.decode = jax.jit(make_decode_step(cfg, pol, sc.attention))
-        self.prefill = jax.jit(make_prefill_step(cfg, pol, sc.attention))
+        self.decode = jax.jit(make_decode_step(cfg, pol, sc.attention,
+                                               self.tp))
+        self.prefill = jax.jit(make_prefill_step(cfg, pol, sc.attention,
+                                                 self.tp))
         B = sc.batch_slots
         self.paged = sc.paged()
         if self.paged:
@@ -183,7 +225,8 @@ class ServingEngine:
                     f"pages); a preempted request could never resume")
             self.pool = PagePool(n_pages, ps)
             self.caches = T.init_paged_caches(cfg, B, n_pages, ps,
-                                              jnp.dtype(sc.cache_dtype))
+                                              jnp.dtype(sc.cache_dtype),
+                                              tpctx=self.tp)
             self.block_tables = np.zeros((B, self.n_blocks), np.int32)
             self.slot_tables: List[Optional[BlockTable]] = [None] * B
             self.slot_rid = np.full(B, -1, np.int64)
@@ -198,7 +241,8 @@ class ServingEngine:
             self.n_preemptions = 0
         else:
             self.caches = T.init_caches(cfg, B, sc.max_len,
-                                        jnp.dtype(sc.cache_dtype))
+                                        jnp.dtype(sc.cache_dtype),
+                                        tpctx=self.tp)
         self.slot_pos = np.zeros(B, np.int32)
         self.slot_live = np.zeros(B, bool)
         self.slot_out: List[List[int]] = [[] for _ in range(B)]
@@ -242,8 +286,30 @@ class ServingEngine:
             return node
         self.caches = rec(self.caches)
 
+    def _dev(self, x) -> jax.Array:
+        """Host → device: replicated over the TP mesh when one is active
+        (mixed single-device/committed inputs alongside mesh-sharded params
+        would otherwise be placement-ambiguous), plain asarray else."""
+        if self.tp is None:
+            return jnp.asarray(x)
+        return TP.replicate(x, self.tp)
+
+    def kv_shards(self) -> int:
+        """Model shards each KV cache/page-pool tensor splits across (1
+        when unsharded). Pool admission stays in logical pages — every
+        shard mirrors the same allocation over its head slice — so this is
+        the divisor turning pool bytes into *per-shard* resident bytes
+        (benchmarks/serving_sweep.py --tp, docs/serving.md)."""
+        if self.tp is None or self.cfg.is_mla:
+            # the MLA latent cache (ckv/krope) has no head dim to split —
+            # it replicates on every shard even when attention heads shard
+            return 1
+        _, shard_kv = TP.head_sharding(self.tp, self.cfg.n_heads,
+                                       self.cfg.n_kv_heads)
+        return self.tp.model_size if shard_kv else 1
+
     def _bt_device(self) -> jnp.ndarray:
-        return jnp.asarray(self.block_tables)
+        return self._dev(self.block_tables)
 
     def _handle(self, slot: int) -> int:
         """What submit()/step() key results by: request id in paged mode
@@ -284,7 +350,8 @@ class ServingEngine:
                 tbl.as_row(self.n_blocks, out=self.block_tables[s])
             bt = self._bt_device()
         positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
-        batch = {"tokens": jnp.asarray(prompts), "positions": positions}
+        batch = {"tokens": self._dev(prompts),
+                 "positions": self._dev(positions)}
         if bt is not None:
             batch["block_tables"] = bt
         logits, self.caches = self.prefill(self.params, batch, self.caches)
@@ -294,7 +361,7 @@ class ServingEngine:
         tok = self._sample(logits, sub)[:, None].astype(jnp.int32)
         for i in range(n_tokens):
             out.append(np.asarray(tok)[:, 0])
-            pos = jnp.full((B, 1), S + i, jnp.int32)
+            pos = self._dev(jnp.full((B, 1), S + i, jnp.int32))
             logits, self.caches = self.decode(self.params, tok, pos,
                                               self.caches, bt)
             key, sub = (jax.random.split(key) if key is not None
@@ -428,8 +495,8 @@ class ServingEngine:
         tok[slot, :S] = tokens
         pos = np.full((B, Sb), -1, np.int32)
         pos[slot, :S] = np.arange(S)
-        batch = {"tokens": jnp.asarray(tok), "positions": jnp.asarray(pos),
-                 "last_cols": jnp.full((B,), S - 1, jnp.int32)}
+        batch = {"tokens": self._dev(tok), "positions": self._dev(pos),
+                 "last_cols": self._dev(jnp.full((B,), S - 1, jnp.int32))}
         if self.paged:
             batch["block_tables"] = self._bt_device()
         logits, self.caches = self.prefill(self.params, batch, self.caches)
@@ -575,9 +642,9 @@ class ServingEngine:
         decodable = self.slot_live & ~self.slot_drain
         nxt = None
         if decodable.any():
-            tok = jnp.asarray(self.slot_next)[:, None]
-            pos = jnp.asarray(np.where(decodable, self.slot_pos,
-                                       -1).astype(np.int32))[:, None]
+            tok = self._dev(np.asarray(self.slot_next)[:, None])
+            pos = self._dev(np.where(decodable, self.slot_pos,
+                                     -1).astype(np.int32)[:, None])
             bt = self._bt_device() if self.paged else None
             logits, self.caches = self.decode(self.params, tok, pos,
                                               self.caches, bt)

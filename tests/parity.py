@@ -23,13 +23,28 @@ into a page pool under a *shuffled* page assignment with garbage-filled
 distractor pages, so any fetch outside the block table, any masking slip
 past ``kv_valid_len``, or any logical/physical confusion diverges loudly.
 
+The **sharded grid** extends both disciplines across device meshes: every
+GEMM cell re-runs column- and row-parallel through the shard_map'd TP layer
+(repro/distributed/tp.py) and every attention cell re-runs with heads (and
+KV pools) sharded over the model axis, on meshes of shape
+(1,1)/(2,1)/(1,2)/(2,2) — asserting sharded ≡ unsharded to the same
+per-dtype tolerances. These cells need a multi-device host
+(``XLA_FLAGS=--xla_force_host_platform_device_count=4``): CI's
+``parity-sharded`` job sets it, and the tier-1 gate runs them through the
+subprocess-isolated ``tests/test_parity_sharded.py`` (conftest.py must stay
+1-device per its own warning).
+
 Used three ways:
   * ``tests/test_parity.py`` parametrizes pytest over the grids (tier-1
-    gate);
+    gate); ``tests/test_parity_sharded.py`` adds the mesh axis via a
+    subprocess;
   * CI's dtype-matrix job runs ``python tests/parity.py --dtypes <dt>``
-    (GEMM cells for every dtype, attention cells for the fp dtypes);
-  * new backends/dtypes/cases extend BACKENDS / DTYPES / SHAPES /
-    ATTN_BACKENDS / ATTN_CASES and inherit the whole gate.
+    (GEMM cells for every dtype, attention cells for the fp dtypes); the
+    ``parity-sharded`` job runs ``--sharded --dtypes <dt>`` on a forced
+    4-device host;
+  * new backends/dtypes/cases/mesh shapes extend BACKENDS / DTYPES /
+    SHAPES / ATTN_BACKENDS / ATTN_CASES / MESH_SHAPES and inherit the
+    whole gate.
 """
 from __future__ import annotations
 
@@ -306,6 +321,150 @@ def run_attention_grid(backends: Sequence[str] = ATTN_BACKENDS,
     return results
 
 
+# ---------------------------------------------------------------------------
+# Sharded grid (mesh × backend × dtype): shard_map'd TP ≡ unsharded
+# ---------------------------------------------------------------------------
+
+# (data, model) mesh shapes; (2,2) needs the forced 4-device host.
+MESH_SHAPES = ((1, 1), (2, 1), (1, 2), (2, 2))
+
+SHARDED_GEMM_BACKENDS = ("xla", "blockflow")
+SHARDED_ATTN_BACKENDS = ("fused_interpret", "paged_interpret")
+
+
+def make_tp_mesh(shape: Tuple[int, int]):
+    """A (data, model) mesh over the first shape[0]*shape[1] local devices."""
+    import jax
+    from jax.sharding import Mesh
+    need = shape[0] * shape[1]
+    devs = jax.devices()
+    if len(devs) < need:
+        raise RuntimeError(
+            f"mesh {shape} needs {need} devices, host has {len(devs)}; "
+            f"set XLA_FLAGS=--xla_force_host_platform_device_count=4 "
+            f"before jax initializes (tests/test_parity_sharded.py does)")
+    return Mesh(np.asarray(devs[:need]).reshape(shape), ("data", "model"))
+
+
+def check_sharded_gemm_cell(mesh_shape: Tuple[int, int], backend: str,
+                            dtype: str,
+                            shape: Tuple[int, int, int]) -> ParityResult:
+    """One sharded GEMM cell: the TP layer's column-parallel AND
+    row-parallel (psum) paths vs the unsharded backend, exact for int8,
+    per-dtype tolerances else. Non-divisible shapes exercise the
+    replicated fallback (trivially equal — still asserted)."""
+    from repro.distributed import tp
+    M, K, N = shape
+    a, b = make_operands(dtype, M, K, N)
+    pol = GemmPolicy(backend=backend)
+    ref = np.asarray(api.matmul(a, b, policy=pol))
+    ctx = tp.make_context(make_tp_mesh(mesh_shape))
+    ctx_desc = f"mesh={mesh_shape}"
+    bias = (None if dtype == "int8"
+            else jnp.asarray(np.arange(N, dtype=np.float32) * 0.25,
+                             b.dtype))
+    with tp.use_tp(ctx):
+        # "mlp" → model axis: second position = column-parallel (N split),
+        # first position = row-parallel (K split, fp32/int32 psum).
+        col = np.asarray(tp.matmul(a, b, axes=("embed", "mlp"), policy=pol))
+        row = np.asarray(tp.matmul(a, b, axes=("mlp", "embed"), policy=pol))
+        colb = (None if bias is None else np.asarray(
+            tp.linear(a, b, bias, axes=("embed", "mlp"), policy=pol)))
+    checks = [("column", col, ref), ("row", row, ref)]
+    if bias is not None:
+        # sharded-bias path: the (N,) bias splits with its output columns
+        refb = np.asarray(api.linear(a, b, bias, policy=pol))
+        checks.append(("column+bias", colb, refb))
+    err = 0.0
+    for name, got, ref in checks:
+        cx = (f"sharded {ctx_desc} {name}-parallel backend={backend} "
+              f"dtype={dtype} shape={shape}")
+        if dtype == "int8":
+            np.testing.assert_array_equal(got, ref, err_msg=cx)
+        else:
+            atol, rtol = TOLS[dtype]
+            np.testing.assert_allclose(got, ref, atol=atol, rtol=rtol,
+                                       err_msg=cx)
+            err = max(err, float(np.abs(got.astype(np.float32)
+                                        - ref.astype(np.float32)).max()))
+    return ParityResult(backend, dtype, shape, err, True,
+                        f"mesh{mesh_shape[0]}x{mesh_shape[1]}")
+
+
+def check_sharded_attention_cell(mesh_shape: Tuple[int, int], backend: str,
+                                 dtype: str, case: AttnCase) -> ParityResult:
+    """One sharded attention cell: heads (and the paged pool's KV heads)
+    sharded over the model axis through tp.attention vs the unsharded
+    backend and the mha_ref oracle. MQA cases (Hkv=1) exercise the
+    KV-replication fallback; the masked-row zero contract must survive
+    sharding."""
+    from repro.distributed import tp
+    q, k, v, q_positions, kv_valid_len = make_attention_operands(case, dtype)
+    pol = AttentionPolicy(backend=backend, block_q=32, block_k=32,
+                          page_size=ATTN_PAGE_SIZE)
+    ref = np.asarray(mha_ref(q, k, v, causal=case.causal,
+                             q_positions=q_positions,
+                             kv_valid_len=kv_valid_len), np.float32)
+    if backend.startswith("paged"):
+        kop, vop, bt = make_paged_operands(k, v)
+    else:
+        kop, vop, bt = k, v, None
+    unsharded = np.asarray(api.attention(
+        q, kop, vop, q_positions=q_positions, kv_valid_len=kv_valid_len,
+        causal=case.causal, block_tables=bt, policy=pol), np.float32)
+    ctx = tp.make_context(make_tp_mesh(mesh_shape))
+    with tp.use_tp(ctx):
+        out = tp.attention(q, kop, vop, q_positions=q_positions,
+                           kv_valid_len=kv_valid_len, causal=case.causal,
+                           block_tables=bt, policy=pol)
+    got = np.asarray(out, np.float32)
+    cx = (f"sharded mesh={mesh_shape} attention backend={backend} "
+          f"dtype={dtype} case={case.name}")
+    atol, rtol = ATTN_TOLS[dtype]
+    np.testing.assert_allclose(got, unsharded, atol=atol, rtol=rtol,
+                               err_msg=f"{cx}: sharded vs unsharded")
+    np.testing.assert_allclose(got, ref, atol=atol, rtol=rtol,
+                               err_msg=f"{cx}: sharded vs oracle")
+    masked = np.asarray(q_positions)[:, 0] < 0
+    if masked.any():
+        assert np.abs(got[masked]).max() == 0.0, \
+            f"{cx}: masked rows must stay exactly zero under sharding"
+    err = float(np.abs(got - ref).max()) if got.size else 0.0
+    return ParityResult(backend, dtype, (case.B, case.Sq, case.T), err, True,
+                        f"{case.name}@mesh{mesh_shape[0]}x{mesh_shape[1]}")
+
+
+def run_sharded_grid(mesh_shapes: Sequence[Tuple[int, int]] = MESH_SHAPES,
+                     dtypes: Sequence[str] = DTYPES,
+                     gemm_backends: Sequence[str] = SHARDED_GEMM_BACKENDS,
+                     attn_backends: Sequence[str] = SHARDED_ATTN_BACKENDS,
+                     shapes: Sequence[Tuple[int, int, int]] = SHAPES,
+                     cases: Sequence[AttnCase] = ATTN_CASES,
+                     out=sys.stdout) -> list:
+    """Sweep the sharded grids; raises on first divergence."""
+    results = []
+    for ms in mesh_shapes:
+        for dtype in dtypes:
+            for backend in gemm_backends:
+                for shape in shapes:
+                    r = check_sharded_gemm_cell(ms, backend, dtype, shape)
+                    results.append(r)
+                    print(f"parity {backend:17s} {dtype:9s} "
+                          f"{'x'.join(map(str, shape)):12s} "
+                          f"max_err={r.max_err:.2e} {r.detail}", file=out)
+            if dtype not in ATTN_TOLS:
+                continue                # integer dtypes: GEMM-only
+            for backend in attn_backends:
+                for case in cases:
+                    r = check_sharded_attention_cell(ms, backend, dtype,
+                                                     case)
+                    results.append(r)
+                    print(f"parity {backend:17s} {dtype:9s} "
+                          f"attn:{r.detail:34s} max_err={r.max_err:.2e}",
+                          file=out)
+    return results
+
+
 def run_grid(backends: Sequence[str] = BACKENDS,
              dtypes: Sequence[str] = DTYPES,
              shapes: Sequence[Tuple[int, int, int]] = SHAPES,
@@ -347,7 +506,24 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                     help="attention grid backends; paged_interpret cells "
                          "read K/V through shuffled block tables over a "
                          "distractor-laden page pool")
+    ap.add_argument("--sharded", action="store_true",
+                    help="run the SHARDED grids instead (mesh × backend × "
+                         "dtype): shard_map'd TP GEMM (column+row) and "
+                         "head-sharded attention vs unsharded, over "
+                         "(1,1)/(2,1)/(1,2)/(2,2) meshes. Needs "
+                         "XLA_FLAGS=--xla_force_host_platform_device_"
+                         "count=4 set before jax initializes")
+    ap.add_argument("--mesh-shapes", nargs="+", default=None,
+                    help="sharded grid mesh shapes as DxM (e.g. 2x2)")
     args = ap.parse_args(argv)
+    if args.sharded:
+        shapes = (tuple(tuple(int(x) for x in m.split("x"))
+                        for m in args.mesh_shapes)
+                  if args.mesh_shapes else MESH_SHAPES)
+        results = run_sharded_grid(mesh_shapes=shapes, dtypes=args.dtypes)
+        print(f"parity[sharded]: {len(results)} cells OK "
+              f"(meshes={list(shapes)}, dtypes={args.dtypes})")
+        return 0
     results = run_grid(args.backends, args.dtypes,
                        quantized=not args.no_quantized)
     if not args.no_attention:

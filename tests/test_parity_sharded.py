@@ -1,0 +1,36 @@
+"""Tier-1 gate over the SHARDED parity grid (tests/parity.py --sharded).
+
+Every (mesh × backend × dtype) cell — shard_map'd column/row-parallel GEMM
+and head-sharded fused/paged attention (repro/distributed/tp.py) — must
+match its unsharded twin to the same per-dtype tolerances as the existing
+backend grid, on meshes (1,1)/(2,1)/(1,2)/(2,2).
+
+Multi-device CPU hosts need XLA_FLAGS set before jax initializes and
+conftest.py must stay 1-device (its own warning), so the grid runs in a
+subprocess — the same CLI CI's ``parity-sharded`` job invokes per dtype.
+"""
+import os
+
+from test_tp_serving import run_tp_subprocess
+
+PARITY = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                      "parity.py")
+
+
+def test_sharded_parity_grid_float32():
+    """The full mesh grid at float32 (CI's dtype matrix adds bfloat16 and
+    int8): GEMM column+row parallel and fused/paged sharded attention all
+    agree with their unsharded cells."""
+    out = run_tp_subprocess(PARITY, ["--sharded", "--dtypes", "float32"])
+    assert "parity[sharded]:" in out and "cells OK" in out, out
+
+
+def test_sharded_parity_grid_int8_exact():
+    """int8 GEMM cells must stay integer-exact under sharding: the
+    row-parallel path psums int32 partial accumulators, which is
+    associative — any deviation means the TP layer re-quantized or
+    re-ordered through a lossy dtype. One mesh suffices (the others are
+    covered by the float32 grid + CI)."""
+    out = run_tp_subprocess(
+        PARITY, ["--sharded", "--dtypes", "int8", "--mesh-shapes", "2x2"])
+    assert "parity[sharded]:" in out and "cells OK" in out, out

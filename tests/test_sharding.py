@@ -92,3 +92,20 @@ def test_use_rules_context():
         x = shd.shard(jnp.ones((2, 2)), "act_batch", None)
         assert x.shape == (2, 2)
     assert shd.current_rules() is None
+
+
+def test_make_host_mesh_model_factor():
+    """Regression: make_host_mesh silently pinned the model axis to 1 — a
+    caller asking for TP got a mesh that could never shard. It now takes
+    the model factor and fails loudly on an impossible split."""
+    from repro.launch.mesh import make_host_mesh
+    n = len(jax.devices())
+    mesh = make_host_mesh()                      # default: all-data, TP=1
+    assert dict(mesh.shape) == {"data": n, "model": 1}
+    mesh = make_host_mesh(model=n)               # all-model
+    assert dict(mesh.shape) == {"data": 1, "model": n}
+    with pytest.raises(ValueError, match="model"):
+        make_host_mesh(model=0)
+    bad = n + 1                                  # never divides n
+    with pytest.raises(ValueError, match="divisible"):
+        make_host_mesh(model=bad)

@@ -1,0 +1,140 @@
+"""Property tests for distributed/sharding.py::ShardingRules.
+
+The rule engine is now load-bearing for TP serving (repro/distributed/tp.py
+derives its column/row/head sharding decisions from it), so its contracts
+get the hypothesis treatment (tests/hypcompat.py shim — skips without
+hypothesis, the CI test job installs it):
+
+  * resolved specs never over-partition: every dim's assigned mesh-axis
+    product divides the dim (the divisibility fallback to replicated), and
+    no mesh axis is assigned twice;
+  * spec() is deterministic — same inputs, same spec, across calls and
+    across equally-configured instances;
+  * overrides round-trip: construction-time overrides are visible in
+    ``rules``, don't leak into DEFAULT_RULES, and govern the spec.
+
+The explicit example tests at the bottom pin the same invariants without
+hypothesis, so a bare environment still exercises the checkers.
+"""
+import jax
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+from hypcompat import given, settings, st
+from repro.distributed import sharding as shd
+
+LOGICALS = sorted(shd.DEFAULT_RULES)
+AXIS_VALUES = (None, "data", "model", "pod", ("pod", "data"))
+
+
+def sized_rules(data: int = 1, model: int = 1, overrides=None,
+                pod: int = 1) -> shd.ShardingRules:
+    """ShardingRules over a fabricated (data, model) mesh whose axis sizes
+    are reported as given — the same trick tests/test_sharding.py uses, so
+    over-partition checks run without multi-device hosts."""
+    mesh = Mesh(np.asarray(jax.devices()[:1]).reshape(1, 1),
+                ("data", "model"))
+    sizes = {"data": data, "model": model, "pod": pod}
+
+    class Sized(shd.ShardingRules):
+        def _mesh_size(self, axes):
+            if axes is None:
+                return 1
+            axes = (axes,) if isinstance(axes, str) else axes
+            n = 1
+            for a in axes:
+                n *= sizes.get(a, 1)
+            return n
+
+    return Sized(mesh, overrides)
+
+
+def axes_of(entry):
+    return (entry,) if isinstance(entry, str) else tuple(entry or ())
+
+
+def assert_spec_well_formed(rules: shd.ShardingRules, logical, shape):
+    """The two structural invariants every resolved spec must satisfy."""
+    spec = rules.spec(logical, shape)
+    entries = tuple(spec)
+    assert len(entries) == len(logical), (spec, logical)
+    used = []
+    for dim, entry in zip(shape, entries):
+        size = rules._mesh_size(entry)
+        assert dim % max(size, 1) == 0, (
+            f"over-partitioned: dim {dim} split {size}-way in {spec} "
+            f"for logical={logical} shape={shape}")
+        used.extend(axes_of(entry))
+    assert len(used) == len(set(used)), (
+        f"mesh axis assigned twice in {spec} for logical={logical}")
+    return spec
+
+
+@settings(max_examples=200, deadline=None)
+@given(names=st.lists(st.sampled_from(LOGICALS + [None]), min_size=1,
+                      max_size=4),
+       dims=st.lists(st.integers(min_value=1, max_value=96), min_size=4,
+                     max_size=4),
+       data=st.sampled_from([1, 2, 3, 4, 16]),
+       model=st.sampled_from([1, 2, 3, 4, 16]))
+def test_spec_never_overpartitions(names, dims, data, model):
+    rules = sized_rules(data=data, model=model)
+    assert_spec_well_formed(rules, tuple(names), tuple(dims[:len(names)]))
+
+
+@settings(max_examples=100, deadline=None)
+@given(names=st.lists(st.sampled_from(LOGICALS + [None]), min_size=1,
+                      max_size=4),
+       dims=st.lists(st.integers(min_value=1, max_value=96), min_size=4,
+                     max_size=4),
+       model=st.sampled_from([1, 2, 4]))
+def test_spec_is_deterministic(names, dims, model):
+    logical, shape = tuple(names), tuple(dims[:len(names)])
+    a = sized_rules(model=model)
+    b = sized_rules(model=model)
+    assert a.spec(logical, shape) == a.spec(logical, shape)
+    assert a.spec(logical, shape) == b.spec(logical, shape)
+    # shape-less resolution is deterministic too
+    assert a.spec(logical) == b.spec(logical)
+
+
+@settings(max_examples=100, deadline=None)
+@given(key=st.sampled_from(LOGICALS),
+       value=st.sampled_from(AXIS_VALUES))
+def test_overrides_round_trip(key, value):
+    before = dict(shd.DEFAULT_RULES)
+    rules = sized_rules(data=2, model=2, overrides={key: value})
+    assert rules.rules[key] == value                 # override lands
+    assert shd.DEFAULT_RULES == before               # and doesn't leak
+    for other in LOGICALS:
+        if other != key:
+            assert rules.rules[other] == shd.DEFAULT_RULES[other]
+    # and it governs resolution: a divisible dim follows the override
+    spec = rules.spec((key,), (16,))
+    resolved = rules._resolve(value)
+    assert tuple(spec) == (resolved,), (spec, value)
+
+
+# --- explicit examples: the same invariants without hypothesis ------------
+
+def test_overpartition_fallback_example():
+    rules = sized_rules(data=4, model=16)
+    spec = assert_spec_well_formed(rules, ("embed", "heads"), (576, 9 * 64))
+    assert spec == P("data", "model")
+    spec = assert_spec_well_formed(rules, (None, "heads"), (1, 9))
+    assert spec == P(None, None)                     # 9 % 16 → replicate
+
+
+def test_duplicate_axis_resolution_example():
+    """act_seq flipped to model (sequence parallelism) collides with a TP
+    feature dim: the feature dim must win, the sequence dim replicate."""
+    rules = sized_rules(data=2, model=2, overrides={"act_seq": "model"})
+    spec = assert_spec_well_formed(
+        rules, ("act_batch", "act_seq", "act_mlp"), (4, 8, 8))
+    assert spec == P("data", None, "model")
+
+
+def test_overrides_do_not_mutate_defaults_example():
+    before = dict(shd.DEFAULT_RULES)
+    sized_rules(overrides={"heads": None, "mlp": "data"})
+    assert shd.DEFAULT_RULES == before
