@@ -26,6 +26,9 @@ SUITES = {
     # TP column: paged serving over a (data, model) host mesh (skips with
     # a message on 1-device hosts; force devices via XLA_FLAGS)
     "serving-tp": serving_sweep.run_tp,
+    # prefix-cache acceptance: shared-prefix + bursty Poisson mixes with
+    # and without COW prompt-page sharing at a fixed pool size
+    "serving-prefix": serving_sweep.run_prefix,
 }
 
 

@@ -48,6 +48,7 @@ from repro.configs.registry import get_smoke_config
 from repro.core.plan import AttentionPolicy
 from repro.models import transformer as T
 from repro.serving.engine import ServeConfig, ServingEngine
+from repro.serving.scheduler import Scheduler
 
 
 def skewed_prompts(rng, n: int, max_len: int, short_frac: float = 0.9
@@ -63,39 +64,79 @@ def skewed_prompts(rng, n: int, max_len: int, short_frac: float = 0.9
     return prompts
 
 
+def shared_prefix_prompts(rng, n: int, prefix_len: int, tail_lo: int = 2,
+                          tail_hi: int = 8) -> List[List[int]]:
+    """The system-prompt traffic shape (docs/serving.md#prefix-cache):
+    every request opens with the same ``prefix_len`` tokens and appends a
+    short random tail — the mix the prefix cache turns from O(prompt) into
+    O(tail) prefill work and from private to shared pages."""
+    shared = rng.integers(0, 64, prefix_len).tolist()
+    return [shared
+            + rng.integers(0, 64,
+                           int(rng.integers(tail_lo, tail_hi + 1))).tolist()
+            for _ in range(n)]
+
+
+def poisson_arrival_steps(rng, n: int, rate: float) -> List[int]:
+    """Bursty arrivals: request i becomes eligible at engine step
+    ``steps[i]`` (cumulative exponential inter-arrival gaps at ``rate``
+    requests per step — the Poisson process, measured in steps so the
+    trace is platform-independent)."""
+    gaps = rng.exponential(1.0 / rate, n)
+    return np.floor(np.cumsum(gaps)).astype(int).tolist()
+
+
 def kv_bytes_per_token(cfg) -> int:
     """K + V bytes per cached token per layer stack (bf16 cache)."""
     return 2 * cfg.n_kv_heads * cfg.head_dim * 2 * cfg.n_layers
 
 
 def serve_workload(cfg, params, sc: ServeConfig, prompts: List[List[int]],
-                   gen_len: int, axes=None):
+                   gen_len: int, axes=None,
+                   arrival_steps: Optional[List[int]] = None):
     """Serve every prompt for gen_len tokens via submit()/step(); returns
-    measured stats. Peak memory is sampled after every step."""
+    measured stats. Peak memory is sampled after every step.
+
+    ``arrival_steps`` makes the trace bursty: request i only becomes
+    eligible for submission at that engine step (None → everything arrives
+    up front). TTFT is wall-clock from a request's eligibility to its
+    first reported token — queueing delay included, which is exactly what
+    admission capacity (prefix sharing) and chunked prefill move."""
     eng = ServingEngine(cfg, params, sc, axes=axes)
     per_tok = kv_bytes_per_token(cfg)
-    pending = [list(p) for p in prompts]
+    n = len(prompts)
+    arrivals = (list(arrival_steps) if arrival_steps is not None
+                else [0] * n)
+    queue = sorted(range(n), key=lambda i: arrivals[i])
     done: dict = {}
     live_handles: dict = {}
+    arrive_t: dict = {}
+    ttft: dict = {}
     total_done = 0
     n_finished = 0
     peak_live = 0
     peak_tokens = 0
     n_steps = 0
     t0 = time.perf_counter()
-    while pending or live_handles:
-        while pending:
-            h = eng.submit(pending[0])
+    while queue or live_handles:
+        while queue and arrivals[queue[0]] <= n_steps:
+            i = queue[0]
+            arrive_t.setdefault(i, time.perf_counter())
+            h = eng.submit(prompts[i])
             if h is None:
                 break
-            live_handles[h] = len(pending[0])
-            pending.pop(0)
+            live_handles[h] = i
+            queue.pop(0)
         stepped = eng.step()
         n_steps += 1
+        now = time.perf_counter()
         for h, t in stepped.items():
             if h not in live_handles:
                 continue
+            i = live_handles[h]
             done[h] = done.get(h, 0) + 1
+            if done[h] == 1:
+                ttft[i] = now - arrive_t[i]
             if done[h] >= gen_len:
                 eng.cancel(h)
                 del live_handles[h]
@@ -116,10 +157,16 @@ def serve_workload(cfg, params, sc: ServeConfig, prompts: List[List[int]],
     budget_tokens = (eng.pool.n_pages * eng.pool.page_size if eng.paged
                      else eng.sc.batch_slots * eng.sc.max_len)
     kv_shards = eng.kv_shards()
+    waits = sorted(ttft.values())
+    ttft_p50, ttft_p95 = ((float(np.percentile(waits, 50)),
+                           float(np.percentile(waits, 95)))
+                          if waits else (0.0, 0.0))
     return {
         "tokens": total,
         "finished": n_finished,
         "tok_per_s": total / max(dt, 1e-9),
+        "ttft_p50_s": round(ttft_p50, 4),
+        "ttft_p95_s": round(ttft_p95, 4),
         "peak_cache_bytes": peak_tokens * per_tok,
         # what each model shard actually holds resident: the pool splits
         # on the KV-head dim, the page *count* is identical per shard
@@ -131,6 +178,10 @@ def serve_workload(cfg, params, sc: ServeConfig, prompts: List[List[int]],
         "peak_live_requests": peak_live,
         "preemptions": eng.n_preemptions if eng.paged else 0,
         "steps": n_steps,
+        # the engine's own observability dict: prefill/decode token split,
+        # pool high-water mark, prefix hit/miss/evict counters + hit rate
+        **{k: v for k, v in eng.stats().items()
+           if k not in ("tick", "live_requests", "waiting_requests")},
     }
 
 
@@ -205,9 +256,100 @@ def sweep(arch: str = "smollm-135m", n_layers: int = 2, max_len: int = 64,
     return rows
 
 
+def sweep_prefix(arch: str = "smollm-135m", n_layers: int = 2,
+                 max_len: int = 96, batch_slots: int = 8,
+                 n_requests: int = 20, gen_len: int = 3, page_size: int = 8,
+                 prefix_len: int = 72, cache_pages: Optional[int] = None,
+                 arrival_rate: float = 0.4, seed: int = 0,
+                 jsonl_path: Optional[str] = None):
+    """Prefix-cache acceptance sweep (ISSUE 6): a shared-prefix mix and a
+    bursty (Poisson-arrival) mix, each served by the paged engine with and
+    without the prefix cache at a FIXED pool size. Reports tokens/s, TTFT
+    p50/p95, peak admitted concurrency, and the prefix hit rate — the
+    gates are ≥2× peak concurrent requests and ≥1.5× tokens/s on the
+    shared-prefix mix.
+
+    Default shapes are prefill-dominated (long shared prefix, short
+    tails and gen_len) on purpose: the paged kernel here runs in Pallas
+    *interpret* mode, where decode cost grows with the summed resident
+    key blocks of the live set — host-sequential, so the extra
+    concurrency the cache unlocks does not amortize decode the way real
+    hardware does. Prefill work elided by the cache (O(prompt) →
+    O(tail)) is the platform-independent win; decode-heavy mixes need a
+    compiled backend for the throughput gate to be a fair fight."""
+    cfg = get_smoke_config(arch, n_layers=n_layers, vocab=64)
+    params, axes = T.init_model(jax.random.PRNGKey(seed), cfg)
+    rng = np.random.default_rng(seed)
+    prompts = shared_prefix_prompts(rng, n_requests, prefix_len)
+    arrivals = poisson_arrival_steps(rng, n_requests, arrival_rate)
+
+    n_blocks = -(-max_len // page_size)
+    # pool sized so an UNSHARED request set is page-starved (~2 concurrent)
+    # while shared prefixes fit many: the capacity the cache must unlock
+    pages = cache_pages if cache_pages is not None else 2 * n_blocks
+    paged_attn = AttentionPolicy(backend="paged_interpret",
+                                 page_size=page_size, block_q=16)
+    base = dict(batch_slots=batch_slots, max_len=max_len,
+                attention=paged_attn, cache_pages=pages)
+    cells = {
+        "nocache": (ServeConfig(**base), None),
+        "prefix": (ServeConfig(**base, prefix_cache=True), None),
+        "nocache_bursty": (ServeConfig(**base), arrivals),
+        "prefix_bursty": (ServeConfig(**base, prefix_cache=True,
+                                      scheduler=Scheduler(prefill_chunk=16)),
+                          arrivals),
+    }
+    rows = []
+    for name, (sc, arr) in cells.items():
+        stats = serve_workload(cfg, params, sc, prompts, gen_len, axes=axes,
+                               arrival_steps=arr)
+        row = {"engine": name, "arch": cfg.name, "max_len": max_len,
+               "batch_slots": batch_slots, "page_size": page_size,
+               "cache_pages": pages, "prefix_len": prefix_len,
+               "n_requests": n_requests, "gen_len": gen_len,
+               "arrival_rate": arrival_rate if arr is not None else None,
+               **stats}
+        rows.append(row)
+        emit("serving-prefix", f"{name}_tok_per_s",
+             round(stats["tok_per_s"], 2), "tok/s",
+             peak_live=stats["peak_live_requests"],
+             ttft_p50_s=stats["ttft_p50_s"],
+             ttft_p95_s=stats["ttft_p95_s"],
+             hit_rate=stats.get("prefix_hit_rate", 0.0))
+    out = jsonl_path or os.path.join(os.path.dirname(__file__),
+                                     "serving_prefix.jsonl")
+    with open(out, "w") as f:
+        for r in rows:
+            f.write(json.dumps(r) + "\n")
+    print(f"[serving-prefix] wrote {len(rows)} rows to {out}")
+    by = {r["engine"]: r for r in rows}
+    live_x = (by["prefix"]["peak_live_requests"]
+              / max(by["nocache"]["peak_live_requests"], 1))
+    tput_x = (by["prefix"]["tok_per_s"]
+              / max(by["nocache"]["tok_per_s"], 1e-9))
+    print(f"[serving-prefix] shared-prefix mix at {pages} pages: "
+          f"{live_x:.2f}x peak concurrent requests "
+          f"({by['nocache']['peak_live_requests']} -> "
+          f"{by['prefix']['peak_live_requests']}), "
+          f"{tput_x:.2f}x tokens/s, hit rate "
+          f"{by['prefix'].get('prefix_hit_rate', 0.0):.1%}")
+    print(f"[serving-prefix] bursty (Poisson {arrival_rate}/step): TTFT "
+          f"p50 {by['nocache_bursty']['ttft_p50_s']:.3f}s -> "
+          f"{by['prefix_bursty']['ttft_p50_s']:.3f}s, p95 "
+          f"{by['nocache_bursty']['ttft_p95_s']:.3f}s -> "
+          f"{by['prefix_bursty']['ttft_p95_s']:.3f}s")
+    return rows
+
+
 def run():
     """Default suite entry (benchmarks.run): CPU-safe sizes."""
     sweep()
+
+
+def run_prefix():
+    """Prefix-cache suite entry (benchmarks.run serving-prefix): the
+    shared-prefix and bursty mixes at CPU-safe sizes."""
+    sweep_prefix()
 
 
 def run_tp():
@@ -225,10 +367,12 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--arch", default="smollm-135m")
     ap.add_argument("--n-layers", type=int, default=2)
-    ap.add_argument("--max-len", type=int, default=64)
-    ap.add_argument("--batch-slots", type=int, default=4)
-    ap.add_argument("--n-requests", type=int, default=12)
-    ap.add_argument("--gen-len", type=int, default=8)
+    # shape flags default to None → each suite's own defaults apply
+    # (the skewed sweep and the prefix suite tune them differently)
+    ap.add_argument("--max-len", type=int, default=None)
+    ap.add_argument("--batch-slots", type=int, default=None)
+    ap.add_argument("--n-requests", type=int, default=None)
+    ap.add_argument("--gen-len", type=int, default=None)
     ap.add_argument("--page-size", type=int, default=8)
     ap.add_argument("--cache-pages-frac", type=float, default=0.5,
                     help="paged pool size as a fraction of the contiguous-"
@@ -238,12 +382,27 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                          "(data, model) host mesh with an N-way model axis "
                          "(tokens/s + per-shard peak cache bytes)")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--prefix-suite", action="store_true",
+                    help="run the prefix-cache acceptance sweep (shared-"
+                         "prefix + bursty Poisson mixes) instead of the "
+                         "paged-vs-contiguous skewed-length sweep")
+    ap.add_argument("--prefix-len", type=int, default=None,
+                    help="prefix suite: shared tokens heading every prompt")
     args = ap.parse_args(argv)
-    sweep(arch=args.arch, n_layers=args.n_layers, max_len=args.max_len,
-          batch_slots=args.batch_slots, n_requests=args.n_requests,
-          gen_len=args.gen_len, page_size=args.page_size,
+    shape = {k: v for k, v in (("max_len", args.max_len),
+                               ("batch_slots", args.batch_slots),
+                               ("n_requests", args.n_requests),
+                               ("gen_len", args.gen_len))
+             if v is not None}
+    if args.prefix_suite:
+        if args.prefix_len is not None:
+            shape["prefix_len"] = args.prefix_len
+        sweep_prefix(arch=args.arch, n_layers=args.n_layers,
+                     page_size=args.page_size, seed=args.seed, **shape)
+        return 0
+    sweep(arch=args.arch, n_layers=args.n_layers, page_size=args.page_size,
           cache_pages_frac=args.cache_pages_frac, seed=args.seed,
-          tp=args.tp)
+          tp=args.tp, **shape)
     return 0
 
 

@@ -7,6 +7,7 @@ Usage:
 from __future__ import annotations
 
 import argparse
+import asyncio
 import time
 
 import jax
@@ -17,6 +18,8 @@ from repro.core.plan import AttentionPolicy, GemmPolicy
 from repro.launch.mesh import make_host_mesh
 from repro.models import transformer as T
 from repro.serving.engine import ServeConfig, ServingEngine
+from repro.serving.frontend import AsyncServingEngine
+from repro.serving.scheduler import Scheduler
 
 
 def main(argv=None):
@@ -65,6 +68,26 @@ def main(argv=None):
                          "batch_slots * ceil(max_len / page_size). Smaller "
                          "values oversubscribe memory (page-bound "
                          "admission + preemption)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="paged backends: share full prompt-prefix KV "
+                         "pages across requests (copy-on-write radix "
+                         "cache — docs/serving.md#prefix-cache)")
+    ap.add_argument("--prefix-watermark", type=int, default=0,
+                    help="with --prefix-cache: evict cold cached entries "
+                         "each step until this many pool pages are free "
+                         "(0 = evict only on demand)")
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="tokens of prefill per engine step (chunked "
+                         "prefill, interleaved with decode to bound decode "
+                         "latency jitter); default: whole prompt at submit")
+    ap.add_argument("--shared-prefix-len", type=int, default=0,
+                    help="continuous-batching workload: prepend this many "
+                         "shared tokens to every prompt (the system-prompt "
+                         "traffic shape the prefix cache serves)")
+    ap.add_argument("--async-demo", type=int, default=0, metavar="N",
+                    help="also run N concurrent requests through the "
+                         "AsyncServingEngine streaming frontend "
+                         "(serving/frontend.py)")
     args = ap.parse_args(argv)
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -72,6 +95,8 @@ def main(argv=None):
     attn = AttentionPolicy(backend=args.attn_backend,
                            page_size=args.page_size)
     mesh = make_host_mesh(model=args.tp) if args.tp > 1 else None
+    scheduler = (Scheduler(prefill_chunk=args.prefill_chunk)
+                 if args.prefill_chunk else None)
     print(f"[serve] arch={cfg.name} slots={args.batch_slots} "
           f"max_len={args.max_len} gemm={policy.resolved_backend()}/"
           f"{policy.mode} attn={attn.resolved_backend()} "
@@ -87,7 +112,12 @@ def main(argv=None):
         cache_pages=args.cache_pages, mesh=mesh)
     if sc.paged():
         print(f"[serve] paged KV: page_size={args.page_size} pages="
-              f"{args.cache_pages or 'contiguous-equivalent'}")
+              f"{args.cache_pages or 'contiguous-equivalent'} "
+              f"prefix_cache={args.prefix_cache} "
+              f"prefill_chunk={args.prefill_chunk or 'whole-prompt'}")
+    elif args.prefix_cache:
+        ap.error("--prefix-cache requires a paged attention backend "
+                 "(--attn-backend paged|paged_interpret)")
     params, axes = T.init_model(jax.random.PRNGKey(args.seed), cfg)
     engine = ServingEngine(cfg, params, sc, axes=axes)
 
@@ -109,14 +139,17 @@ def main(argv=None):
         print("[serve] continuous batching skipped: ssm/hybrid families "
               "support slot admission only with --batch-slots 1")
         return 0
-    engine2 = ServingEngine(cfg, params, ServeConfig(
+    sc2 = ServeConfig(
         batch_slots=args.batch_slots, max_len=args.max_len, gemm=policy,
         attention=attn, pack_weights=args.pack_weights,
         weight_dtype=args.weight_dtype, cache_pages=args.cache_pages,
-        mesh=mesh), axes=axes)
+        mesh=mesh, prefix_cache=args.prefix_cache and sc.paged(),
+        prefix_watermark=args.prefix_watermark, scheduler=scheduler)
+    engine2 = ServingEngine(cfg, params, sc2, axes=axes)
     lo = max(1, min(4, args.prompt_len))
-    pending = [rng.integers(0, cfg.vocab,
-                            rng.integers(lo, args.prompt_len + 1))
+    shared = rng.integers(0, cfg.vocab, args.shared_prefix_len).tolist()
+    pending = [shared + rng.integers(0, cfg.vocab,
+                                     rng.integers(lo, args.prompt_len + 1))
                .tolist() for _ in range(args.n_requests)]
     done_tokens = 0
     t0 = time.perf_counter()
@@ -141,6 +174,32 @@ def main(argv=None):
     dt = time.perf_counter() - t0
     print(f"[serve] continuous batching: {done_tokens} tokens in {dt:.2f}s "
           f"({done_tokens / max(dt, 1e-9):.1f} tok/s)")
+    print(f"[serve] stats: {engine2.stats()}")
+
+    if args.async_demo > 0:
+        engine3 = ServingEngine(cfg, params, sc2, axes=axes)
+        aeng = AsyncServingEngine(engine3)
+
+        async def one(i: int) -> int:
+            prompt = (shared + rng.integers(
+                0, cfg.vocab, max(lo, args.prompt_len // 2)).tolist())
+            n = 0
+            async for _tok in aeng.stream(prompt, args.gen_len,
+                                          priority=i % 2):
+                n += 1
+            return n
+
+        async def demo():
+            return await asyncio.gather(
+                *(one(i) for i in range(args.async_demo)))
+
+        t0 = time.perf_counter()
+        counts = asyncio.run(demo())
+        dt = time.perf_counter() - t0
+        print(f"[serve] async streaming: {args.async_demo} concurrent "
+              f"requests, {sum(counts)} tokens in {dt:.2f}s "
+              f"({sum(counts) / max(dt, 1e-9):.1f} tok/s)")
+        print(f"[serve] async stats: {engine3.stats()}")
     return 0
 
 

@@ -1,1 +1,7 @@
 from repro.serving.engine import ServeConfig, ServingEngine  # noqa: F401
+from repro.serving.frontend import AsyncServingEngine  # noqa: F401
+from repro.serving.kv_pool import (BlockTable, PagePool,  # noqa: F401
+                                   PoolExhausted)
+from repro.serving.prefix_cache import PrefixCache, PrefixHit  # noqa: F401
+from repro.serving.scheduler import (RequestView, Scheduler,  # noqa: F401
+                                     SLOScheduler)

@@ -21,11 +21,22 @@ blocks through the offset-aware flash kernel for both prefill and decode,
 kernels/paged_attention.py, docs/serving.md). In paged mode admission is
 **page-bound** instead of slot-bound: a request is admitted while free
 pages cover its prompt, decode steps allocate pages on demand, retirement
-returns them, and when the pool runs dry the lowest-priority (youngest)
-request is preempted — spilled to a wait queue and resumed later with a
-token stream identical to an uninterrupted run. ``submit``/``step`` then
-key their results by *request id* (the handle submit returns), since a
-request may migrate across slots.
+returns them, and when the pool runs dry a live request is preempted —
+spilled to a wait queue and resumed later with a token stream identical to
+an uninterrupted run. ``submit``/``step`` then key their results by
+*request id* (the handle submit returns), since a request may migrate
+across slots.
+
+Scheduling *policy* — resume order, preemption victims, priority
+admission, chunked prefill — lives in serving/scheduler.py
+(``ServeConfig.scheduler``; the default reproduces the PR 4/5 FIFO +
+youngest-preemption choreography exactly). With ``prefix_cache=True``
+the paged engine additionally shares full prompt-prefix KV pages across
+requests through a copy-on-write radix cache (serving/prefix_cache.py):
+submit looks the prompt up, borrows every cached full page (pool ref
+counts), forks the first divergent page, and prefills only the uncached
+tail; finished prefills index their prompt pages for later requests, and
+cold entries evict by LRU when the pool runs low.
 
 Slot admission uses *masked* prefill/decode: batch rows — and, for the
 power-of-two **bucketed prefill** that bounds per-prompt-length recompiles,
@@ -50,6 +61,8 @@ from repro.distributed import tp as TP
 from repro.models import transformer as T
 from repro.models.config import ModelConfig
 from repro.serving.kv_pool import BlockTable, PagePool
+from repro.serving.prefix_cache import PrefixCache
+from repro.serving.scheduler import RequestView, Scheduler
 
 PAGED_BACKENDS = ("paged", "paged_interpret")
 
@@ -83,6 +96,20 @@ class ServeConfig:
     # (docs/serving.md). None → single-device serving, unchanged.
     sharding: Optional[ShardingPolicy] = None  # axis names + rule overrides
     # for the mesh; None → ShardingPolicy() (("data", "model") axes).
+    prefix_cache: bool = False
+    # paged backends only: share full prompt-prefix KV pages across
+    # requests through a copy-on-write radix cache
+    # (serving/prefix_cache.py, docs/serving.md#prefix-cache).
+    prefix_watermark: int = 0
+    # with prefix_cache: evict cold cached entries at step() start until at
+    # least this many pool pages are free. 0 → evict only on demand, when
+    # an admission would otherwise fall short of pages.
+    scheduler: Optional[Scheduler] = None
+    # scheduling policy (serving/scheduler.py): resume order, preemption
+    # victims, priority admission, chunked prefill. None → Scheduler(),
+    # the FIFO-within-priority default that reproduces the PR 4/5
+    # choreography (oldest resumes first, youngest preempts first,
+    # whole-prompt prefill).
 
     def policy(self) -> Optional[GemmPolicy]:
         """The effective GemmPolicy: ``gemm`` with ``weight_dtype`` folded
@@ -102,11 +129,18 @@ class ServeConfig:
 class _Waiting:
     """A preempted (or re-queued) request parked off-device: everything
     needed to rebuild its cache by re-prefilling ``prompt + out`` and
-    continue the stream exactly where it stopped."""
+    continue the stream exactly where it stopped. ``next_tok`` is None
+    only for a request preempted *mid-chunked-prefill* — no token was
+    sampled yet; ``key`` then re-seeds the first sample on resume so the
+    stream is unchanged under any temperature."""
     rid: int
     prompt: List[int]            # the ORIGINAL prompt, never rewritten
     out: List[int]               # reported tokens — the live stream list
-    next_tok: int                # sampled but not yet reported/written
+    next_tok: Optional[int]      # sampled but not yet reported/written
+    key: Optional[jax.Array] = None
+    priority: int = 0
+    deadline: Optional[float] = None
+    arrival: int = 0
 
 
 def _policy_scope(policy: Optional[GemmPolicy],
@@ -168,18 +202,24 @@ class ServingEngine:
     "paged"/"paged_interpret") the engine runs **memory-bound continuous
     batching**: submit() returns a *request id*, admission holds while free
     pages cover the prompt, decode grows block tables on demand, and pool
-    exhaustion preempts the youngest request into a wait queue from which
-    step() resumes it (oldest first) once pages and a slot free up —
+    exhaustion preempts a scheduler-chosen victim into a wait queue from
+    which step() resumes it once pages and a slot free up —
     docs/serving.md walks the full lifecycle.
+
+    ``ServeConfig.prefix_cache`` adds copy-on-write prompt-prefix sharing
+    over the same pool (serving/prefix_cache.py); ``ServeConfig.scheduler``
+    swaps the scheduling policy — chunked prefill, priorities, SLO
+    deadlines (serving/scheduler.py). Both default OFF/FIFO, reproducing
+    the PR 4/5 engine token-for-token.
 
     With ``ServeConfig.mesh`` the same engine serves **tensor-parallel**:
     prefill/decode run under a repro/distributed/tp.py context (shard_map'd
     column/row-parallel GEMMs, head-sharded attention, per-shard paged KV
     pools), with params and caches placed mesh-resident at construction.
-    Host-side scheduling — admission, page accounting, preemption — is
-    unchanged (pages are logical; every shard mirrors the allocation over
-    its head slice), so TP token streams are identical to single-device
-    streams (tests/test_tp_serving.py).
+    Host-side scheduling — admission, page accounting, preemption, the
+    prefix cache — is unchanged (pages are logical; every shard mirrors
+    the allocation over its head slice), so TP token streams are identical
+    to single-device streams (tests/test_tp_serving.py).
     """
 
     def __init__(self, cfg: ModelConfig, params, sc: ServeConfig,
@@ -213,6 +253,15 @@ class ServingEngine:
                                                  self.tp))
         B = sc.batch_slots
         self.paged = sc.paged()
+        self.scheduler = sc.scheduler if sc.scheduler is not None \
+            else Scheduler()
+        self.prefix: Optional[PrefixCache] = None
+        if sc.prefix_cache and not self.paged:
+            raise ValueError(
+                "ServeConfig.prefix_cache requires a paged attention "
+                "policy (backend 'paged'/'paged_interpret') — prefix "
+                "sharing aliases pool pages through block tables, which "
+                "the contiguous per-slot KV slab has none of")
         if self.paged:
             ps = sc.attention.page_size
             self.n_blocks = -(-sc.max_len // ps)
@@ -224,6 +273,8 @@ class ServingEngine:
                     f" request (ceil(max_len/page_size) = {self.n_blocks} "
                     f"pages); a preempted request could never resume")
             self.pool = PagePool(n_pages, ps)
+            if sc.prefix_cache:
+                self.prefix = PrefixCache(self.pool)
             self.caches = T.init_paged_caches(cfg, B, n_pages, ps,
                                               jnp.dtype(sc.cache_dtype),
                                               tpctx=self.tp)
@@ -238,7 +289,6 @@ class ServingEngine:
             # (cancel() and generate()'s reset drop theirs automatically).
             self.request_out: Dict[int, List[int]] = {}
             self._next_rid = 0
-            self.n_preemptions = 0
         else:
             self.caches = T.init_caches(cfg, B, sc.max_len,
                                         jnp.dtype(sc.cache_dtype),
@@ -253,6 +303,23 @@ class ServingEngine:
         # further (their cache is full): step() reports it, then retires —
         # the freshly decoded last token is never silently dropped.
         self.slot_drain = np.zeros(B, bool)
+        # Chunked prefill: a prefilling slot is live (it holds its pages
+        # and its slot) but not yet decodable; step() advances one chunk
+        # per iteration (scheduler.prefill_chunk tokens) until done.
+        self.slot_prefilling = np.zeros(B, bool)
+        self.slot_pf_tokens: List[Optional[List[int]]] = [None] * B
+        self.slot_pf_restore: List[Optional[_Waiting]] = [None] * B
+        self.slot_pf_key: List[Optional[jax.Array]] = [None] * B
+        # Per-request scheduling metadata the scheduler sees via _view().
+        self.slot_priority = np.zeros(B, np.int64)
+        self.slot_deadline: List[Optional[float]] = [None] * B
+        self.slot_arrival = np.zeros(B, np.int64)
+        # Observability (stats()): a monotonic host tick orders arrivals;
+        # token counters split prefill from decode work.
+        self.tick = 0
+        self.n_preemptions = 0
+        self.prefill_tokens = 0
+        self.decode_tokens = 0
 
     # -- shared helpers -----------------------------------------------------
     def _sample(self, logits: jax.Array,
@@ -280,6 +347,46 @@ class ServingEngine:
                 out = {k: rec(v) for k, v in node.items()}
                 if "len" in out:
                     out["len"] = out["len"].at[..., slot].set(0)
+                return out
+            if isinstance(node, (list, tuple)):
+                return type(node)(rec(v) for v in node)
+            return node
+        self.caches = rec(self.caches)
+
+    def _set_slot_len(self, slot: int, n: int):
+        """Preload a slot's valid length: prefix-cache admission reuses
+        ``n`` tokens already resident in shared/forked pages, and the
+        cache-len update is *additive* (len + tokens written), so the
+        partial prefill must start from the reused count — otherwise the
+        kernels' kv_valid_len would undercount and mask live keys."""
+        def rec(node):
+            if isinstance(node, dict):
+                out = {k: rec(v) for k, v in node.items()}
+                if "len" in out:
+                    out["len"] = out["len"].at[..., slot].set(n)
+                return out
+            if isinstance(node, (list, tuple)):
+                return type(node)(rec(v) for v in node)
+            return node
+        self.caches = rec(self.caches)
+
+    def _copy_page(self, src: int, dst: int):
+        """Copy-on-write device copy: duplicate page ``src``'s K/V rows
+        into private page ``dst`` across every layer's pools. The page
+        axis is -4 in both stacked scan leaves (n_scan, P, ps, Hkv, dh)
+        and dense leaves (P, ps, Hkv, dh), and it is never sharded under
+        TP (heads are), so the same indexed copy works mesh-resident —
+        every shard duplicates its own head slice, keeping per-shard pools
+        in lockstep."""
+        def rec(node):
+            if isinstance(node, dict):
+                out = {}
+                for k, v in node.items():
+                    if k in ("kp", "vp"):
+                        out[k] = v.at[..., dst, :, :, :].set(
+                            v[..., src, :, :, :])
+                    else:
+                        out[k] = rec(v)
                 return out
             if isinstance(node, (list, tuple)):
                 return type(node)(rec(v) for v in node)
@@ -316,13 +423,23 @@ class ServingEngine:
         (requests migrate across slots under preemption), slot id else."""
         return int(self.slot_rid[slot]) if self.paged else slot
 
+    def _view(self, slot: int) -> RequestView:
+        """The read-only snapshot the scheduler judges a live slot by."""
+        return RequestView(
+            rid=self._handle(slot),
+            priority=int(self.slot_priority[slot]),
+            deadline=self.slot_deadline[slot],
+            arrival=int(self.slot_arrival[slot]),
+            n_tokens=int(self.slot_pos[slot]),
+            prefilling=bool(self.slot_prefilling[slot]))
+
     # -- single-prompt helpers (used by tests/examples) ---------------------
     def generate(self, prompts: np.ndarray, n_tokens: int,
                  key: Optional[jax.Array] = None) -> np.ndarray:
         """prompts: (B, S) int32 — B must equal batch_slots. Returns
         (B, n_tokens) generated ids. In paged mode the pool is reset (all
-        in-flight submit() requests dropped) and every row gets pages for
-        its full S + n_tokens horizon up front."""
+        in-flight submit() requests dropped, the prefix cache cleared) and
+        every row gets pages for its full S + n_tokens horizon up front."""
         B, S = prompts.shape
         if B != self.sc.batch_slots:
             raise ValueError(
@@ -376,7 +493,11 @@ class ServingEngine:
 
     def _reset_paged_state(self):
         """Drop every in-flight request and return all pages to the pool
-        (batched generate() owns the whole engine)."""
+        (batched generate() owns the whole engine). The prefix cache is
+        cleared too — its retained pages would otherwise pin pool capacity
+        a full-batch generate() is entitled to."""
+        if self.prefix is not None:
+            self.prefix.clear()
         for s in range(self.sc.batch_slots):
             if self.slot_tables[s] is not None:
                 self.slot_tables[s].free()
@@ -403,29 +524,41 @@ class ServingEngine:
         self.slot_live[:] = False
         self.slot_drain[:] = False
         self.slot_pos[:] = 0
+        self.slot_prefilling[:] = False
+        self.slot_pf_tokens = [None] * self.sc.batch_slots
+        self.slot_pf_restore = [None] * self.sc.batch_slots
+        self.slot_pf_key = [None] * self.sc.batch_slots
         self.wait.clear()
 
     # -- continuous batching -------------------------------------------------
     def submit(self, prompt: List[int],
-               key: Optional[jax.Array] = None) -> Optional[int]:
+               key: Optional[jax.Array] = None, *,
+               priority: int = 0,
+               deadline: Optional[float] = None) -> Optional[int]:
         """Admit a request; returns its handle (paged: request id,
         contiguous: slot id) or None when it cannot be admitted now.
 
-        Masked single-slot prefill: the whole prompt runs as one prefill
-        call in which every *other* batch row carries position -1 — the
-        attention cache update skips those rows entirely (no K/V write, no
+        Masked single-slot prefill: the prompt runs as prefill calls in
+        which every *other* batch row carries position -1 — the attention
+        cache update skips those rows entirely (no K/V write, no
         valid-length bump), so concurrent slots' caches are untouched.
         (The old per-token full-batch decode wrote zero-token K/V into every
         other live slot's cache and inflated their lengths — the
         interleaved-submit corruption regression in tests/test_serving.py.)
 
-        **Bucketed prefill**: the prompt is right-padded to the next
+        **Bucketed prefill**: each prefill call is right-padded to the next
         power-of-two length with position −1 columns (dropped from the
         cache write, zero rows in attention), so at most log2(max_len)
         prefill programs ever compile instead of one per distinct prompt
         length; the logits seeding the first token are read from the last
         *real* column, leaving the token stream bit-identical to an
         unpadded prefill (the regression test in tests/test_serving.py).
+
+        **Chunked prefill** (scheduler.prefill_chunk = N): submit runs only
+        the first N prompt tokens; step() advances one chunk per iteration,
+        interleaved with decode, bounding decode-latency jitter under long
+        prompts. The default (None) prefills the whole prompt here — the
+        PR 4/5 behavior.
 
         The prefill's last-position logits seed the slot's pending greedy
         token, so the first decode step is conditioned on the real prompt,
@@ -435,7 +568,13 @@ class ServingEngine:
 
         Paged admission is page-bound: a free slot AND enough free pages to
         cover the prompt (decode growth allocates on demand; the padding
-        columns cost nothing — pages back real tokens only).
+        columns cost nothing — pages back real tokens only). With the
+        prefix cache, cached full prompt pages are *borrowed* instead of
+        allocated (the first divergent page is forked copy-on-write), so
+        only the uncached tail needs free pages — and prefills. ``priority``
+        (0 = most urgent) and ``deadline`` feed the scheduler: an incoming
+        request may preempt a strictly less urgent live one
+        (scheduler.should_preempt) instead of returning None.
         """
         if self.cfg.family in ("ssm", "hybrid") and self.sc.batch_slots > 1:
             raise NotImplementedError(
@@ -448,77 +587,211 @@ class ServingEngine:
             raise ValueError(
                 f"prompt length {len(prompt)} out of range for "
                 f"max_len={self.sc.max_len} (need 1 <= len < max_len)")
-        free = np.where(~self.slot_live)[0]
-        if free.size == 0:
-            return None
-        slot = int(free[0])
         prompt = [int(t) for t in prompt]
+        self.tick += 1
+        arrival = self.tick
         if not self.paged:
-            self._admit(slot, prompt, key=key)
+            free = np.where(~self.slot_live)[0]
+            if free.size == 0:
+                return None
+            slot = int(free[0])
+            self.slot_priority[slot] = priority
+            self.slot_deadline[slot] = deadline
+            self.slot_arrival[slot] = arrival
+            self._begin_admit(slot, prompt, key=key)
             return slot
-        if not self.pool.can_alloc(self.pool.pages_needed(len(prompt))):
-            return None              # page-bound admission, not slot-bound
-        assert self.slot_tables[slot] is None, \
-            f"free slot {slot} still owns a block table (page leak)"
-        rid = self._next_rid
-        self._next_rid += 1
-        tbl = BlockTable(self.pool)
-        tbl.ensure(len(prompt))
-        self.slot_tables[slot] = tbl
-        tbl.as_row(self.n_blocks, out=self.block_tables[slot])
-        self.slot_rid[slot] = rid
-        self.slot_prompt[slot] = prompt
-        self._admit(slot, prompt, key=key)
-        self.request_out[rid] = self.slot_out[slot]
-        return rid
+        incoming = RequestView(rid=self._next_rid, priority=priority,
+                               deadline=deadline, arrival=arrival,
+                               n_tokens=len(prompt))
+        while True:
+            free = np.where(~self.slot_live)[0]
+            if free.size and self._paged_admit(
+                    int(free[0]), self._next_rid, prompt, prompt,
+                    key=key, priority=priority, deadline=deadline,
+                    arrival=arrival):
+                rid = self._next_rid
+                self._next_rid += 1
+                return rid
+            # no slot, or not enough pages even after cold-cache eviction:
+            # ask the policy whether this request may displace a live one
+            live = [s for s in range(self.sc.batch_slots)
+                    if self.slot_live[s]]
+            if not live:
+                return None
+            vrid = self.scheduler.victim([self._view(s) for s in live])
+            vslot = next(s for s in live if self._handle(s) == vrid)
+            if not self.scheduler.should_preempt(incoming,
+                                                 self._view(vslot)):
+                return None          # page/slot-bound, not worth churning
+            self._preempt(vslot)
 
-    def _admit(self, slot: int, tokens: List[int], *,
-               restore: Optional[_Waiting] = None,
-               key: Optional[jax.Array] = None):
-        """Masked, bucketed prefill of ``tokens`` into ``slot``. With
-        ``restore`` (resume after preemption) the pending token and output
-        stream are carried over instead of re-sampled, so the resumed
-        stream is identical to an uninterrupted one under any sampling."""
+    def _begin_admit(self, slot: int, tokens: List[int], *,
+                     start: int = 0,
+                     restore: Optional[_Waiting] = None,
+                     key: Optional[jax.Array] = None):
+        """Stage ``tokens`` into ``slot`` and run the first prefill chunk
+        (the whole remainder unless the scheduler chunks). ``start`` > 0
+        marks a prefix-cache hit: positions [0, start) are already resident
+        in shared/forked pages, so the slot's valid length is preloaded and
+        prefill begins mid-prompt. With ``restore`` (resume after
+        preemption) the pending token and output stream are carried over
+        instead of re-sampled, so the resumed stream is identical to an
+        uninterrupted one under any sampling."""
         if self.slot_pos[slot]:        # recycled slot: restart from pos 0
             self._reset_slot_caches(slot)
             self.slot_pos[slot] = 0
-        B, S = self.sc.batch_slots, len(tokens)
+        if start:
+            self._set_slot_len(slot, start)
+            self.slot_pos[slot] = start
+        self.slot_live[slot] = True
+        self.slot_drain[slot] = False
+        self.slot_prefilling[slot] = True
+        self.slot_pf_tokens[slot] = tokens
+        self.slot_pf_restore[slot] = restore
+        self.slot_pf_key[slot] = key
+        self.slot_out[slot] = restore.out if restore is not None else []
+        self._prefill_slot_chunk(slot)
+
+    def _prefill_slot_chunk(self, slot: int) -> bool:
+        """Run one masked, bucketed prefill chunk for ``slot``; returns
+        True when the prompt is fully prefilled and the slot became
+        decodable (pending token seeded, prompt pages indexed in the
+        prefix cache)."""
+        tokens = self.slot_pf_tokens[slot]
+        L = len(tokens)
+        p0 = int(self.slot_pos[slot])
+        budget = self.scheduler.prefill_chunk or (L - p0)
+        n = min(budget, L - p0)
+        B = self.sc.batch_slots
         # Bucket padding relies on the position −1 masking contract, which
         # SSD/conv recurrent state is outside of (it carries no positions):
         # pad columns would enter the recurrence as real tokens. Those
         # families (admitted only with batch_slots == 1) prefill unpadded.
         if self.cfg.family in ("ssm", "hybrid"):
-            Sb = S
+            Sb = n
         else:
-            Sb = min(_next_pow2(S), max(self.sc.max_len, S))
+            Sb = min(_next_pow2(n), max(self.sc.max_len, n))
         tok = np.zeros((B, Sb), np.int32)
-        tok[slot, :S] = tokens
+        tok[slot, :n] = tokens[p0:p0 + n]
         pos = np.full((B, Sb), -1, np.int32)
-        pos[slot, :S] = np.arange(S)
+        pos[slot, :n] = np.arange(p0, p0 + n)
         batch = {"tokens": self._dev(tok), "positions": self._dev(pos),
-                 "last_cols": self._dev(jnp.full((B,), S - 1, jnp.int32))}
+                 "last_cols": self._dev(jnp.full((B,), n - 1, jnp.int32))}
         if self.paged:
             batch["block_tables"] = self._bt_device()
         logits, self.caches = self.prefill(self.params, batch, self.caches)
-        self.slot_pos[slot] = S
-        self.slot_live[slot] = True
-        self.slot_drain[slot] = S >= self.sc.max_len
-        if restore is None:
-            self.slot_out[slot] = []
-            self.slot_next[slot] = int(self._sample(logits[slot][None],
-                                                    key)[0])
-        else:
-            self.slot_out[slot] = restore.out
+        self.prefill_tokens += n
+        self.slot_pos[slot] = p0 + n
+        if p0 + n < L:
+            return False               # more chunks on later steps
+        self.slot_prefilling[slot] = False
+        self.slot_drain[slot] = L >= self.sc.max_len
+        restore = self.slot_pf_restore[slot]
+        if restore is not None and restore.next_tok is not None:
             self.slot_next[slot] = restore.next_tok
+        else:
+            # fresh admission — or a resume preempted before its first
+            # sample existed: the stored key re-seeds it identically
+            self.slot_next[slot] = int(self._sample(
+                logits[slot][None], self.slot_pf_key[slot])[0])
+        if self.prefix is not None:
+            # index the ORIGINAL prompt's full pages (never the generated
+            # tail: decode writes positions >= len(prompt), so these pages
+            # are write-free from here on — safe to share)
+            prompt = self.slot_prompt[slot]
+            if len(prompt) >= self.pool.page_size:
+                n_full = len(prompt) // self.pool.page_size
+                self.prefix.insert(prompt,
+                                   self.slot_tables[slot].pages[:n_full])
+        self.slot_pf_tokens[slot] = None
+        self.slot_pf_restore[slot] = None
+        self.slot_pf_key[slot] = None
+        return True
 
     # -- paged scheduling ---------------------------------------------------
+    def _ensure_free(self, n: int) -> bool:
+        """True once the pool can cover ``n`` fresh pages, evicting cold
+        prefix-cache entries on demand to get there."""
+        if self.pool.can_alloc(n):
+            return True
+        if self.prefix is not None:
+            self.prefix.evict(n - self.pool.free_pages)
+        return self.pool.can_alloc(n)
+
+    def _paged_admit(self, slot: int, rid: int, prompt: List[int],
+                     tokens: List[int], *,
+                     restore: Optional[_Waiting] = None,
+                     key: Optional[jax.Array] = None,
+                     priority: int = 0, deadline: Optional[float] = None,
+                     arrival: int = 0) -> bool:
+        """Admit ``tokens`` into ``slot``: prefix lookup, page budget
+        (evicting cold cache entries when short), COW fork of the first
+        divergent page, block-table assembly, then masked prefill of the
+        uncached tail. Returns False — with no side effects beyond the
+        lookup's released holds — when pages cannot cover it."""
+        hit = self.prefix.lookup(tokens) if self.prefix is not None else None
+        n_covered = len(hit.pages) if hit is not None else 0
+        need = self.pool.pages_needed(len(tokens)) - n_covered
+        if not self._ensure_free(need):
+            if hit is not None:
+                hit.release(self.pool)
+            return False
+        assert self.slot_tables[slot] is None, \
+            f"free slot {slot} still owns a block table (page leak)"
+        start, pages = 0, []
+        if hit is not None:
+            self.prefix.record(hit, len(tokens))
+            pages = hit.pages          # lookup's holds become the table's
+            hit.pages = []
+            start = hit.n_tokens
+            if hit.cow_page is not None:
+                # fork: private copy of the partially-matching page; its
+                # leading cow_tokens rows are valid, the rest is overwritten
+                # by the prefill (or masked by the valid length)
+                dst = self.pool.fork(hit.cow_page)
+                self._copy_page(hit.cow_page, dst)
+                self.pool.release([hit.cow_page])   # drop lookup's hold
+                hit.cow_page = None
+                pages.append(dst)
+                start += hit.cow_tokens
+                self.prefix.cow_forks += 1
+        tbl = BlockTable(self.pool, pages=pages)
+        tbl.ensure(len(tokens))
+        self.slot_tables[slot] = tbl
+        tbl.as_row(self.n_blocks, out=self.block_tables[slot])
+        self.slot_rid[slot] = rid
+        self.slot_prompt[slot] = prompt
+        self.slot_priority[slot] = priority
+        self.slot_deadline[slot] = deadline
+        self.slot_arrival[slot] = arrival
+        self._begin_admit(slot, tokens, start=start, restore=restore,
+                          key=key)
+        if restore is None:
+            self.request_out[rid] = self.slot_out[slot]
+        return True
+
     def _preempt(self, slot: int):
         """Spill ``slot``'s request to the wait queue: free its pages, park
         prompt/stream/pending-token host-side. Its cache pages are
-        recycled; resume re-prefills prompt+out (docs/serving.md)."""
+        recycled; resume re-prefills prompt+out — through the prefix cache
+        when enabled, so a preempted request's shared prefix re-admits
+        without re-prefilling (docs/serving.md)."""
+        if self.slot_prefilling[slot]:
+            # mid-chunked-prefill: no pending token was sampled yet; park
+            # the sampling key (and any carried token from an earlier
+            # preemption) so resume reproduces the stream exactly
+            restore = self.slot_pf_restore[slot]
+            next_tok = None if restore is None else restore.next_tok
+            key = self.slot_pf_key[slot]
+        else:
+            next_tok = int(self.slot_next[slot])
+            key = None
         self.wait.append(_Waiting(
             rid=int(self.slot_rid[slot]), prompt=self.slot_prompt[slot],
-            out=self.slot_out[slot], next_tok=int(self.slot_next[slot])))
+            out=self.slot_out[slot], next_tok=next_tok, key=key,
+            priority=int(self.slot_priority[slot]),
+            deadline=self.slot_deadline[slot],
+            arrival=int(self.slot_arrival[slot])))
         self.n_preemptions += 1
         self.slot_tables[slot].free()
         self.slot_tables[slot] = None
@@ -526,39 +799,47 @@ class ServingEngine:
         self.slot_rid[slot] = -1
         self.slot_live[slot] = False
         self.slot_drain[slot] = False
-        # slot_pos stays nonzero → the next _admit resets this slot's lens
+        self.slot_prefilling[slot] = False
+        self.slot_pf_tokens[slot] = None
+        self.slot_pf_restore[slot] = None
+        self.slot_pf_key[slot] = None
+        # slot_pos stays nonzero → the next admission resets this slot's lens
 
     def _try_resume(self):
-        """Re-admit waiting requests (strict FIFO — oldest first, no
-        queue-jumping) while a slot and pages for their full re-prefill are
-        available."""
-        while self.wait:
+        """Re-admit waiting requests into free slots in the scheduler's
+        order (default: FIFO within priority). A waiter that doesn't fit
+        is *skipped*, not a barrier — the old strict-FIFO resume bailed on
+        the first non-fitting request, head-of-line-blocking a small later
+        one a free slot and pages existed for."""
+        if not self.wait:
+            return
+        views = [RequestView(rid=w.rid, priority=w.priority,
+                             deadline=w.deadline, arrival=w.arrival,
+                             n_tokens=len(w.prompt) + len(w.out))
+                 for w in self.wait]
+        admitted = []
+        for i in self.scheduler.resume_order(views):
             free = np.where(~self.slot_live)[0]
             if free.size == 0:
-                return
-            w = self.wait[0]
-            tokens = w.prompt + w.out
-            if not self.pool.can_alloc(self.pool.pages_needed(len(tokens))):
-                return
-            self.wait.pop(0)
-            slot = int(free[0])
-            assert self.slot_tables[slot] is None, \
-                f"free slot {slot} still owns a block table (page leak)"
-            tbl = BlockTable(self.pool)
-            tbl.ensure(len(tokens))
-            self.slot_tables[slot] = tbl
-            tbl.as_row(self.n_blocks, out=self.block_tables[slot])
-            self.slot_rid[slot] = w.rid
-            self.slot_prompt[slot] = w.prompt
-            self._admit(slot, tokens, restore=w)
+                break
+            w = self.wait[i]
+            if self._paged_admit(int(free[0]), w.rid, w.prompt,
+                                 w.prompt + w.out, restore=w, key=w.key,
+                                 priority=w.priority, deadline=w.deadline,
+                                 arrival=w.arrival):
+                admitted.append(i)
+        for i in sorted(admitted, reverse=True):
+            self.wait.pop(i)
 
     def _grow_pages_for_decode(self):
         """Back every decodable slot's next position with a page, oldest
-        request first; when the pool is dry, preempt the youngest live
-        request (possibly the requester itself) until it isn't."""
+        request first; when the pool is dry — after cold prefix entries
+        are evicted — preempt the scheduler's victim (possibly the
+        requester itself) until it isn't."""
         order = sorted(
             (s for s in range(self.sc.batch_slots)
-             if self.slot_live[s] and not self.slot_drain[s]),
+             if self.slot_live[s] and not self.slot_drain[s]
+             and not self.slot_prefilling[s]),
             key=lambda s: self.slot_rid[s])
         for s in order:
             if not self.slot_live[s]:
@@ -566,11 +847,13 @@ class ServingEngine:
             pos = int(self.slot_pos[s])
             if pos < self.slot_tables[s].capacity():
                 continue
-            while not self.pool.can_alloc(1):
-                victim = max(
-                    (t for t in range(self.sc.batch_slots)
-                     if self.slot_live[t]),
-                    key=lambda t: self.slot_rid[t])
+            while not self._ensure_free(1):
+                vrid = self.scheduler.victim(
+                    [self._view(t) for t in range(self.sc.batch_slots)
+                     if self.slot_live[t]])
+                victim = next(t for t in range(self.sc.batch_slots)
+                              if self.slot_live[t]
+                              and self._handle(t) == vrid)
                 self._preempt(victim)
                 if victim == s:
                     break              # self-preempted: wait queue, no grow
@@ -583,6 +866,10 @@ class ServingEngine:
     def _retire(self, slot: int):
         self.slot_live[slot] = False
         self.slot_drain[slot] = False
+        self.slot_prefilling[slot] = False
+        self.slot_pf_tokens[slot] = None
+        self.slot_pf_restore[slot] = None
+        self.slot_pf_key[slot] = None
         if self.paged:
             self.slot_tables[slot].free()
             self.slot_tables[slot] = None
@@ -595,8 +882,7 @@ class ServingEngine:
         its pages (or its wait-queue entry). Returns True if found."""
         if not self.paged:
             if 0 <= handle < self.sc.batch_slots and self.slot_live[handle]:
-                self.slot_live[handle] = False
-                self.slot_drain[handle] = False
+                self._retire(handle)
                 return True
             return False
         for s in range(self.sc.batch_slots):
@@ -612,10 +898,10 @@ class ServingEngine:
         return False
 
     def step(self, key: Optional[jax.Array] = None) -> Dict[int, int]:
-        """One decode iteration across all live slots; non-live and
-        draining slots are masked out (position -1 → no cache write, no
-        length bump). Returns {handle: token} — handles are request ids in
-        paged mode, slot ids else.
+        """One decode iteration across all live slots; non-live, draining
+        and still-prefilling slots are masked out (position -1 → no cache
+        write, no length bump). Returns {handle: token} — handles are
+        request ids in paged mode, slot ids else.
 
         Reports each slot's *pending* token (decoded last round, or by the
         submit prefill) and pipelines the decode of the one after — the
@@ -623,23 +909,41 @@ class ServingEngine:
         token for token. Sampling honors ServeConfig.temperature when a
         PRNG ``key`` is supplied (the same _sample rule as generate()).
 
-        Paged mode first resumes waiting requests (oldest-first) into free
-        slots, then backs each decodable slot's next position with a page —
-        preempting the youngest request when the pool is dry — and only
-        then decodes. Retirement returns pages to the pool.
+        Paged mode first restores the prefix-cache watermark (evicting
+        cold entries until ServeConfig.prefix_watermark pages are free),
+        then resumes waiting requests in the scheduler's order, advances
+        at most one chunked prefill (most urgent first), backs each
+        decodable slot's next position with a page — evicting cold cache
+        entries, then preempting the scheduler's victim when the pool is
+        dry — and only then decodes. Retirement returns pages to the pool.
 
         A slot whose cache fills (slot_pos reaches max_len — every cache
         index written) enters a one-round *drain*: its final pending token
         — freshly decoded last round — is still reported before the slot
         retires, so no token of the stream is ever dropped at retirement.
         """
+        self.tick += 1
         if self.paged:
+            if self.prefix is not None and self.sc.prefix_watermark > 0:
+                short = self.sc.prefix_watermark - self.pool.free_pages
+                if short > 0:
+                    self.prefix.evict(short)
             self._try_resume()
         if not self.slot_live.any():
             return {}
+        # one chunked-prefill advance per step: bounded prefill work keeps
+        # decode latency jitter bounded (the whole point of chunking);
+        # unchunked admissions never appear here — submit() finishes them
+        pf = [s for s in range(self.sc.batch_slots)
+              if self.slot_prefilling[s]]
+        if pf:
+            s = min(pf, key=lambda t: (self.slot_priority[t],
+                                       self.slot_arrival[t], t))
+            self._prefill_slot_chunk(s)
         if self.paged:
             self._grow_pages_for_decode()
-        decodable = self.slot_live & ~self.slot_drain
+        decodable = (self.slot_live & ~self.slot_drain
+                     & ~self.slot_prefilling)
         nxt = None
         if decodable.any():
             tok = self._dev(np.asarray(self.slot_next)[:, None])
@@ -649,9 +953,10 @@ class ServingEngine:
             logits, self.caches = self.decode(self.params, tok, pos,
                                               self.caches, bt)
             nxt = np.asarray(self._sample(logits, key))
+            self.decode_tokens += int(decodable.sum())
         out = {}
         for s in range(self.sc.batch_slots):
-            if not self.slot_live[s]:
+            if not self.slot_live[s] or self.slot_prefilling[s]:
                 continue
             t = int(self.slot_next[s])
             self.slot_out[s].append(t)
@@ -664,3 +969,26 @@ class ServingEngine:
             if self.slot_pos[s] >= self.sc.max_len:
                 self.slot_drain[s] = True   # flush slot_next next round
         return out
+
+    # -- observability -------------------------------------------------------
+    def stats(self) -> Dict[str, object]:
+        """One flat observability snapshot: scheduling churn, prefill vs
+        decode token split, pool pressure, and (when enabled) the prefix
+        cache's hit/miss/eviction counters. Printed by launch/serve.py and
+        recorded per-row in benchmarks/serving_sweep.py JSONL."""
+        d: Dict[str, object] = {
+            "tick": self.tick,
+            "live_requests": int(self.slot_live.sum()),
+            "waiting_requests": len(self.wait) if self.paged else 0,
+            "n_preemptions": self.n_preemptions,
+            "prefill_tokens": self.prefill_tokens,
+            "decode_tokens": self.decode_tokens,
+        }
+        if self.paged:
+            d["pool_pages"] = self.pool.n_pages
+            d["pool_free_pages"] = self.pool.free_pages
+            d["pool_pages_in_use"] = self.pool.pages_in_use
+            d["pool_high_water"] = self.pool.high_water
+            if self.prefix is not None:
+                d.update(self.prefix.stats())
+        return d

@@ -15,18 +15,26 @@ Everything here is host-side bookkeeping (plain ints/numpy) — the device
 only ever sees the resulting ``(B, n_blocks)`` int32 block-table array and
 the page-pool tensors it indexes.
 
+With the prefix cache (``serving/prefix_cache.py``) pages ARE shared:
+a cached prompt-prefix page carries one reference per holding request
+plus one for the cache itself, and a request that must write into a
+shared page first **forks** it — :meth:`PagePool.fork` allocates the
+copy-target, the engine copies the device contents, and the writer's
+block table swaps in the private page (copy-on-write).
+
 Invariants (property-tested in tests/test_kv_pool.py):
 
   * a page is either on the free list or referenced, never both;
     ``free_pages + pages_in_use == n_pages`` at all times;
-  * no page is referenced by two live block tables (ref counts exist for
-    future prefix sharing, but allocation always hands out count-1 pages);
+  * a page referenced by more than one holder is never *written* — the
+    engine only writes pages it allocated or forked (refcount-1 at write
+    time); releasing one holder of a shared span leaves it resident;
   * release is idempotent-safe only through ownership: double-free raises.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Sequence
+from typing import Callable, List, Optional, Sequence
 
 import numpy as np
 
@@ -48,8 +56,11 @@ class PagePool:
 
     ``alloc`` pops from the free list and sets the page's ref count to 1;
     ``release`` decrements and returns count-0 pages to the free list.
-    ``retain`` exists for sharing (e.g. prefix caching) but the serving
-    engine never shares today, so the no-two-live-tables invariant holds.
+    ``retain`` adds a reference for sharing — the prefix cache
+    (serving/prefix_cache.py) retains every page it indexes and each
+    hitting request retains the pages it borrows. ``fork`` is the
+    allocation half of copy-on-write: it hands out the private target a
+    shared page's contents are copied into before the first write.
     """
 
     def __init__(self, n_pages: int, page_size: int):
@@ -62,6 +73,13 @@ class PagePool:
         # popped from the tail → ascending page ids first (determinism)
         self._free: List[int] = list(range(n_pages - 1, -1, -1))
         self.refcount = np.zeros(n_pages, np.int64)
+        # peak pages simultaneously referenced, for capacity reporting
+        # (ServingEngine.stats(), benchmarks/serving_sweep.py)
+        self.high_water = 0
+        # called with the page id whenever a page returns to the free list
+        # (eviction hooks: per-shard TP pools assert lockstep, tests audit
+        # reclamation without polling)
+        self._free_hooks: List[Callable[[int], None]] = []
 
     # -- accounting ---------------------------------------------------------
     @property
@@ -71,6 +89,11 @@ class PagePool:
     @property
     def pages_in_use(self) -> int:
         return int((self.refcount > 0).sum())
+
+    def add_free_hook(self, hook: Callable[[int], None]) -> None:
+        """Register ``hook(page_id)`` to run whenever a page's last
+        reference drops and it rejoins the free list."""
+        self._free_hooks.append(hook)
 
     def pages_needed(self, n_tokens: int) -> int:
         return pages_needed(n_tokens, self.page_size)
@@ -89,7 +112,18 @@ class PagePool:
                 f"need {n} pages, {self.free_pages} free of {self.n_pages}")
         pages = [self._free.pop() for _ in range(n)]
         self.refcount[pages] += 1
+        self.high_water = max(self.high_water, self.pages_in_use)
         return pages
+
+    def fork(self, src: int) -> int:
+        """Copy-on-write allocation: hand out a private page to receive a
+        copy of shared page ``src``. The pool only does the accounting —
+        the engine owns the device-side content copy (the (page_size, Hkv,
+        dh) slab per layer) and the block-table swap. Raises PoolExhausted
+        when no page is free, ValueError when ``src`` isn't allocated."""
+        if self.refcount[src] <= 0:
+            raise ValueError(f"fork of unallocated page {src}")
+        return self.alloc(1)[0]
 
     def retain(self, pages: Sequence[int]) -> None:
         """Add a reference to already-allocated pages (sharing)."""
@@ -106,6 +140,8 @@ class PagePool:
             self.refcount[p] -= 1
             if self.refcount[p] == 0:
                 self._free.append(int(p))
+                for hook in self._free_hooks:
+                    hook(int(p))
 
     def check(self) -> None:
         """Assert the free-list/ref-count invariants (tests, debugging)."""

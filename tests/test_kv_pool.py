@@ -159,3 +159,162 @@ def test_alloc_is_duplicate_free(n, page_size):
     assert (pool.refcount[pages] == 1).all()
     pool.release(pages)
     assert pool.free_pages == 64
+
+
+# ---------------------------------------------------------------------------
+# Sharing properties: the prefix cache's contract with the pool
+# (docs/serving.md#prefix-cache)
+# ---------------------------------------------------------------------------
+
+def test_fork_accounting():
+    pool = PagePool(3, 8)
+    (src,) = pool.alloc(1)
+    pool.retain([src])                    # a second holder: the page is shared
+    dst = pool.fork(src)
+    assert dst != src and pool.refcount[dst] == 1
+    pool.release([src, dst])
+    pool.release([src])
+    assert pool.free_pages == 3
+    with pytest.raises(ValueError, match="unallocated"):
+        pool.fork(src)                    # src went free
+
+
+def test_fork_exhaustion_is_side_effect_free():
+    pool = PagePool(1, 8)
+    (src,) = pool.alloc(1)
+    with pytest.raises(PoolExhausted):
+        pool.fork(src)
+    assert pool.refcount[src] == 1 and pool.free_pages == 0
+    pool.check()
+
+
+def test_free_hook_fires_on_last_release_only():
+    pool = PagePool(2, 8)
+    freed = []
+    pool.add_free_hook(freed.append)
+    a = pool.alloc(1)
+    pool.retain(a)
+    pool.release(a)
+    assert freed == []                    # one holder remains
+    pool.release(a)
+    assert freed == a
+    assert pool.high_water == 1
+
+
+@settings(max_examples=150, deadline=None)
+@given(st.integers(1, 8), st.integers(2, 6),
+       st.lists(st.integers(0, 5), min_size=1, max_size=6))
+def test_shared_span_survives_releasing_one_holder(n_span, n_holders, order):
+    """A span referenced by k holders stays resident until the LAST holder
+    releases it — releasing any proper subset frees nothing."""
+    pool = PagePool(16, 8)
+    span = pool.alloc(n_span)
+    for _ in range(n_holders - 1):
+        pool.retain(span)                 # holders 2..k
+    for i in range(n_holders - 1):        # all but the last
+        pool.release(span)
+        assert (pool.refcount[span] == n_holders - 1 - i).all()
+        assert pool.pages_in_use == n_span, \
+            "shared span freed while holders remain"
+        pool.check()
+    pool.release(span)
+    assert pool.free_pages == 16
+    pool.check()
+
+
+@settings(max_examples=150, deadline=None)
+@given(st.integers(1, 16), st.integers(2, 8), st.integers(1, 4))
+def test_cow_fork_never_aliases_a_shared_page(n_pages, page_size, n_shared):
+    """The page fork() hands out to absorb a write is never one of the
+    shared pages (it is freshly allocated, refcount 1) — so writing it
+    cannot corrupt any other holder's view."""
+    pool = PagePool(max(n_pages, n_shared + 1), page_size)
+    shared = pool.alloc(n_shared)
+    pool.retain(shared)                   # cache + one request hold them
+    dst = pool.fork(shared[-1])
+    assert dst not in shared
+    assert pool.refcount[dst] == 1       # private: safe to write
+    # writer swaps the fork in and drops its hold on the source
+    pool.release([shared[-1]])
+    assert pool.refcount[shared[-1]] == 1  # the other holder keeps it alive
+    pool.release([dst])
+    pool.release(shared[:-1])
+    pool.release(shared)
+    assert pool.free_pages == pool.n_pages
+    pool.check()
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.integers(2, 6),
+       st.lists(st.tuples(st.integers(0, 3), st.integers(0, 7),
+                          st.integers(1, 24)),
+                min_size=1, max_size=40))
+def test_prefix_cache_invariants_under_interleavings(page_size, ops):
+    """Engine-shaped interleavings of admit (lookup + COW fork + insert),
+    preempt/retire (release a holder's pages), demand eviction, and
+    watermark eviction keep every pool AND cache invariant: accounting
+    balances, cached nodes stay allocated, shared pages outlive any single
+    holder, and a fork target is never an alias of a still-shared page."""
+    from repro.serving.prefix_cache import PrefixCache
+
+    pool = PagePool(12, page_size)
+    cache = PrefixCache(pool)
+    # two prompt families sharing a long head — token content derived from
+    # the op stream, no RNG (hypothesis owns the entropy)
+    base = list(range(1, 4 * page_size + 2))
+    holders = {}                          # rid -> list of pages it holds
+    next_rid = 0
+    for kind, sel, size in ops:
+        if kind == 0:                     # admit: lookup → fork → fill → insert
+            prompt = base[:max(2, min(size, len(base)))]
+            prompt = prompt[:-1] + [100 + sel]   # divergent final token
+            hit = cache.lookup(prompt)
+            owned = list(hit.pages)
+            ok = True
+            if hit.cow_page is not None:
+                if pool.can_alloc(1):
+                    dst = pool.fork(hit.cow_page)
+                    assert dst not in owned and dst != hit.cow_page
+                    assert pool.refcount[dst] == 1   # write target private
+                    pool.release([hit.cow_page])     # copy done
+                    hit.cow_page = None
+                    owned.append(dst)
+                else:
+                    ok = False
+            if ok:
+                need = pages_needed(len(prompt), page_size) - len(owned)
+                if pool.can_alloc(need):
+                    owned += pool.alloc(need)
+                else:
+                    ok = False
+            if ok:
+                cache.insert(prompt, owned[:len(prompt) // page_size])
+                holders[next_rid] = owned
+                next_rid += 1
+            else:
+                # admission fell through: give back the fork target (if
+                # taken) and every hold the lookup put on our behalf
+                for p in owned[len(hit.pages):]:
+                    pool.release([p])
+                hit.release(pool)
+        elif kind == 1 and holders:       # preempt / retire one holder
+            rid = sorted(holders)[sel % len(holders)]
+            pool.release(holders.pop(rid))
+        elif kind == 2:                   # demand eviction
+            cache.evict(size)
+        else:                             # watermark sweep
+            cache.evict(cache.reclaimable())
+        # -- invariants ----------------------------------------------------
+        pool.check()
+        cache.check()
+        held = [p for pages in holders.values() for p in pages]
+        assert (pool.refcount[held] >= 1).all(), \
+            "a live holder's page was freed under it"
+        assert pool.free_pages + pool.pages_in_use == pool.n_pages
+        assert cache.reclaimable() <= cache.cached_pages
+    # drain: release every holder, then the cache — accounting must zero
+    for pages in holders.values():
+        pool.release(pages)
+    cache.clear()
+    pool.check()
+    assert pool.free_pages == pool.n_pages

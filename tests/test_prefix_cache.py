@@ -1,0 +1,193 @@
+"""PrefixCache unit tests: page-granular radix lookup/insert, the
+len-1 reuse cap, COW candidates, LRU eviction, holder-safe reclamation,
+and the committed-admission stats contract (docs/serving.md#prefix-cache).
+
+Pure host-side bookkeeping — no model, no device. The engine-level
+golden gates (prefix-on streams identical to prefix-off) live in
+tests/test_serving.py; pool/cache interleaving properties in
+tests/test_kv_pool.py.
+"""
+import pytest
+
+from repro.serving.kv_pool import PagePool
+from repro.serving.prefix_cache import PrefixCache
+
+PS = 4  # page size used throughout
+
+
+def make(n_pages=16):
+    pool = PagePool(n_pages, PS)
+    return pool, PrefixCache(pool)
+
+
+def prefill(pool, cache, tokens):
+    """Simulate a finished prefill + insert: allocate the prompt's full
+    pages and index them; returns the request's pages (holder refs)."""
+    pages = pool.alloc(pool.pages_needed(len(tokens)))
+    cache.insert(tokens, pages[:len(tokens) // PS])
+    return pages
+
+
+def test_page_size_must_match_pool():
+    pool = PagePool(4, 8)
+    with pytest.raises(ValueError, match="page_size"):
+        PrefixCache(pool, page_size=4)
+
+
+def test_empty_cache_misses_cleanly():
+    pool, cache = make()
+    hit = cache.lookup([1, 2, 3, 4, 5])
+    assert hit.pages == [] and hit.cow_page is None
+    assert hit.tokens_reusable == 0
+    assert pool.pages_in_use == 0            # lookup retained nothing
+    cache.record(hit, 5)
+    assert cache.misses == 1 and cache.hits == 0
+    assert cache.hit_rate() == 0.0
+
+
+def test_insert_then_lookup_shares_full_pages():
+    pool, cache = make()
+    prompt = list(range(10))                 # 2 full pages + 2-token tail
+    mine = prefill(pool, cache, prompt)
+    assert cache.cached_pages == 2
+    assert (pool.refcount[mine[:2]] == 2).all()   # holder + cache
+
+    hit = cache.lookup(prompt[:8] + [40, 41])     # same head, new tail
+    assert hit.pages == mine[:2] and hit.n_tokens == 8
+    assert (pool.refcount[mine[:2]] == 3).all()   # + the new requester
+    cache.record(hit, 10)
+    assert cache.hits == 1 and cache.hit_tokens == 8
+    hit.release(pool)
+    assert (pool.refcount[mine[:2]] == 2).all()
+
+
+def test_last_token_never_served_from_cache():
+    """The final prompt token must prefill (its logits seed sampling):
+    a prompt that is an exact multiple of the page size reuses its last
+    page only as a COW candidate, never as a full page."""
+    pool, cache = make()
+    prompt = list(range(8))                  # exactly 2 pages
+    mine = prefill(pool, cache, prompt)
+    hit = cache.lookup(prompt)               # identical prompt resubmitted
+    assert hit.pages == mine[:1]             # page 2 would cover token 8
+    assert hit.cow_page == mine[1] and hit.cow_tokens == 3
+    assert hit.tokens_reusable == 7          # == len(prompt) - 1
+    hit.release(pool)
+
+
+def test_cow_candidate_on_partial_page_match():
+    pool, cache = make()
+    prompt = list(range(12))                 # 3 full pages
+    mine = prefill(pool, cache, prompt)
+    # diverges 2 tokens into the third page
+    other = prompt[:10] + [90, 91, 92]
+    hit = cache.lookup(other)
+    assert hit.pages == mine[:2] and hit.n_tokens == 8
+    assert hit.cow_page == mine[2] and hit.cow_tokens == 2
+    assert hit.tokens_reusable == 10
+    assert pool.refcount[mine[2]] == 3       # holder + cache + cow retain
+    hit.release(pool)
+    assert pool.refcount[mine[2]] == 2
+
+
+def test_divergent_tokens_do_not_share():
+    pool, cache = make()
+    a = prefill(pool, cache, [1, 2, 3, 4, 5, 6, 7, 8, 9])
+    hit = cache.lookup([9, 9, 9, 9, 5, 6, 7, 8, 1])   # first page differs
+    assert hit.pages == [] and hit.cow_page is None
+    assert a  # silence unused
+
+
+def test_reinsert_keeps_incumbent_pages():
+    pool, cache = make()
+    prompt = list(range(9))
+    first = prefill(pool, cache, prompt)
+    second = pool.alloc(3)
+    added = cache.insert(prompt, second[:2])
+    assert added == 0 and cache.cached_pages == 2
+    hit = cache.lookup(prompt + [50])
+    assert hit.pages == first[:2]            # the incumbent won
+    hit.release(pool)
+    pool.release(second)
+
+
+def test_lru_eviction_prefers_cold_chains():
+    pool, cache = make()
+    cold = prefill(pool, cache, [1, 2, 3, 4, 5])
+    hot = prefill(pool, cache, [6, 7, 8, 9, 10])
+    pool.release(cold)                       # both requests retire
+    pool.release(hot)
+    cache.lookup([6, 7, 8, 9, 99]).release(pool)   # touch the hot chain
+    assert cache.evict(1) == 1               # the cold page goes first
+    assert cache.evictions == 1
+    hit = cache.lookup([6, 7, 8, 9, 99])
+    assert hit.pages == hot[:1]              # hot chain survived
+    hit.release(pool)
+    miss = cache.lookup([1, 2, 3, 4, 99])
+    assert miss.pages == [] and miss.cow_page is None
+
+
+def test_evicting_held_pages_frees_nothing_but_uncaches():
+    pool, cache = make(n_pages=4)
+    mine = prefill(pool, cache, list(range(9)))   # request still holds
+    assert cache.reclaimable() == 0
+    freed = cache.evict(4)
+    assert freed == 0                        # holder keeps the pages alive
+    assert cache.cached_pages == 0           # but they left the index
+    assert (pool.refcount[mine[:2]] == 1).all()
+    pool.release(mine)
+    pool.check()
+    assert pool.free_pages == 4
+
+
+def test_reclaimable_counts_only_cache_held_pages():
+    pool, cache = make()
+    mine = prefill(pool, cache, list(range(9)))
+    assert cache.reclaimable() == 0          # request holds both
+    pool.release(mine)                       # retire
+    assert cache.reclaimable() == 2
+    assert cache.evict(2) == 2
+    pool.check()
+    assert pool.free_pages == pool.n_pages
+
+
+def test_clear_releases_everything():
+    pool, cache = make()
+    for base in (0, 100, 200):
+        pages = prefill(pool, cache, [base + i for i in range(9)])
+        pool.release(pages)
+    assert cache.cached_pages == 6
+    assert cache.clear() == 6
+    assert cache.cached_pages == 0
+    pool.check()
+    assert pool.free_pages == pool.n_pages
+
+
+def test_record_only_counts_committed_admissions():
+    """Admission retry loops call lookup repeatedly; only the final
+    committed admit calls record() — the hit rate reflects tokens actually
+    served, not lookup traffic (the stat-inflation regression)."""
+    pool, cache = make()
+    mine = prefill(pool, cache, list(range(9)))
+    for _ in range(5):                       # retries: lookup, no record
+        cache.lookup(list(range(9)) + [77]).release(pool)
+    assert cache.hits == 0 and cache.lookup_tokens == 0
+    hit = cache.lookup(list(range(9)) + [77])
+    cache.record(hit, 10)
+    hit.release(pool)
+    assert cache.hits == 1 and cache.hit_tokens == 8
+    assert cache.lookup_tokens == 10
+    assert cache.hit_rate() == 0.8
+    stats = cache.stats()
+    assert stats["prefix_hits"] == 1 and stats["prefix_hit_rate"] == 0.8
+    pool.release(mine)
+
+
+def test_check_validates_structure():
+    pool, cache = make()
+    mine = prefill(pool, cache, list(range(13)))
+    cache.check()
+    pool.release(mine)
+    cache.check()
+    cache.clear()
+    cache.check()

@@ -578,6 +578,150 @@ def test_ssm_submit_stream_unaffected_by_bucketing():
     assert [slot_eng.step()[s] for _ in range(4)] == want
 
 
+# ---------------------------------------------------------------------------
+# Prefix cache: COW prompt-page sharing (docs/serving.md#prefix-cache)
+# ---------------------------------------------------------------------------
+
+def test_prefix_cache_streams_identical(paged_setup):
+    """The golden gate: prefix cache ON must not change one token of any
+    stream — shared-prefix prompts served with prefix_cache=True produce
+    exactly the no-cache engine's streams, while actually sharing pages
+    (hits recorded, fewer pages resident)."""
+    cfg, params = paged_setup
+    shared = list(range(1, 17))              # two full 8-token pages
+    prompts = [shared + [40 + i, 50 + i] for i in range(3)]
+
+    def streams(sc):
+        eng = ServingEngine(cfg, params, sc)
+        hs = [eng.submit(p) for p in prompts]
+        assert all(h is not None for h in hs)
+        for _ in range(5):
+            eng.step()
+        return [list(eng.request_out[h]) for h in hs], eng
+
+    base = dict(batch_slots=4, max_len=32, attention=PAGED8, cache_pages=16)
+    want, e0 = streams(ServeConfig(**base))
+    got, e1 = streams(ServeConfig(**base, prefix_cache=True))
+    assert got == want
+    st = e1.stats()
+    assert st["prefix_hits"] == 2            # requests 2 and 3 hit
+    assert st["prefix_hit_tokens"] >= 2 * 16
+    # sharing is real: the cached engine backs the same live set in fewer
+    # pages than the private-copies engine
+    assert e1.pool.pages_in_use < e0.pool.pages_in_use
+    e1.pool.check()
+    e1.prefix.check()
+
+
+def test_prefix_cache_cow_divergence_isolated(paged_setup):
+    """A request diverging INSIDE a cached page (COW fork) must match its
+    solo stream, and its writes must not leak into the original holder's
+    pages — both streams equal their uninterrupted solo runs."""
+    cfg, params = paged_setup
+    sc = ServeConfig(batch_slots=2, max_len=32, attention=PAGED8,
+                     cache_pages=16, prefix_cache=True)
+    eng = ServingEngine(cfg, params, sc)
+    a = [1, 2, 3, 4, 5, 6, 7, 8, 9, 10]      # one full page + tail
+    b = a[:6] + [60, 61, 62, 63]             # diverges inside page 0
+    ha = eng.submit(a)
+    hb = eng.submit(b)                       # forks the partial match
+    assert eng.prefix.cow_forks >= 1
+    for _ in range(5):
+        eng.step()
+    for prompt, h in ((a, ha), (b, hb)):
+        solo = ServingEngine(cfg, params, ServeConfig(
+            batch_slots=2, max_len=32, attention=PAGED8, cache_pages=16))
+        r = solo.submit(prompt)
+        want = [solo.step()[r] for _ in range(5)]
+        assert eng.request_out[h] == want, prompt
+    eng.pool.check()
+
+
+def test_prefix_preempt_resume_streams_identical(paged_setup):
+    """Preempt/resume under prefix sharing + watermark eviction: every
+    stream still equals its uninterrupted solo run, and the pool drains
+    to exactly the cache-held pages (all reclaimable)."""
+    cfg, params = paged_setup
+    # 9-token prompts share page 0 → 3 pages admit both; decode growth to
+    # max_len 24 needs 3 pages each (5 total shared) > the 4-page pool
+    sc = ServeConfig(batch_slots=2, max_len=24, attention=PAGED8,
+                     cache_pages=4, prefix_cache=True, prefix_watermark=1)
+    eng = ServingEngine(cfg, params, sc)
+    prompts = [[1, 2, 3, 4, 5, 6, 7, 8, 9], [1, 2, 3, 4, 5, 6, 7, 8, 11]]
+    rids = [eng.submit(p) for p in prompts]
+    assert all(r is not None for r in rids)
+    for _ in range(80):
+        eng.step()
+        if not eng.slot_live.any() and not eng.wait:
+            break
+    assert eng.n_preemptions > 0             # pressure actually hit
+    assert not eng.slot_live.any() and not eng.wait
+    eng.pool.check()
+    eng.prefix.check()
+    # every non-free page is a cold cache entry, reclaimable on demand
+    assert eng.pool.pages_in_use == eng.prefix.reclaimable()
+    for rid, p in zip(rids, prompts):
+        solo = ServingEngine(cfg, params, ServeConfig(
+            batch_slots=2, max_len=24, attention=PAGED8, cache_pages=4))
+        r = solo.submit(p)
+        want = []
+        while solo.slot_live.any():
+            st = solo.step()
+            if r in st:
+                want.append(st[r])
+        assert eng.request_out[rid] == want, (rid, p)
+
+
+def test_prefix_watermark_restores_free_pages(paged_setup):
+    """ServeConfig.prefix_watermark: step() evicts cold cached entries
+    until that many pages are free — retired prefixes don't squat the
+    pool below the floor."""
+    cfg, params = paged_setup
+    sc = ServeConfig(batch_slots=2, max_len=32, attention=PAGED8,
+                     cache_pages=8, prefix_cache=True, prefix_watermark=7)
+    eng = ServingEngine(cfg, params, sc)
+    r = eng.submit(list(range(1, 18)))       # 17 tokens → 3 pages, 2 cached
+    eng.cancel(r)                            # retire: cache refs remain
+    assert eng.pool.free_pages == 6          # 2 cold cached pages squat
+    eng.step()                               # watermark sweep runs
+    assert eng.pool.free_pages >= 7
+    assert eng.stats()["prefix_evictions"] >= 1
+
+
+def test_prefix_cache_requires_paged_backend(paged_setup):
+    cfg, params = paged_setup
+    with pytest.raises(ValueError, match="prefix_cache"):
+        ServingEngine(cfg, params, ServeConfig(
+            batch_slots=2, max_len=32, prefix_cache=True))
+
+
+def test_engine_stats_dict(paged_setup):
+    """ServingEngine.stats() (satellite): one observability dict on both
+    backends — counters the launcher prints and the sweep records."""
+    cfg, params = paged_setup
+    core = {"tick", "live_requests", "waiting_requests", "n_preemptions",
+            "prefill_tokens", "decode_tokens"}
+    eng = ServingEngine(cfg, params, ServeConfig(batch_slots=2, max_len=32))
+    eng.submit([1, 2, 3])
+    eng.step()
+    st = eng.stats()
+    assert core <= set(st)
+    assert st["prefill_tokens"] == 3 and st["decode_tokens"] == 1
+    assert st["live_requests"] == 1
+
+    eng = ServingEngine(cfg, params, ServeConfig(
+        batch_slots=2, max_len=32, attention=PAGED8, cache_pages=8,
+        prefix_cache=True))
+    eng.submit(list(range(1, 10)))
+    eng.step()
+    st = eng.stats()
+    assert core <= set(st)
+    assert {"pool_pages", "pool_free_pages", "pool_pages_in_use",
+            "pool_high_water", "prefix_hits", "prefix_hit_rate"} <= set(st)
+    assert st["pool_pages"] == 8
+    assert st["pool_high_water"] >= st["pool_pages_in_use"] > 0
+
+
 def test_paged_generate_does_not_accumulate_cache_lens(paged_setup):
     """Review regression: generate() never advances slot_pos, so the paged
     reset must zero cache lens unconditionally — otherwise kv_valid_len

@@ -43,12 +43,15 @@ def run_tp_subprocess(script, args, timeout=900):
 
 def test_tp2_paged_stream_equivalence():
     """TP=2 vs single-device: batched greedy generate, greedy submit/step
-    streams, seeded-temperature sampling, and preempt/resume — all token-
-    identical (one subprocess; the runner prints a PASS marker per
-    scenario so a partial run cannot pass silently)."""
+    streams, seeded-temperature sampling, preempt/resume, and prefix-cache
+    COW sharing in lockstep (same streams AND same per-step page
+    accounting on the sharded pool) — all token-identical (one subprocess;
+    the runner prints a PASS marker per scenario so a partial run cannot
+    pass silently)."""
     out = run_tp_subprocess(RUNNER, [])
     for marker in ("TP-EQUIV PASS greedy", "TP-EQUIV PASS temperature",
-                   "TP-EQUIV PASS preempt-resume", "TP-EQUIV PASS all"):
+                   "TP-EQUIV PASS preempt-resume", "TP-EQUIV PASS prefix",
+                   "TP-EQUIV PASS all"):
         assert marker in out, f"missing {marker!r} in runner output:\n{out}"
 
 

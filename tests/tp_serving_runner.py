@@ -131,8 +131,37 @@ def scenario_preempt(cfg, params, axes, mesh):
     print("TP-EQUIV PASS preempt-resume")
 
 
+def scenario_prefix(cfg, params, axes, mesh):
+    # Prefix cache + COW under TP: one host-side cache drives every
+    # shard's identical page slice, so the TP engine must stay in
+    # LOCKSTEP with the single-device engine — same streams, same page
+    # accounting, same hit/fork counters. The second prompt shares a full
+    # page; the third diverges inside it (exercises the sharded-page
+    # device copy in _copy_page: page axis is unsharded, head axis is).
+    base, tp = engines(cfg, params, axes, mesh, batch_slots=3,
+                       prefix_cache=True, cache_pages=12)
+    shared = list(range(1, 12))              # 11 tokens: 1 full page + tail
+    prompts = [shared + [40, 41], shared + [50, 51],
+               shared[:5] + [60, 61, 62, 63]]
+    for eng in (base, tp):
+        for p in prompts:
+            assert eng.submit(p) is not None
+    assert tp.prefix.hits == base.prefix.hits > 0
+    assert tp.prefix.cow_forks == base.prefix.cow_forks >= 1
+    for _ in range(6):
+        sb, st = base.step(), tp.step()
+        assert sb == st, (sb, st)
+        # lockstep page accounting: the TP pool mirrors the base pool
+        assert tp.pool.free_pages == base.pool.free_pages
+        assert tp.pool.pages_in_use == base.pool.pages_in_use
+    assert tp.prefix.stats() == base.prefix.stats()
+    tp.pool.check()
+    tp.prefix.check()
+    print("TP-EQUIV PASS prefix")
+
+
 SCENARIOS = {"greedy": scenario_greedy, "temperature": scenario_temperature,
-             "preempt": scenario_preempt}
+             "preempt": scenario_preempt, "prefix": scenario_prefix}
 
 
 def main(argv=None):
