@@ -29,6 +29,9 @@ SUITES = {
     # prefix-cache acceptance: shared-prefix + bursty Poisson mixes with
     # and without COW prompt-page sharing at a fixed pool size
     "serving-prefix": serving_sweep.run_prefix,
+    # quantized-KV capacity: bf16 vs int8 KV pages at an equal pool-byte
+    # budget (gate: >=1.8x peak resident requests under int8)
+    "serving-kv": serving_sweep.run_kv,
 }
 
 

@@ -23,8 +23,15 @@ a speed one — so tokens/s only becomes a fair fight on TPU (backend
 repro/distributed/tp.py). Needs ``len(jax.devices())`` divisible by N —
 force host devices via XLA_FLAGS=--xla_force_host_platform_device_count.
 
+``--kv-suite`` runs the quantized-KV capacity cells instead (``sweep_kv``):
+the same one-page-per-request mix served from a bf16 pool and from an int8
+pool (``ServeConfig(kv_dtype="int8")``, docs/quant.md#kv-pages) holding at
+most the same pool *bytes* — the gate is ≥1.8× peak resident requests
+under int8.
+
 Rows go to the shared CSV (benchmarks/common.py) and, matching
-benchmarks/hillclimb.py, to ``serving_sweep.jsonl``.
+benchmarks/hillclimb.py, to ``serving_sweep.jsonl`` (``serving_kv.jsonl``
+for the kv suite).
 
   python -m benchmarks.serving_sweep
   python -m benchmarks.serving_sweep --max-len 128 --n-requests 24 \
@@ -86,9 +93,13 @@ def poisson_arrival_steps(rng, n: int, rate: float) -> List[int]:
     return np.floor(np.cumsum(gaps)).astype(int).tolist()
 
 
-def kv_bytes_per_token(cfg) -> int:
-    """K + V bytes per cached token per layer stack (bf16 cache)."""
-    return 2 * cfg.n_kv_heads * cfg.head_dim * 2 * cfg.n_layers
+def kv_bytes_per_token(cfg, cache_dtype: str = "bfloat16") -> int:
+    """K + V payload bytes per cached token per layer stack at
+    ``cache_dtype``. Paged cells don't use this estimate: serve_workload
+    reads the engine's own exact per-page bytes (engine.kv_page_bytes()),
+    which also folds in the int8 pools' fp32 scale side-tensors."""
+    elem = jax.numpy.dtype(cache_dtype).itemsize
+    return 2 * cfg.n_kv_heads * cfg.head_dim * elem * cfg.n_layers
 
 
 def serve_workload(cfg, params, sc: ServeConfig, prompts: List[List[int]],
@@ -103,7 +114,10 @@ def serve_workload(cfg, params, sc: ServeConfig, prompts: List[List[int]],
     first reported token — queueing delay included, which is exactly what
     admission capacity (prefix sharing) and chunked prefill move."""
     eng = ServingEngine(cfg, params, sc, axes=axes)
-    per_tok = kv_bytes_per_token(cfg)
+    # paged: exact bytes from the engine (int8 payload + scale tensors
+    # included); contiguous: the analytic cache_dtype estimate
+    per_tok = (eng.kv_page_bytes() // eng.pool.page_size if eng.paged
+               else kv_bytes_per_token(cfg, sc.cache_dtype))
     n = len(prompts)
     arrivals = (list(arrival_steps) if arrival_steps is not None
                 else [0] * n)
@@ -115,6 +129,7 @@ def serve_workload(cfg, params, sc: ServeConfig, prompts: List[List[int]],
     total_done = 0
     n_finished = 0
     peak_live = 0
+    peak_resident = 0
     peak_tokens = 0
     n_steps = 0
     t0 = time.perf_counter()
@@ -145,6 +160,9 @@ def serve_workload(cfg, params, sc: ServeConfig, prompts: List[List[int]],
         # paged: waiting requests are parked host-side, resident = pool use
         n_live = len(live_handles)
         peak_live = max(peak_live, n_live)
+        # resident = requests actually occupying device slots right now
+        # (admitted and not preempted) — the capacity a pool byte buys
+        peak_resident = max(peak_resident, int(eng.slot_live.sum()))
         if eng.paged:
             resident = eng.pool.pages_in_use * eng.pool.page_size
         else:
@@ -176,6 +194,7 @@ def serve_workload(cfg, params, sc: ServeConfig, prompts: List[List[int]],
         "padded_peak_bytes": peak_live * sc.max_len * per_tok,
         "oversubscription": (peak_live * sc.max_len) / budget_tokens,
         "peak_live_requests": peak_live,
+        "peak_resident_requests": peak_resident,
         "preemptions": eng.n_preemptions if eng.paged else 0,
         "steps": n_steps,
         # the engine's own observability dict: prefill/decode token split,
@@ -341,6 +360,82 @@ def sweep_prefix(arch: str = "smollm-135m", n_layers: int = 2,
     return rows
 
 
+def sweep_kv(arch: str = "smollm-135m", n_layers: int = 2,
+             max_len: int = 16, batch_slots: int = 16,
+             n_requests: int = 24, prompt_len: int = 3, gen_len: int = 4,
+             page_size: int = 8, fp_pages: int = 8, seed: int = 0,
+             jsonl_path: Optional[str] = None):
+    """Quantized-KV capacity sweep (docs/quant.md#kv-pages): the same
+    request mix served by the paged engine with a model-dtype (bf16) pool
+    and with an int8 pool holding AT MOST the same pool **bytes** — int8
+    pages = floor(byte budget / int8 page bytes), where an int8 page costs
+    half the payload plus two (P, Hkv) fp32 scale rows per layer.
+
+    Requests are sized to live inside exactly one page (prompt_len +
+    gen_len + 1 <= page_size, counting the pending-token write), so peak
+    resident concurrency == pages the pool can hold — the cleanest
+    possible read of "live requests per pool byte". Gate (asserted in
+    tests/test_serving.py, printed here): >=1.8x peak resident requests
+    under int8 (2x payload minus the scale side-tensors' overhead)."""
+    assert prompt_len + gen_len + 1 <= page_size, "requests must fit 1 page"
+    cfg = get_smoke_config(arch, n_layers=n_layers, vocab=64)
+    params, axes = T.init_model(jax.random.PRNGKey(seed), cfg)
+    rng = np.random.default_rng(seed)
+    prompts = [rng.integers(0, 64, prompt_len).tolist()
+               for _ in range(n_requests)]
+
+    # equal pool-BYTE budget across the two cells
+    fp_page = page_size * kv_bytes_per_token(cfg, "bfloat16")
+    int8_page = (page_size * kv_bytes_per_token(cfg, "int8")
+                 + 2 * cfg.n_kv_heads * 4 * cfg.n_layers)   # fp32 scales
+    budget = fp_pages * fp_page
+    int8_pages = budget // int8_page
+    paged_attn = AttentionPolicy(backend="paged_interpret",
+                                 page_size=page_size, block_q=16)
+    base = dict(batch_slots=batch_slots, max_len=max_len,
+                attention=paged_attn, cache_dtype="bfloat16")
+    cells = {
+        "kv_bf16": ServeConfig(**base, cache_pages=fp_pages),
+        "kv_int8": ServeConfig(**base, cache_pages=int8_pages,
+                               kv_dtype="int8"),
+    }
+    rows = []
+    for name, sc in cells.items():
+        stats = serve_workload(cfg, params, sc, prompts, gen_len, axes=axes)
+        assert stats["kv_pool_bytes"] <= budget, (
+            name, stats["kv_pool_bytes"], budget)
+        row = {"engine": name, "arch": cfg.name, "max_len": max_len,
+               "batch_slots": batch_slots, "page_size": page_size,
+               "cache_pages": sc.cache_pages, "n_requests": n_requests,
+               "prompt_len": prompt_len, "gen_len": gen_len,
+               "budget_pool_bytes": budget, **stats}
+        rows.append(row)
+        emit("serving-kv", f"{name}_peak_resident",
+             stats["peak_resident_requests"], "requests",
+             pool_bytes=stats["kv_pool_bytes"], pages=sc.cache_pages,
+             tok_per_s=round(stats["tok_per_s"], 2),
+             preemptions=stats["preemptions"])
+    out = jsonl_path or os.path.join(os.path.dirname(__file__),
+                                     "serving_kv.jsonl")
+    with open(out, "w") as f:
+        for r in rows:
+            f.write(json.dumps(r) + "\n")
+    print(f"[serving-kv] wrote {len(rows)} rows to {out}")
+    by = {r["engine"]: r for r in rows}
+    ratio = (by["kv_int8"]["peak_resident_requests"]
+             / max(by["kv_bf16"]["peak_resident_requests"], 1))
+    print(f"[serving-kv] capacity at a {budget}-byte pool budget: "
+          f"{ratio:.2f}x peak resident requests "
+          f"({by['kv_bf16']['peak_resident_requests']} -> "
+          f"{by['kv_int8']['peak_resident_requests']}; "
+          f"{by['kv_bf16']['cache_pages']} bf16 pages @ "
+          f"{by['kv_bf16']['kv_page_bytes']} B vs "
+          f"{by['kv_int8']['cache_pages']} int8 pages @ "
+          f"{by['kv_int8']['kv_page_bytes']} B) "
+          f"[gate: >=1.8x]")
+    return rows
+
+
 def run():
     """Default suite entry (benchmarks.run): CPU-safe sizes."""
     sweep()
@@ -350,6 +445,12 @@ def run_prefix():
     """Prefix-cache suite entry (benchmarks.run serving-prefix): the
     shared-prefix and bursty mixes at CPU-safe sizes."""
     sweep_prefix()
+
+
+def run_kv():
+    """Quantized-KV suite entry (benchmarks.run serving-kv): the
+    equal-pool-byte bf16-vs-int8 capacity cells at CPU-safe sizes."""
+    sweep_kv()
 
 
 def run_tp():
@@ -388,6 +489,10 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                          "paged-vs-contiguous skewed-length sweep")
     ap.add_argument("--prefix-len", type=int, default=None,
                     help="prefix suite: shared tokens heading every prompt")
+    ap.add_argument("--kv-suite", action="store_true",
+                    help="run the quantized-KV capacity sweep instead: "
+                         "bf16 vs int8 KV pages at an equal pool-byte "
+                         "budget (docs/quant.md#kv-pages)")
     args = ap.parse_args(argv)
     shape = {k: v for k, v in (("max_len", args.max_len),
                                ("batch_slots", args.batch_slots),
@@ -399,6 +504,10 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
             shape["prefix_len"] = args.prefix_len
         sweep_prefix(arch=args.arch, n_layers=args.n_layers,
                      page_size=args.page_size, seed=args.seed, **shape)
+        return 0
+    if args.kv_suite:
+        sweep_kv(arch=args.arch, n_layers=args.n_layers,
+                 page_size=args.page_size, seed=args.seed, **shape)
         return 0
     sweep(arch=args.arch, n_layers=args.n_layers, page_size=args.page_size,
           cache_pages_frac=args.cache_pages_frac, seed=args.seed,

@@ -304,22 +304,27 @@ def linear(x: jax.Array, w: Union[jax.Array, PackedWeight,
 # Attention: policy-selectable fused/unfused execution (docs/attention.md)
 # ---------------------------------------------------------------------------
 
-def _reject_paged(backend: str, block_tables):
+def _reject_paged(backend: str, block_tables, kv_scales=None):
     if block_tables is not None:
         raise ValueError(
             f"attention backend {backend!r} cannot consume a paged KV cache "
             f"(got a block table); use AttentionPolicy(backend='paged') — "
             f"docs/serving.md")
+    if kv_scales is not None:
+        raise ValueError(
+            f"attention backend {backend!r} cannot consume a quantized KV "
+            f"pool (got kv_scales); use AttentionPolicy(backend='paged', "
+            f"kv_dtype='int8') — docs/quant.md#kv-pages")
 
 
 def _unfused_attention(q, k, v, *, q_positions, kv_valid_len, causal, scale,
-                       soft_cap, policy, block_tables=None):
+                       soft_cap, policy, block_tables=None, kv_scales=None):
     """The einsum + host-softmax baseline (the paper's §4.4 split: GEMMs on
     the accelerator, softmax on the host). GQA via reshape; score/value
     contractions follow the ambient *GEMM* policy — einsum when the resolved
     GEMM backend consumes batched contractions natively, the batched
     MatrixFlow kernel otherwise."""
-    _reject_paged("unfused", block_tables)
+    _reject_paged("unfused", block_tables, kv_scales)
     B, Sq, H, Dk = q.shape
     T, Hkv = k.shape[1], k.shape[2]
     rep = H // Hkv
@@ -359,9 +364,9 @@ def _unfused_attention(q, k, v, *, q_positions, kv_valid_len, causal, scale,
 
 def _make_fused_attention(interpret: bool):
     def fused_attention(q, k, v, *, q_positions, kv_valid_len, causal, scale,
-                        soft_cap, policy, block_tables=None):
+                        soft_cap, policy, block_tables=None, kv_scales=None):
         _reject_paged("fused_interpret" if interpret else "fused",
-                      block_tables)
+                      block_tables, kv_scales)
         from repro.kernels import ops  # lazy: pallas import
         return ops.mha(q, k, v, causal=causal, scale=scale,
                        soft_cap=soft_cap, q_positions=q_positions,
@@ -373,17 +378,21 @@ def _make_fused_attention(interpret: bool):
 
 def _make_paged_attention(interpret: bool):
     def paged(q, k, v, *, q_positions, kv_valid_len, causal, scale,
-              soft_cap, policy, block_tables=None):
+              soft_cap, policy, block_tables=None, kv_scales=None):
         """Block-table paged flash attention (kernels/paged_attention.py).
 
         With a block table, k/v are the page pools (P, page_size, Hkv, D)
-        and the table drives the kernel's BlockSpec index maps. Without one
-        — cache-less training/scoring, or an MLA latent cache that stays
+        and the table drives the kernel's BlockSpec index maps — int8 pools
+        additionally carry ``kv_scales`` (per-page-per-head fp32), which the
+        kernel dequantizes in its K/V-block fetch. Without a block table —
+        cache-less training/scoring, or an MLA latent cache that stays
         contiguous — the operands are dense and the paged policy degrades
         to the fused flash kernel (identical contract), so a single policy
         covers a model end to end.
         """
         if block_tables is None:
+            _reject_paged("paged_interpret" if interpret else "paged",
+                          None, kv_scales)
             from repro.kernels import ops  # lazy: pallas import
             return ops.mha(q, k, v, causal=causal, scale=scale,
                            soft_cap=soft_cap, q_positions=q_positions,
@@ -393,8 +402,8 @@ def _make_paged_attention(interpret: bool):
         from repro.kernels import paged_attention as PA  # lazy: pallas
         return PA.paged_attention(
             q, k, v, block_tables, q_positions, kv_valid_len,
-            causal=causal, scale=scale, soft_cap=soft_cap,
-            block_q=policy.block_q, interpret=interpret)
+            kv_scales=kv_scales, causal=causal, scale=scale,
+            soft_cap=soft_cap, block_q=policy.block_q, interpret=interpret)
     return paged
 
 
@@ -414,6 +423,7 @@ def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
               scale: Optional[float] = None,
               soft_cap: Optional[float] = None,
               block_tables: Optional[jax.Array] = None,
+              kv_scales=None,
               policy: Optional[AttentionPolicy] = None) -> jax.Array:
     """Scaled-dot-product attention through the active AttentionPolicy.
 
@@ -430,16 +440,23 @@ def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     where k/v are page pools (P, page_size, Hkv, D) and the table maps each
     row's logical key blocks to physical pages (docs/serving.md). Dense
     backends reject a non-None block table.
+    kv_scales: ((P, Hkv), (P, Hkv)) fp32 — only with ``paged`` backends
+    whose pools are int8 (AttentionPolicy.kv_dtype='int8'); the per-page-
+    per-head K and V scales the kernel dequantizes with
+    (docs/quant.md#kv-pages). Dense backends reject non-None kv_scales.
     """
     pol = policy if policy is not None else current_attention_policy()
     spec = P.get_attention_backend_spec(pol.resolved_backend())
     if scale is None:
         scale = q.shape[-1] ** -0.5
-    # block_tables is forwarded only when present: backends registered
-    # before the paged subsystem (without the kwarg) keep working for every
-    # dense call, and a paged call against one fails loudly on the kwarg.
+    # block_tables/kv_scales are forwarded only when present: backends
+    # registered before the paged subsystem (without the kwargs) keep
+    # working for every dense call, and a paged call against one fails
+    # loudly on the kwarg.
     kwargs = ({"block_tables": block_tables} if block_tables is not None
               else {})
+    if kv_scales is not None:
+        kwargs["kv_scales"] = kv_scales
     return spec.fn(q, k, v, q_positions=q_positions,
                    kv_valid_len=kv_valid_len, causal=causal, scale=scale,
                    soft_cap=soft_cap, policy=pol, **kwargs)

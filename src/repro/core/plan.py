@@ -58,6 +58,9 @@ DEFAULT_VMEM_BUDGET = 96 * 1024 * 1024
 # Weight dtypes the quantized GEMM route understands (core/quant.py).
 _WEIGHT_DTYPES = (None, "int8")
 
+# KV-pool dtypes the paged attention route understands (docs/quant.md).
+_KV_DTYPES = (None, "int8")
+
 
 # ---------------------------------------------------------------------------
 # Policy
@@ -203,6 +206,11 @@ class AttentionPolicy:
                kernel's block_k is its natural TPU value). Consumed by
                ``models/transformer.py::init_paged_caches`` and the serving
                engine's PagePool (serving/kv_pool.py, docs/serving.md).
+    kv_dtype   None → the KV pool stores the model's cache dtype; "int8" →
+               paged backends store int8 pages with per-page-per-head fp32
+               scales, dequantized inside the kernel's K/V-block fetch
+               (docs/quant.md#kv-pages). Paged backends only — the dense
+               backends reject it (core/api.py).
 
     All backends share one contract (kernels/ref.py::mha_ref): key j of
     batch row b is visible to query i iff ``j < kv_valid_len[b]`` and, when
@@ -216,10 +224,15 @@ class AttentionPolicy:
     block_q: int = 128
     block_k: int = 128
     page_size: int = 16
+    kv_dtype: Optional[str] = None
 
     def __post_init__(self):
         if self.page_size < 1:
             raise ValueError(f"page_size must be >= 1, got {self.page_size}")
+        if self.kv_dtype not in _KV_DTYPES:
+            raise ValueError(
+                f"unsupported kv_dtype {self.kv_dtype!r}; "
+                f"expected one of {_KV_DTYPES}")
 
     def resolved_backend(self) -> str:
         return resolve_attention_backend(self.backend)

@@ -32,9 +32,11 @@ import jax.numpy as jnp
 from repro.core import layout as L
 
 __all__ = [
-    "QMAX", "QuantizedPackedWeight",
+    "QMAX", "KV_HEADROOM", "QuantizedPackedWeight",
     "quantize_weight", "dequantize_weight",
     "quantize_activations", "dequantize_gemm",
+    "quantize_kv_pages", "dequantize_kv_pages",
+    "kv_write_scale", "quantize_kv_rows",
 ]
 
 QMAX = 127  # symmetric int8 grid [-127, 127]; -128 excluded
@@ -89,6 +91,72 @@ def dequantize_gemm(c_int: jax.Array, scale_a: jax.Array, scale_b: jax.Array,
     c = c * scale_a.astype(jnp.float32)[..., :, None]
     c = c * scale_b.astype(jnp.float32)[..., None, :]
     return c.astype(out_dtype)
+
+
+# ---------------------------------------------------------------------------
+# KV-cache pages (docs/quant.md#kv-pages)
+#
+# The paged KV pool (serving/kv_pool.py + kernels/paged_attention.py) can
+# store K/V int8, symmetric **per page per KV head**: one fp32 scale per
+# (page, kv_head) pair, shape (P, Hkv), dequantized inside the paged
+# kernel's K/V-block fetch so the HBM stream stays int8. Two quantization
+# regimes share the int8 grid:
+#
+#   * quantize_kv_pages — one-shot, true per-page amax. Used by tests and
+#     offline conversion where the whole pool content is known at once.
+#   * kv_write_scale + quantize_kv_rows — the *serving write path*. A page's
+#     scale is FROZEN when its first row (position % page_size == 0) is
+#     written, from that row's per-head amax times KV_HEADROOM; every later
+#     row of the page quantizes against the frozen scale (clipped to the
+#     grid). Freezing makes the int8 payload a pure function of the page's
+#     logical content — bitwise identical whether written token-at-a-time
+#     (decode) or in bulk (resume re-prefill, prefix-cache miss) — which is
+#     what keeps token streams exactly reproducible across preempt/resume
+#     and prefix-COW (tests/test_serving.py).
+# ---------------------------------------------------------------------------
+
+# Frozen-scale headroom: later rows of a page routinely exceed the first
+# row's amax; 2x headroom absorbs the typical spread (activations in a
+# layer share magnitude statistics) at the cost of one effective bit.
+KV_HEADROOM = 2.0
+
+
+def quantize_kv_pages(pages: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """(…, P, ps, Hkv, dh) fp pages → (int8 pages, fp32 scales (…, P, Hkv)).
+
+    Symmetric per page per KV head, true amax (no headroom) — the one-shot
+    regime for tests/offline conversion, NOT the serving write path.
+    """
+    amax = jnp.max(jnp.abs(pages.astype(jnp.float32)), axis=(-3, -1))
+    scales = _safe_scale(amax)
+    q = jnp.round(pages.astype(jnp.float32)
+                  / scales[..., :, None, :, None])
+    q = jnp.clip(q, -QMAX, QMAX).astype(jnp.int8)
+    return q, scales
+
+
+def dequantize_kv_pages(q: jax.Array, scales: jax.Array,
+                        dtype=jnp.float32) -> jax.Array:
+    """Inverse of :func:`quantize_kv_pages` up to the rounding error."""
+    return (q.astype(jnp.float32)
+            * scales[..., :, None, :, None].astype(jnp.float32)).astype(dtype)
+
+
+def kv_write_scale(rows: jax.Array) -> jax.Array:
+    """(…, Hkv, dh) first-row K/V → the page's frozen fp32 scale (…, Hkv).
+
+    amax * KV_HEADROOM / QMAX per head (all-zero heads → scale 1). Called
+    exactly once per page lifetime, on the row with position % ps == 0.
+    """
+    amax = jnp.max(jnp.abs(rows.astype(jnp.float32)), axis=-1)
+    return _safe_scale(amax * KV_HEADROOM)
+
+
+def quantize_kv_rows(rows: jax.Array, scales: jax.Array) -> jax.Array:
+    """(…, Hkv, dh) fp rows / (…, Hkv) scales → int8 rows on the grid."""
+    q = jnp.round(rows.astype(jnp.float32)
+                  / scales[..., :, None].astype(jnp.float32))
+    return jnp.clip(q, -QMAX, QMAX).astype(jnp.int8)
 
 
 @jax.tree_util.register_pytree_node_class

@@ -268,6 +268,7 @@ def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
               causal: bool = True, scale: Optional[float] = None,
               soft_cap: Optional[float] = None,
               block_tables: Optional[jax.Array] = None,
+              kv_scales=None,
               policy=None) -> jax.Array:
     """api.attention with heads sharded over the model axis.
 
@@ -276,8 +277,10 @@ def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     (P, page_size, Hkv, D). Either way the head dim is axis 2, so one
     spec covers both: q (and the output) shard on H, k/v shard on Hkv
     when :func:`head_sharding` allows, and positions/lengths/tables
-    replicate. The backend — including the Pallas paged kernel — runs
-    unmodified on its shard-local slice.
+    replicate. An int8 pool's ``kv_scales`` (two (P, Hkv) fp32 arrays)
+    shard on their KV-head dim — the LAST — alongside the pools. The
+    backend — including the Pallas paged kernel — runs unmodified on its
+    shard-local slice.
     """
     ctx = current_tp()
     shard_q, shard_kv = head_sharding(
@@ -286,7 +289,8 @@ def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
         return api.attention(q, k, v, q_positions=q_positions,
                              kv_valid_len=kv_valid_len, causal=causal,
                              scale=scale, soft_cap=soft_cap,
-                             block_tables=block_tables, policy=policy)
+                             block_tables=block_tables,
+                             kv_scales=kv_scales, policy=policy)
     pol = policy if policy is not None else api.current_attention_policy()
     if scale is None:
         scale = q.shape[-1] ** -0.5
@@ -295,15 +299,23 @@ def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     kv_spec = hs if shard_kv else P(None, None, None, None)
     operands = [q, k, v, q_positions, kv_valid_len]
     in_specs = [hs, kv_spec, kv_spec, P(None, None), P(None)]
-    if block_tables is not None:
+    has_bt = block_tables is not None
+    if has_bt:
         operands.append(block_tables)
         in_specs.append(P(None, None))
+    has_scales = kv_scales is not None
+    if has_scales:
+        scale_spec = P(None, m) if shard_kv else P(None, None)
+        operands.extend(kv_scales)
+        in_specs.extend([scale_spec, scale_spec])
 
-    def body(q_, k_, v_, qp_, kl_, *bt_):
+    def body(q_, k_, v_, qp_, kl_, *rest):
+        rest = list(rest)
+        bt_ = rest.pop(0) if has_bt else None
+        sc_ = tuple(rest) if has_scales else None
         return api.attention(q_, k_, v_, q_positions=qp_, kv_valid_len=kl_,
                              causal=causal, scale=scale, soft_cap=soft_cap,
-                             block_tables=bt_[0] if bt_ else None,
-                             policy=pol)
+                             block_tables=bt_, kv_scales=sc_, policy=pol)
 
     fn = shard_map(body, mesh=ctx.mesh, in_specs=tuple(in_specs),
                    out_specs=hs, check_rep=False)
@@ -348,15 +360,17 @@ def shard_params(params, axes_tree, ctx: Optional[TPContext]):
 
 
 _KV_LEAVES = ("k", "v", "kp", "vp")
+_KV_SCALE_LEAVES = ("k_scale", "v_scale")
 
 
 def shard_caches(caches, ctx: Optional[TPContext], *, shard_kv: bool):
     """device_put decode caches: K/V leaves (dense ``k``/``v`` slabs or
     paged ``kp``/``vp`` pools, stacked or not) shard on their KV-head dim
-    (always axis -2) when ``shard_kv``; lengths, block tables, MLA latent
-    and SSM state replicate. ``shard_kv`` must be the
-    :func:`head_sharding` decision for the model's (H, Hkv), so placement
-    agrees with tp.attention's in_specs."""
+    (always axis -2) when ``shard_kv``; int8 pools' ``k_scale``/``v_scale``
+    side-tensors shard on *their* KV-head dim (the last — (…, P, Hkv));
+    lengths, block tables, MLA latent and SSM state replicate. ``shard_kv``
+    must be the :func:`head_sharding` decision for the model's (H, Hkv),
+    so placement agrees with tp.attention's in_specs."""
     if ctx is None:
         return caches
     mesh, m = ctx.mesh, ctx.model_axis
@@ -371,6 +385,11 @@ def shard_caches(caches, ctx: Optional[TPContext], *, shard_kv: bool):
                       and getattr(val, "ndim", 0) >= 4
                       and val.shape[-2] % ctx.model_size == 0):
                     spec = P(*([None] * (val.ndim - 2)), m, None)
+                    out[key] = jax.device_put(val, NamedSharding(mesh, spec))
+                elif (key in _KV_SCALE_LEAVES and shard_kv
+                      and getattr(val, "ndim", 0) >= 2
+                      and val.shape[-1] % ctx.model_size == 0):
+                    spec = P(*([None] * (val.ndim - 1)), m)
                     out[key] = jax.device_put(val, NamedSharding(mesh, spec))
                 else:
                     out[key] = jax.device_put(val,

@@ -55,10 +55,16 @@ from repro.kernels.flash_attention import (attention_block_flush,
                                            attention_block_step)
 
 
-def _kernel(bt_ref, kvlen_ref, qpos_ref, q_ref, k_ref, v_ref, o_ref,
-            m_ref, l_ref, acc_ref, *,
+def _kernel(bt_ref, kvlen_ref, qpos_ref, q_ref, k_ref, v_ref, *rest,
             scale: float, causal: bool, soft_cap: Optional[float],
-            bq: int, ps: int, nb: int):
+            bq: int, ps: int, nb: int, quantized: bool):
+    # rest is [ks_ref, vs_ref,] o_ref, m_ref, l_ref, acc_ref — the scale
+    # operands exist only on the int8 path (pallas passes refs positionally
+    # in in_specs order, then outputs, then scratch).
+    if quantized:
+        ks_ref, vs_ref, o_ref, m_ref, l_ref, acc_ref = rest
+    else:
+        o_ref, m_ref, l_ref, acc_ref = rest
     b = pl.program_id(0)
     ij = pl.program_id(3)                                 # logical key block
 
@@ -81,7 +87,15 @@ def _kernel(bt_ref, kvlen_ref, qpos_ref, q_ref, k_ref, v_ref, o_ref,
         # masking arithmetic — the numerics are flash_attention.py's
         # recurrence, shared verbatim.
         cols = ij * ps + jax.lax.broadcasted_iota(jnp.int32, (bq, ps), 1)
-        attention_block_step(q_ref[0, :, 0], k_ref[0, :, 0], v_ref[0, :, 0],
+        kblk = k_ref[0, :, 0]
+        vblk = v_ref[0, :, 0]
+        if quantized:
+            # dequantize the int8 page in-register: the HBM→VMEM stream
+            # stayed int8, the recurrence below runs fp32 as always. The
+            # scale tile is (1, 1) — this page, this kv head.
+            kblk = kblk.astype(jnp.float32) * ks_ref[0, 0]
+            vblk = vblk.astype(jnp.float32) * vs_ref[0, 0]
+        attention_block_step(q_ref[0, :, 0], kblk, vblk,
                              cols, qpos, kvlen, m_ref, l_ref, acc_ref,
                              scale=scale, causal=causal, soft_cap=soft_cap)
 
@@ -102,6 +116,7 @@ def paged_attention(
     q_positions: Optional[jax.Array] = None,   # (B, Sq) int32; <0 → masked
     kv_valid_len: Optional[jax.Array] = None,  # (B,) int32; None → all keys
     *,
+    kv_scales=None,           # int8 pools: ((P, Hkv), (P, Hkv)) fp32 scales
     causal: bool = True,
     scale: Optional[float] = None,
     soft_cap: Optional[float] = None,
@@ -114,12 +129,44 @@ def paged_attention(
     granularity and kernel block granularity coincide by construction, the
     alignment the paper's block-streaming datapath assumes. Returns
     (B, Sq, H, Dv) in model layout.
+
+    With int8 pools, ``kv_scales`` must carry the per-page-per-head fp32
+    ``(k_scales, v_scales)`` arrays of shape (P, Hkv) (docs/quant.md
+    #kv-pages); the kernel fetches each page's (1, 1) scale alongside the
+    page and dequantizes in-register, so the HBM stream stays int8.
     """
     B, Sq, H, D = q.shape
     P, ps, Hkv, Dv = v_pages.shape
     assert H % Hkv == 0, (H, Hkv)
     assert k_pages.shape[:3] == (P, ps, Hkv), (k_pages.shape, v_pages.shape)
+    quantized = k_pages.dtype == jnp.int8
+    if quantized != (v_pages.dtype == jnp.int8):
+        raise ValueError(
+            f"k_pages/v_pages dtype mismatch: {k_pages.dtype} vs "
+            f"{v_pages.dtype}")
+    if quantized:
+        if kv_scales is None:
+            raise ValueError(
+                "int8 k_pages/v_pages need kv_scales=(k_scales, v_scales) "
+                "per-page-per-head fp32 arrays of shape (P, Hkv)")
+        k_scales, v_scales = kv_scales
+        for name, s in (("k_scales", k_scales), ("v_scales", v_scales)):
+            if tuple(s.shape) != (P, Hkv):
+                raise ValueError(
+                    f"{name} has shape {tuple(s.shape)}, expected "
+                    f"(P, Hkv) = {(P, Hkv)}")
+        k_scales = k_scales.astype(jnp.float32)
+        v_scales = v_scales.astype(jnp.float32)
+    elif kv_scales is not None:
+        raise ValueError(
+            f"kv_scales given but pages are {k_pages.dtype}, not int8")
     nb = block_tables.shape[1]
+    if nb == 0:
+        # Empty block table: no key block is visible (kv_valid_len is
+        # clamped to nb * ps == 0 below), so every query row is fully
+        # masked — the contract says exactly zeros. The grid (B, H, nq, 0)
+        # would never run the flush step, so short-circuit here.
+        return jnp.zeros((B, Sq, H, Dv), q.dtype)
     rep = H // Hkv
     scale = scale if scale is not None else 1.0 / math.sqrt(D)
     bq = min(block_q, Sq)
@@ -145,22 +192,33 @@ def paged_attention(
     qpos_in = q_positions[..., None]        # (B, Sq_p, 1): (bq, 1) tiles
 
     kernel = functools.partial(_kernel, scale=scale, causal=causal,
-                               soft_cap=soft_cap, bq=bq, ps=ps, nb=nb)
+                               soft_cap=soft_cap, bq=bq, ps=ps, nb=nb,
+                               quantized=quantized)
+    in_specs = [
+        pl.BlockSpec((1, bq, 1), lambda b, h, i, j, bt, kvl: (b, i, 0)),
+        pl.BlockSpec((1, bq, 1, D),
+                     lambda b, h, i, j, bt, kvl: (b, i, h, 0)),
+        # the paged indirection: the block table entry IS the index
+        pl.BlockSpec((1, ps, 1, D),
+                     lambda b, h, i, j, bt, kvl, rep=rep:
+                     (bt[b, j], 0, h // rep, 0)),
+        pl.BlockSpec((1, ps, 1, Dv),
+                     lambda b, h, i, j, bt, kvl, rep=rep:
+                     (bt[b, j], 0, h // rep, 0)),
+    ]
+    operands = [block_tables, kv_valid_len, qpos_in, q, k_pages, v_pages]
+    if quantized:
+        # each page's scale rides the same block-table indirection as the
+        # page itself: one (1, 1) fp32 element per (page, kv head).
+        scale_spec = pl.BlockSpec((1, 1),
+                                  lambda b, h, i, j, bt, kvl, rep=rep:
+                                  (bt[b, j], h // rep))
+        in_specs += [scale_spec, scale_spec]
+        operands += [k_scales, v_scales]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,              # block_tables, kv_valid_len
         grid=(B, H, nq, nb),
-        in_specs=[
-            pl.BlockSpec((1, bq, 1), lambda b, h, i, j, bt, kvl: (b, i, 0)),
-            pl.BlockSpec((1, bq, 1, D),
-                         lambda b, h, i, j, bt, kvl: (b, i, h, 0)),
-            # the paged indirection: the block table entry IS the index
-            pl.BlockSpec((1, ps, 1, D),
-                         lambda b, h, i, j, bt, kvl, rep=rep:
-                         (bt[b, j], 0, h // rep, 0)),
-            pl.BlockSpec((1, ps, 1, Dv),
-                         lambda b, h, i, j, bt, kvl, rep=rep:
-                         (bt[b, j], 0, h // rep, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, bq, 1, Dv),
                                lambda b, h, i, j, bt, kvl: (b, i, h, 0)),
         scratch_shapes=[
@@ -180,7 +238,7 @@ def paged_attention(
         out_shape=jax.ShapeDtypeStruct((B, Sq_p, H, Dv), q.dtype),
         interpret=interpret,
         **kwargs,
-    )(block_tables, kv_valid_len, qpos_in, q, k_pages, v_pages)
+    )(*operands)
     return out[:, :Sq]
 
 

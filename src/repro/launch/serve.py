@@ -54,6 +54,11 @@ def main(argv=None):
     ap.add_argument("--page-size", type=int, default=16,
                     help="paged backends: tokens per KV page (the paged "
                          "kernel's key-block size)")
+    ap.add_argument("--kv-dtype", default=None, choices=["int8"],
+                    help="paged backends: int8 → quantized KV pages with "
+                         "per-page-per-head scales, dequantized inside the "
+                         "paged kernel — ~2x resident requests per pool "
+                         "byte (docs/quant.md#kv-pages)")
     ap.add_argument("--tp", type=int, default=1,
                     help="tensor-parallel degree: builds a (data, model) "
                          "host mesh with a model axis of this size and "
@@ -94,6 +99,9 @@ def main(argv=None):
     policy = GemmPolicy(backend=args.gemm_backend, mode=args.gemm_mode)
     attn = AttentionPolicy(backend=args.attn_backend,
                            page_size=args.page_size)
+    if args.kv_dtype and not args.attn_backend.startswith("paged"):
+        ap.error("--kv-dtype requires a paged attention backend "
+                 "(--attn-backend paged|paged_interpret)")
     mesh = make_host_mesh(model=args.tp) if args.tp > 1 else None
     scheduler = (Scheduler(prefill_chunk=args.prefill_chunk)
                  if args.prefill_chunk else None)
@@ -109,10 +117,11 @@ def main(argv=None):
         batch_slots=args.batch_slots, max_len=args.max_len,
         temperature=args.temperature, gemm=policy, attention=attn,
         pack_weights=args.pack_weights, weight_dtype=args.weight_dtype,
-        cache_pages=args.cache_pages, mesh=mesh)
+        kv_dtype=args.kv_dtype, cache_pages=args.cache_pages, mesh=mesh)
     if sc.paged():
         print(f"[serve] paged KV: page_size={args.page_size} pages="
               f"{args.cache_pages or 'contiguous-equivalent'} "
+              f"kv_dtype={args.kv_dtype or 'cache-dtype'} "
               f"prefix_cache={args.prefix_cache} "
               f"prefill_chunk={args.prefill_chunk or 'whole-prompt'}")
     elif args.prefix_cache:
@@ -142,7 +151,8 @@ def main(argv=None):
     sc2 = ServeConfig(
         batch_slots=args.batch_slots, max_len=args.max_len, gemm=policy,
         attention=attn, pack_weights=args.pack_weights,
-        weight_dtype=args.weight_dtype, cache_pages=args.cache_pages,
+        weight_dtype=args.weight_dtype, kv_dtype=args.kv_dtype,
+        cache_pages=args.cache_pages,
         mesh=mesh, prefix_cache=args.prefix_cache and sc.paged(),
         prefix_watermark=args.prefix_watermark, scheduler=scheduler)
     engine2 = ServingEngine(cfg, params, sc2, axes=axes)

@@ -72,13 +72,16 @@ def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
 # ---------------------------------------------------------------------------
 
 def _attn_core(q, k, v, *, q_positions, kv_valid_len, causal, scale,
-               soft_cap: Optional[float] = None, block_tables=None):
+               soft_cap: Optional[float] = None, block_tables=None,
+               kv_scales=None):
     """q: (B,Sq,H,Dk); k: (B,T,Hkv,Dk); v: (B,T,Hkv,Dv); GQA via Hkv | H.
 
     q_positions: (B,Sq) absolute positions of the queries (−1 → masked row).
     kv_valid_len: number of populated cache slots (T for pure prefill).
     block_tables: (B, n_blocks) — paged caches only, where k/v are page
     pools (P, page_size, Hkv, D); see docs/serving.md.
+    kv_scales: ((P, Hkv), (P, Hkv)) fp32 — int8 paged pools only, the
+    per-page-per-head dequant scales (docs/quant.md#kv-pages).
 
     Routed through repro.distributed.tp: under an active TP context the
     heads shard over the model mesh axis (shard_map'd, so the Pallas
@@ -88,7 +91,7 @@ def _attn_core(q, k, v, *, q_positions, kv_valid_len, causal, scale,
     return TP.attention(q, k, v, q_positions=q_positions,
                         kv_valid_len=kv_valid_len, causal=causal,
                         scale=scale, soft_cap=soft_cap,
-                        block_tables=block_tables)
+                        block_tables=block_tables, kv_scales=kv_scales)
 
 
 # ---------------------------------------------------------------------------
@@ -131,6 +134,20 @@ def _paged_cache_update(cache, k, v, positions, block_tables):
     are routed out of range and dropped. One scatter covers paged prefill,
     chunked prefill, and decode — the page indirection replaces both the
     dynamic-slice and the one-hot contiguous paths.
+
+    With an int8 pool (``"k_scale" in cache`` — docs/quant.md#kv-pages) the
+    write path quantizes: a page's per-head scale is FROZEN when its first
+    row (position % page_size == 0) is written (core/quant.py::
+    kv_write_scale), and every row — including the first — quantizes
+    against the frozen scale. A fresh page's first chronological write
+    always carries its first row (the engine writes positions in order;
+    decode growth allocates the page exactly at the page boundary; resume
+    re-prefills from 0), so a reused page's stale scale is always
+    overwritten before any row depends on it. Freezing makes the int8
+    payload a pure function of the page's logical content — bitwise
+    identical whether written token-at-a-time or in bulk — which keeps
+    token streams exactly reproducible across preempt/resume and
+    prefix-COW (tests/test_serving.py).
     """
     B, S = positions.shape
     P, ps, Hkv, dh = cache["kp"].shape
@@ -145,9 +162,31 @@ def _paged_cache_update(cache, k, v, positions, block_tables):
                                      mode="drop")
         return pooled.reshape(P, ps, Hkv, dh)
 
-    return {"kp": scatter(cache["kp"], k), "vp": scatter(cache["vp"], v),
-            "len": cache["len"] + _written_per_row(positions,
-                                                   cache["len"].dtype)}
+    out = {"len": cache["len"] + _written_per_row(positions,
+                                                  cache["len"].dtype)}
+    if "k_scale" in cache:
+        from repro.core import quant as Q  # lazy: avoid import cycles
+        # First-row writes establish their page's frozen scale. Block
+        # tables of live rows are disjoint, and at most one position per
+        # page is ≡ 0 (mod ps) per call, so the scatter targets are unique.
+        est = ((positions >= 0) & (pos % ps == 0)).reshape(-1)
+        est_page = jnp.where(est, page.reshape(-1), P)          # OOB → drop
+
+        def establish(scales, new):
+            fresh = Q.kv_write_scale(new.reshape(B * S, Hkv, dh))
+            return scales.at[est_page].set(fresh, mode="drop")
+
+        def quantize(scales, new):
+            row_scale = scales[page]                            # (B,S,Hkv)
+            return Q.quantize_kv_rows(new, row_scale)
+
+        k_scale = establish(cache["k_scale"], k)
+        v_scale = establish(cache["v_scale"], v)
+        out["k_scale"], out["v_scale"] = k_scale, v_scale
+        k, v = quantize(k_scale, k), quantize(v_scale, v)
+    out["kp"] = scatter(cache["kp"], k)
+    out["vp"] = scatter(cache["vp"], v)
+    return out
 
 
 def attention(p, cfg: ModelConfig, x, *, positions, cache=None,
@@ -179,6 +218,7 @@ def attention(p, cfg: ModelConfig, x, *, positions, cache=None,
     v = shard(v, "act_batch", "act_seq", "act_kv_heads", None)
 
     bt = None
+    kv_scales = None
     if cache is None:
         kv_k, kv_v = k, v
         kv_valid = jnp.full((B,), S)
@@ -190,6 +230,8 @@ def attention(p, cfg: ModelConfig, x, *, positions, cache=None,
         cache = _paged_cache_update(cache, k, v, positions, block_tables)
         kv_k, kv_v, kv_valid = cache["kp"], cache["vp"], cache["len"]
         bt = block_tables
+        if "k_scale" in cache:   # int8 pool: kernel dequantizes per page
+            kv_scales = (cache["k_scale"], cache["v_scale"])
     else:
         # Rows whose position is negative are masked out: they neither
         # write K/V nor advance their valid length. The serving engine uses
@@ -222,7 +264,8 @@ def attention(p, cfg: ModelConfig, x, *, positions, cache=None,
 
     out = _attn_core(q, kv_k, kv_v, q_positions=positions,
                      kv_valid_len=kv_valid, causal=cfg.causal,
-                     scale=1.0 / math.sqrt(dh), block_tables=bt)
+                     scale=1.0 / math.sqrt(dh), block_tables=bt,
+                     kv_scales=kv_scales)
     # Row-parallel under TP: contraction over the sharded heads, psum'd.
     y = TP.linear(out.reshape(B, S, H * dh), p["wo"],
                   axes=("heads", "embed"), units=H)
@@ -239,18 +282,31 @@ def init_attention_cache(cfg: ModelConfig, batch: int, max_len: int, dtype):
 
 
 def init_paged_attention_cache(cfg: ModelConfig, batch: int, n_pages: int,
-                               page_size: int, dtype):
+                               page_size: int, dtype, kv_dtype=None):
     """Paged variant of :func:`init_attention_cache`: K/V live in a pool of
     ``n_pages`` fixed-size pages shared by every batch row; per-request
     block tables (serving/kv_pool.py) map logical blocks to pages. ``len``
     stays per-row — the kernel masks logical positions, exactly as the
-    contiguous cache does."""
+    contiguous cache does.
+
+    ``kv_dtype="int8"`` (AttentionPolicy.kv_dtype) stores the pools int8
+    with per-page-per-head fp32 scale side-tensors, quantized at write time
+    and dequantized in the paged kernel (docs/quant.md#kv-pages)."""
     Hkv, dh = cfg.n_kv_heads, cfg.head_dim
-    return {
+    cache = {
         "kp": jnp.zeros((n_pages, page_size, Hkv, dh), dtype),
         "vp": jnp.zeros((n_pages, page_size, Hkv, dh), dtype),
         "len": jnp.zeros((batch,), jnp.int32),
     }
+    if kv_dtype is not None:
+        if kv_dtype != "int8":
+            raise ValueError(f"unsupported kv_dtype {kv_dtype!r}")
+        cache["kp"] = jnp.zeros((n_pages, page_size, Hkv, dh), jnp.int8)
+        cache["vp"] = jnp.zeros((n_pages, page_size, Hkv, dh), jnp.int8)
+        # scale 1.0 init: an unwritten page dequantizes to exact zeros
+        cache["k_scale"] = jnp.ones((n_pages, Hkv), jnp.float32)
+        cache["v_scale"] = jnp.ones((n_pages, Hkv), jnp.float32)
+    return cache
 
 
 # ---------------------------------------------------------------------------

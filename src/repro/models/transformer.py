@@ -365,7 +365,7 @@ def init_caches(cfg: ModelConfig, batch: int, max_len: int, dtype,
 
 
 def init_paged_caches(cfg: ModelConfig, batch: int, n_pages: int,
-                      page_size: int, dtype, tpctx=None):
+                      page_size: int, dtype, tpctx=None, kv_dtype=None):
     """Paged variant of :func:`init_caches`: every layer's KV cache is a
     pool of ``n_pages`` fixed-size pages instead of a contiguous
     ``(batch, max_len)`` slab, so cache memory scales with resident tokens,
@@ -382,6 +382,10 @@ def init_paged_caches(cfg: ModelConfig, batch: int, n_pages: int,
     paged kernel reads/writes only its own heads' pages per shard while
     the host-side PagePool accounting (logical pages, identical on every
     shard) stays unchanged (docs/serving.md).
+
+    ``kv_dtype="int8"`` stores every pool int8 with per-page-per-head fp32
+    scale side-tensors (docs/quant.md#kv-pages); under ``tpctx`` the
+    scales shard on their KV-head dim alongside the pools.
     """
     if cfg.family in ("ssm", "hybrid") or cfg.attn_every:
         raise NotImplementedError(
@@ -399,12 +403,13 @@ def init_paged_caches(cfg: ModelConfig, batch: int, n_pages: int,
             lambda t: jnp.broadcast_to(t[None], (n,) + t.shape).copy(), tree)
 
     caches = {"scan": stack(n_scan, Lyr.init_paged_attention_cache(
-        cfg, batch, n_pages, page_size, dtype))}
+        cfg, batch, n_pages, page_size, dtype, kv_dtype=kv_dtype))}
     if cfg.first_dense_layers:
         dense_cfg = dataclasses.replace(cfg, n_experts=0)
         caches["dense"] = [
             Lyr.init_paged_attention_cache(dense_cfg, batch, n_pages,
-                                           page_size, dtype)
+                                           page_size, dtype,
+                                           kv_dtype=kv_dtype)
             for _ in range(cfg.first_dense_layers)]
     return _place_caches(cfg, caches, tpctx)
 

@@ -84,6 +84,10 @@ class ServeConfig:
     # (AttentionPolicy(backend="fused") routes prefill AND decode through
     # the offset-aware flash kernel; backend="paged" additionally pages the
     # KV cache — docs/attention.md, docs/serving.md)
+    kv_dtype: Optional[str] = None  # paged backends only: "int8" → int8 KV
+    # pages with per-page-per-head fp32 scales, quantized at write time and
+    # dequantized inside the paged kernel — half the pool bytes per
+    # resident token (docs/quant.md#kv-pages).
     cache_pages: Optional[int] = None
     # paged backends only: total pages in the KV pool. None → the
     # contiguous-equivalent budget batch_slots * ceil(max_len / page_size);
@@ -119,6 +123,14 @@ class ServeConfig:
             return self.gemm
         return dataclasses.replace(self.gemm or GemmPolicy(),
                                    weight_dtype=self.weight_dtype)
+
+    def attn_policy(self) -> Optional[AttentionPolicy]:
+        """The effective AttentionPolicy: ``attention`` with ``kv_dtype``
+        folded in (mirrors :meth:`policy`'s weight_dtype folding)."""
+        if self.kv_dtype is None:
+            return self.attention
+        return dataclasses.replace(self.attention or AttentionPolicy(),
+                                   kv_dtype=self.kv_dtype)
 
     def paged(self) -> bool:
         return (self.attention is not None
@@ -247,12 +259,16 @@ class ServingEngine:
         if sc.pack_weights or sc.weight_dtype is not None:
             params = api.pack_model_weights(params, pol)
         self.cfg, self.params, self.sc = cfg, params, sc
-        self.decode = jax.jit(make_decode_step(cfg, pol, sc.attention,
-                                               self.tp))
-        self.prefill = jax.jit(make_prefill_step(cfg, pol, sc.attention,
-                                                 self.tp))
+        attn = sc.attn_policy()   # validates kv_dtype via AttentionPolicy
+        self.decode = jax.jit(make_decode_step(cfg, pol, attn, self.tp))
+        self.prefill = jax.jit(make_prefill_step(cfg, pol, attn, self.tp))
         B = sc.batch_slots
         self.paged = sc.paged()
+        if sc.kv_dtype is not None and not self.paged:
+            raise ValueError(
+                "ServeConfig.kv_dtype requires a paged attention policy "
+                "(backend 'paged'/'paged_interpret') — only the page pool "
+                "stores quantized K/V (docs/quant.md#kv-pages)")
         self.scheduler = sc.scheduler if sc.scheduler is not None \
             else Scheduler()
         self.prefix: Optional[PrefixCache] = None
@@ -277,7 +293,8 @@ class ServingEngine:
                 self.prefix = PrefixCache(self.pool)
             self.caches = T.init_paged_caches(cfg, B, n_pages, ps,
                                               jnp.dtype(sc.cache_dtype),
-                                              tpctx=self.tp)
+                                              tpctx=self.tp,
+                                              kv_dtype=sc.kv_dtype)
             self.block_tables = np.zeros((B, self.n_blocks), np.int32)
             self.slot_tables: List[Optional[BlockTable]] = [None] * B
             self.slot_rid = np.full(B, -1, np.int64)
@@ -385,6 +402,11 @@ class ServingEngine:
                     if k in ("kp", "vp"):
                         out[k] = v.at[..., dst, :, :, :].set(
                             v[..., src, :, :, :])
+                    elif k in ("k_scale", "v_scale"):
+                        # int8 pools: the (…, P, Hkv) frozen scale travels
+                        # with the payload it quantized — a COW fork stays
+                        # bitwise identical to the donor page.
+                        out[k] = v.at[..., dst, :].set(v[..., src, :])
                     else:
                         out[k] = rec(v)
                 return out
@@ -414,6 +436,29 @@ class ServingEngine:
         _, shard_kv = TP.head_sharding(self.tp, self.cfg.n_heads,
                                        self.cfg.n_kv_heads)
         return self.tp.model_size if shard_kv else 1
+
+    def kv_page_bytes(self) -> int:
+        """Logical device bytes per pool page, summed over layers and K/V —
+        including int8 pools' fp32 scale side-tensors, so this is the unit
+        the capacity sweep's pool-byte budget is denominated in
+        (benchmarks/serving_sweep.py). Divide by :meth:`kv_shards` for
+        per-shard bytes under TP."""
+        total = 0
+
+        def rec(node):
+            nonlocal total
+            if isinstance(node, dict):
+                for k, v in node.items():
+                    if k in ("kp", "vp", "k_scale", "v_scale"):
+                        total += v.size * v.dtype.itemsize
+                    else:
+                        rec(v)
+            elif isinstance(node, (list, tuple)):
+                for v in node:
+                    rec(v)
+
+        rec(self.caches)
+        return total // self.pool.n_pages
 
     def _bt_device(self) -> jnp.ndarray:
         return self._dev(self.block_tables)
@@ -989,6 +1034,11 @@ class ServingEngine:
             d["pool_free_pages"] = self.pool.free_pages
             d["pool_pages_in_use"] = self.pool.pages_in_use
             d["pool_high_water"] = self.pool.high_water
+            page_bytes = self.kv_page_bytes()
+            d["kv_dtype"] = self.sc.kv_dtype or str(self.sc.cache_dtype)
+            d["kv_page_bytes"] = page_bytes
+            d["kv_pool_bytes"] = page_bytes * self.pool.n_pages
+            d["kv_bytes_in_use"] = page_bytes * self.pool.pages_in_use
             if self.prefix is not None:
                 d.update(self.prefix.stats())
         return d

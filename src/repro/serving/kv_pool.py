@@ -33,6 +33,7 @@ Invariants (property-tested in tests/test_kv_pool.py):
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 from typing import Callable, List, Optional, Sequence
 
@@ -133,15 +134,25 @@ class PagePool:
         self.refcount[list(pages)] += 1
 
     def release(self, pages: Sequence[int]) -> None:
-        """Drop one reference per page; count-0 pages rejoin the free list."""
-        for p in pages:
-            if self.refcount[p] <= 0:
+        """Drop one reference per page; count-0 pages rejoin the free list.
+
+        All-or-nothing, like :meth:`alloc`: the whole sequence is validated
+        (counting duplicates — releasing a page twice in one call needs two
+        references) before any ref count moves, so a double free raises with
+        the pool untouched."""
+        drops = collections.Counter(int(p) for p in pages)
+        for p, n in drops.items():
+            if not 0 <= p < self.n_pages:
+                raise ValueError(f"release of unknown page {p}")
+            if self.refcount[p] < n:
                 raise ValueError(f"double free of page {p}")
+        for p in pages:
+            p = int(p)
             self.refcount[p] -= 1
             if self.refcount[p] == 0:
-                self._free.append(int(p))
+                self._free.append(p)
                 for hook in self._free_hooks:
-                    hook(int(p))
+                    hook(p)
 
     def check(self) -> None:
         """Assert the free-list/ref-count invariants (tests, debugging)."""
@@ -188,7 +199,9 @@ class BlockTable:
         return fresh
 
     def free(self) -> None:
-        """Return every page to the pool (request retirement/preemption)."""
+        """Return every page to the pool (request retirement/preemption).
+        ``pages`` is cleared only after the release succeeds — a failed
+        (double-free) release leaves the table's ownership intact."""
         self.pool.release(self.pages)
         self.pages = []
 
@@ -199,6 +212,15 @@ class BlockTable:
             raise ValueError(
                 f"block table holds {len(self.pages)} pages > n_blocks="
                 f"{n_blocks}")
+        if out is not None:
+            if out.shape != (n_blocks,):
+                raise ValueError(
+                    f"as_row out buffer has shape {out.shape}, expected "
+                    f"({n_blocks},)")
+            if out.dtype != np.int32:
+                raise ValueError(
+                    f"as_row out buffer has dtype {out.dtype}, expected "
+                    f"int32")
         row = out if out is not None else np.zeros(n_blocks, np.int32)
         row[:] = 0
         row[:len(self.pages)] = self.pages

@@ -39,7 +39,10 @@ Used three ways:
     gate); ``tests/test_parity_sharded.py`` adds the mesh axis via a
     subprocess;
   * CI's dtype-matrix job runs ``python tests/parity.py --dtypes <dt>``
-    (GEMM cells for every dtype, attention cells for the fp dtypes); the
+    (GEMM cells for every dtype, attention cells for the fp dtypes;
+    ``int8`` additionally selects the quantized-KV paged cells —
+    ``AttentionPolicy(kv_dtype="int8")``, oracle on the dequantized
+    pool); the
     ``parity-sharded`` job runs ``--sharded --dtypes <dt>`` on a forced
     4-device host;
   * new backends/dtypes/cases/mesh shapes extend BACKENDS / DTYPES /
@@ -302,13 +305,64 @@ def check_attention_cell(backend: str, dtype: str,
                         case.name)
 
 
+def check_quantized_attention_cell(backend: str,
+                                   case: AttnCase) -> ParityResult:
+    """One quantized-KV cell (AttentionPolicy(kv_dtype="int8")): the paged
+    backend reads int8 pages + (P, Hkv) per-page-per-head scales and
+    dequantizes inside the key/value fetch. The oracle is mha_ref on the
+    DEQUANTIZED pool — the in-kernel dequant is what is under test here,
+    not the quantization error (core/quant.py owns that bound) — so the
+    fp32 attention tolerances apply unchanged."""
+    from repro.kernels.paged_attention import gather_pages
+
+    q, k, v, q_positions, kv_valid_len = make_attention_operands(
+        case, "float32")
+    kp, vp, bt = make_paged_operands(k, v)
+    qk, ks = Q.quantize_kv_pages(kp)
+    qv, vs = Q.quantize_kv_pages(vp)
+    ref = np.asarray(mha_ref(
+        q, gather_pages(Q.dequantize_kv_pages(qk, ks), bt, case.T),
+        gather_pages(Q.dequantize_kv_pages(qv, vs), bt, case.T),
+        causal=case.causal, q_positions=q_positions,
+        kv_valid_len=kv_valid_len), np.float32)
+    pol = AttentionPolicy(backend=backend, block_q=32, block_k=32,
+                          page_size=ATTN_PAGE_SIZE, kv_dtype="int8")
+    out = api.attention(q, qk, qv, q_positions=q_positions,
+                        kv_valid_len=kv_valid_len, causal=case.causal,
+                        block_tables=bt, kv_scales=(ks, vs), policy=pol)
+    ctx = f"attention backend={backend} kv_dtype=int8 case={case.name}"
+    got = np.asarray(out, np.float32)
+    atol, rtol = ATTN_TOLS["float32"]
+    np.testing.assert_allclose(got, ref, atol=atol, rtol=rtol, err_msg=ctx)
+    masked = np.asarray(q_positions)[:, 0] < 0
+    if masked.any():
+        assert np.abs(got[masked]).max() == 0.0, \
+            f"{ctx}: masked rows must be exactly zero"
+    err = float(np.abs(got - ref).max()) if got.size else 0.0
+    return ParityResult(backend, "int8(kv)", (case.B, case.Sq, case.T),
+                        err, True, case.name)
+
+
 def run_attention_grid(backends: Sequence[str] = ATTN_BACKENDS,
                        dtypes: Sequence[str] = ATTN_DTYPES,
                        cases: Sequence[AttnCase] = ATTN_CASES,
                        out=sys.stdout) -> list:
-    """Sweep the attention grid; raises on first divergence."""
+    """Sweep the attention grid; raises on first divergence. "int8" in
+    ``dtypes`` selects the quantized-KV cells (paged backends only — the
+    policy layer rejects kv_dtype elsewhere), not an int8 compute dtype."""
     results = []
     for dtype in dtypes:
+        if dtype == "int8":
+            for backend in backends:
+                if not backend.startswith("paged"):
+                    continue            # kv_dtype is a paged-only policy
+                for case in cases:
+                    r = check_quantized_attention_cell(backend, case)
+                    results.append(r)
+                    print(f"parity {backend:17s} int8(kv)  "
+                          f"attn:{case.name:22s} max_err={r.max_err:.2e}",
+                          file=out)
+            continue
         if dtype not in ATTN_TOLS:
             continue                    # integer dtypes: GEMM-only
         for backend in backends:
@@ -529,7 +583,8 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     if not args.no_attention:
         results += run_attention_grid(
             backends=args.attn_backends,
-            dtypes=[d for d in args.dtypes if d in ATTN_TOLS])
+            dtypes=[d for d in args.dtypes
+                    if d in ATTN_TOLS or d == "int8"])
     print(f"parity: {len(results)} cells OK "
           f"(backends={args.backends}, dtypes={args.dtypes})")
     return 0

@@ -58,6 +58,44 @@ def test_double_free_raises():
         pool.release(a)
 
 
+def test_release_is_all_or_nothing():
+    """Regression: release used to decrement page by page and raise mid-
+    loop on a double free, leaving earlier pages already released. A mixed
+    valid + already-free sequence must raise with the pool untouched."""
+    pool = PagePool(4, 8)
+    a = pool.alloc(2)
+    b = pool.alloc(1)
+    pool.release(b)                      # b is free now
+    before_rc = pool.refcount.copy()
+    before_free = pool.free_pages
+    with pytest.raises(ValueError, match="double free"):
+        pool.release(a + b)              # valid pages first, bad one last
+    np.testing.assert_array_equal(pool.refcount, before_rc)
+    assert pool.free_pages == before_free
+    pool.check()
+
+
+def test_release_duplicates_in_one_call_need_refs():
+    """One call releasing the same page twice needs two references — with
+    only one, the whole call must fail atomically."""
+    pool = PagePool(2, 8)
+    (p,) = pool.alloc(1)
+    with pytest.raises(ValueError, match="double free"):
+        pool.release([p, p])
+    assert pool.refcount[p] == 1 and pool.free_pages == 1
+    pool.retain([p])
+    pool.release([p, p])                 # two refs → fine in one call
+    assert pool.free_pages == 2
+    pool.check()
+
+
+def test_release_rejects_unknown_page():
+    pool = PagePool(2, 8)
+    with pytest.raises(ValueError, match="unknown page"):
+        pool.release([5])
+    pool.check()
+
+
 def test_retain_release_refcount():
     pool = PagePool(2, 8)
     a = pool.alloc(1)
@@ -89,6 +127,46 @@ def test_as_row_rejects_overflow():
     tbl.ensure(16)
     with pytest.raises(ValueError, match="n_blocks"):
         tbl.as_row(2)
+
+
+def test_as_row_validates_out_buffer():
+    """Regression: a wrong-width or wrong-dtype caller buffer used to be
+    filled silently, corrupting the device block-table row."""
+    pool = PagePool(8, 4)
+    tbl = BlockTable(pool)
+    tbl.ensure(8)
+    with pytest.raises(ValueError, match="shape"):
+        tbl.as_row(4, out=np.zeros(3, np.int32))       # too narrow
+    with pytest.raises(ValueError, match="shape"):
+        tbl.as_row(4, out=np.zeros((4, 1), np.int32))  # wrong rank
+    with pytest.raises(ValueError, match="dtype"):
+        tbl.as_row(4, out=np.zeros(4, np.int64))       # device wants int32
+    out = np.full(4, 99, np.int32)
+    row = tbl.as_row(4, out=out)
+    assert row is out
+    assert list(row[:2]) == tbl.pages and (row[2:] == 0).all()
+
+
+def test_block_table_free_keeps_pages_on_failure():
+    """BlockTable.free() clears ``pages`` only when the release succeeds —
+    after an injected double free the table still owns its pages and a
+    later free() drains cleanly."""
+    pool = PagePool(4, 8)
+    tbl = BlockTable(pool)
+    tbl.ensure(16)
+    pages = list(tbl.pages)
+    pool.release([pages[0]])             # sabotage: drop one ref externally
+    with pytest.raises(ValueError, match="double free"):
+        tbl.free()
+    assert tbl.pages == pages            # ownership record intact
+    # restore the stolen reference: re-allocate until the page comes back,
+    # hand it to the table, drop the bystanders
+    grabbed = pool.alloc(pool.free_pages)
+    assert pages[0] in grabbed
+    pool.release([p for p in grabbed if p != pages[0]])
+    tbl.free()
+    assert tbl.pages == [] and pool.free_pages == 4
+    pool.check()
 
 
 def test_invalid_config_rejected():
@@ -148,6 +226,38 @@ def test_pool_invariants_under_random_schedules(n_pages, page_size, ops):
         tbl.free()
     pool.check()
     assert pool.free_pages == pool.n_pages
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.integers(2, 16), st.integers(0, 8),
+       st.lists(st.integers(0, 15), min_size=1, max_size=8),
+       st.integers(0, 3))
+def test_release_atomic_under_injected_double_frees(n_pages, n_alloc,
+                                                    extra, n_dups):
+    """Atomicity property: ANY release sequence that raises (injected
+    already-free pages, in-call duplicates beyond the refcount, unknown
+    ids) leaves refcounts and the free list exactly as they were; any
+    sequence that succeeds drains exactly one reference per entry."""
+    pool = PagePool(n_pages, 8)
+    owned = pool.alloc(min(n_alloc, n_pages))
+    seq = list(owned) + [p % (n_pages + 2) for p in extra]  # maybe bad/dup
+    seq += owned[:1] * n_dups                               # in-call dups
+    before_rc = pool.refcount.copy()
+    before_free = list(pool._free)
+    from collections import Counter
+    drops = Counter(seq)
+    legal = all(0 <= p < n_pages and pool.refcount[p] >= c
+                for p, c in drops.items())
+    if legal:
+        pool.release(seq)
+        for p, c in drops.items():
+            assert pool.refcount[p] == before_rc[p] - c
+    else:
+        with pytest.raises(ValueError):
+            pool.release(seq)
+        np.testing.assert_array_equal(pool.refcount, before_rc)
+        assert pool._free == before_free, "failed release mutated the pool"
+    pool.check()
 
 
 @settings(max_examples=100, deadline=None)

@@ -1,0 +1,147 @@
+"""Quantized int8 KV-cache pages (docs/quant.md#kv-pages).
+
+Two quantization regimes share core/quant.py:
+
+  * **one-shot** (``quantize_kv_pages``) — true per-page-per-head amax,
+    used by the parity/benchmark harnesses on already-full pools;
+  * **write-time** (``kv_write_scale`` + ``quantize_kv_rows``) — the
+    serving path: a page's scale is FROZEN from its first row (position %
+    page_size == 0, with KV_HEADROOM slack for later rows) and every row
+    quantizes against the frozen scale.
+
+The freeze is what makes the int8 payload a pure function of a page's
+logical content — the bitwise write-granularity test below is the
+invariant the serving engine's preempt/resume and prefix-COW stream
+identity rests on (tests/test_serving.py asserts it end to end).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypcompat import given, settings, st
+
+from repro.core import quant as Q
+from repro.core.plan import AttentionPolicy
+
+
+# ---------------------------------------------------------------------------
+# One-shot page quantization: error bounds and shape contract
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**16), P=st.integers(1, 6),
+       ps=st.integers(1, 16), Hkv=st.integers(1, 4),
+       scale_pow=st.integers(-8, 8))
+def test_kv_pages_roundtrip_error_half_step(seed, P, ps, Hkv, scale_pow):
+    """|pool - dequant(quantize(pool))| ≤ scale/2 per element, per page
+    per head, at any magnitude (the _safe_scale guard covers zeros)."""
+    rng = np.random.default_rng(seed)
+    pool = jnp.asarray(rng.standard_normal((P, ps, Hkv, 8))
+                       .astype(np.float32) * 2.0 ** scale_pow)
+    q, scales = Q.quantize_kv_pages(pool)
+    assert q.dtype == jnp.int8 and scales.shape == (P, Hkv)
+    assert int(jnp.max(jnp.abs(q.astype(jnp.int32)))) <= Q.QMAX
+    deq = np.asarray(Q.dequantize_kv_pages(q, scales))
+    err = np.abs(deq - np.asarray(pool))
+    bound = np.asarray(scales)[:, None, :, None] * (0.5 + 1e-4) + 1e-30
+    np.testing.assert_array_less(err, np.broadcast_to(bound, err.shape))
+
+
+def test_zero_pages_are_safe():
+    """All-zero pages (freshly allocated pools) must quantize to zeros
+    with a finite scale and dequantize back to exact zeros."""
+    pool = jnp.zeros((3, 8, 2, 16))
+    q, scales = Q.quantize_kv_pages(pool)
+    assert np.isfinite(np.asarray(scales)).all()
+    assert np.abs(np.asarray(Q.dequantize_kv_pages(q, scales))).max() == 0.0
+
+
+def test_write_scale_headroom_clips_late_outliers():
+    """kv_write_scale carries KV_HEADROOM slack so later rows larger than
+    the frozen first row still land in range (clipped at QMAX, not
+    wrapped); rows within headroom round-trip at half-step error."""
+    rng = np.random.default_rng(3)
+    first = jnp.asarray(rng.standard_normal((4, 2, 8)).astype(np.float32))
+    scales = Q.kv_write_scale(first)
+    assert scales.shape == (4, 2)
+    late = first * (Q.KV_HEADROOM * 4.0)     # beyond the headroom
+    q = Q.quantize_kv_rows(late, scales)
+    assert q.dtype == jnp.int8
+    assert int(jnp.max(jnp.abs(q.astype(jnp.int32)))) <= Q.QMAX
+    within = first * (Q.KV_HEADROOM * 0.5)   # inside the headroom
+    deq = (np.asarray(Q.quantize_kv_rows(within, scales), np.float32)
+           * np.asarray(scales)[..., None])
+    err = np.abs(deq - np.asarray(within))
+    bound = np.asarray(scales)[..., None] * (0.5 + 1e-4) + 1e-30
+    np.testing.assert_array_less(err, np.broadcast_to(bound, err.shape))
+
+
+# ---------------------------------------------------------------------------
+# Policy plumbing
+# ---------------------------------------------------------------------------
+
+def test_policy_rejects_unknown_kv_dtype():
+    with pytest.raises(ValueError, match="kv_dtype"):
+        AttentionPolicy(kv_dtype="int4")
+    assert AttentionPolicy(kv_dtype="int8").kv_dtype == "int8"
+
+
+# ---------------------------------------------------------------------------
+# Write-granularity bitwise determinism (the frozen-scale invariant)
+# ---------------------------------------------------------------------------
+
+def test_paged_int8_write_granularity_bitwise():
+    """Writing a sequence token-at-a-time (decode), in chunks (chunked
+    prefill), or all at once (bulk prefill / preempt-resume re-prefill)
+    must produce byte-identical int8 pools AND scales: the page scale is
+    frozen by the pos%page_size==0 row regardless of which write carried
+    it, so the payload depends only on the page's logical content."""
+    from repro.configs.registry import get_smoke_config
+    from repro.models import layers as L
+
+    cfg = get_smoke_config("smollm-135m", n_layers=2, vocab=64)
+    B, T, ps, P = 1, 12, 8, 4
+    rng = np.random.default_rng(11)
+    k = jnp.asarray(rng.standard_normal(
+        (B, T, cfg.n_kv_heads, cfg.head_dim)).astype(np.float32))
+    v = jnp.asarray(rng.standard_normal(
+        (B, T, cfg.n_kv_heads, cfg.head_dim)).astype(np.float32))
+    bt = jnp.asarray([[2, 0]], jnp.int32)    # shuffled page assignment
+
+    def write(chunks):
+        cache = L.init_paged_attention_cache(cfg, B, P, ps, jnp.float32,
+                                             kv_dtype="int8")
+        t0 = 0
+        for n in chunks:
+            pos = jnp.arange(t0, t0 + n, dtype=jnp.int32)[None, :]
+            cache = L._paged_cache_update(
+                cache, k[:, t0:t0 + n], v[:, t0:t0 + n], pos, bt)
+            t0 += n
+        return cache
+
+    bulk = write([T])
+    for chunks in ([1] * T, [5, 7], [8, 4], [3, 3, 3, 3]):
+        got = write(chunks)
+        for leaf in ("kp", "vp", "k_scale", "v_scale"):
+            np.testing.assert_array_equal(
+                np.asarray(got[leaf]), np.asarray(bulk[leaf]),
+                err_msg=f"{leaf} diverged for chunks={chunks}")
+        np.testing.assert_array_equal(np.asarray(got["len"]),
+                                      np.asarray(bulk["len"]))
+
+    # untouched pages keep their ones-scales and zero payloads
+    untouched = [p for p in range(P) if p not in (0, 2)]
+    for leaf in ("k_scale", "v_scale"):
+        assert (np.asarray(bulk[leaf])[untouched] == 1.0).all()
+    for leaf in ("kp", "vp"):
+        assert (np.asarray(bulk[leaf])[untouched] == 0).all()
+
+
+def test_init_paged_cache_rejects_unknown_kv_dtype():
+    from repro.configs.registry import get_smoke_config
+    from repro.models import layers as L
+
+    cfg = get_smoke_config("smollm-135m", n_layers=1, vocab=64)
+    with pytest.raises(ValueError, match="kv_dtype"):
+        L.init_paged_attention_cache(cfg, 1, 4, 8, jnp.float32,
+                                     kv_dtype="fp8")

@@ -95,6 +95,75 @@ def test_gather_pages_inverts_layout():
         np.asarray(gather_pages(vp, bt, T)), np.asarray(v))
 
 
+def test_empty_block_table_returns_zeros():
+    """Regression: n_blocks == 0 (a zero-token probe) used to build a
+    grid=(B, H, nq, 0) whose flush step never ran, returning uninitialized
+    output. With no key block visible, the masked-row contract demands
+    exactly zeros."""
+    rng = np.random.default_rng(5)
+    B, H, D, ps, P = 2, 2, 8, 8, 4
+    q = jnp.asarray(rng.standard_normal((B, 3, H, D)).astype(np.float32))
+    kp = jnp.asarray(rng.standard_normal((P, ps, H, D)).astype(np.float32))
+    vp = jnp.asarray(rng.standard_normal((P, ps, H, D)).astype(np.float32))
+    bt = jnp.zeros((B, 0), jnp.int32)
+    out = paged_attention(q, kp, vp, bt, block_q=8, interpret=True)
+    assert out.shape == (B, 3, H, D) and out.dtype == q.dtype
+    assert np.abs(np.asarray(out, np.float32)).max() == 0.0
+    # same contract on the quantized path
+    from repro.core.quant import quantize_kv_pages
+    qk, ks = quantize_kv_pages(kp)
+    qv, vs = quantize_kv_pages(vp)
+    out_q = paged_attention(q, qk, qv, bt, kv_scales=(ks, vs), block_q=8,
+                            interpret=True)
+    assert np.abs(np.asarray(out_q, np.float32)).max() == 0.0
+
+
+def test_int8_pages_dequantize_in_kernel():
+    """int8 pools + per-page-per-head scales must match the fp oracle run
+    on the DEQUANTIZED pool exactly (up to fp tolerance): the kernel's
+    in-fetch dequant is the only thing under test, not the quantization
+    error itself."""
+    from repro.core.quant import dequantize_kv_pages, quantize_kv_pages
+    rng = np.random.default_rng(13)
+    B, T, H, Hkv, D, ps = 2, 48, 4, 2, 16, 16
+    k, v, kp, vp, bt = build_paged(rng, B, T, Hkv, D, ps)
+    q = jnp.asarray(rng.standard_normal((B, 4, H, D)).astype(np.float32))
+    qpos = jnp.asarray(np.stack([np.arange(4) + 30, np.arange(4) + 11])
+                       .astype(np.int32))
+    kvl = jnp.asarray([34, 15], jnp.int32)
+    qk, ks = quantize_kv_pages(kp)
+    qv, vs = quantize_kv_pages(vp)
+    out = paged_attention(q, qk, qv, bt, qpos, kvl, kv_scales=(ks, vs),
+                          block_q=8, interpret=True)
+    ref = mha_ref(q, gather_pages(dequantize_kv_pages(qk, ks), bt, T),
+                  gather_pages(dequantize_kv_pages(qv, vs), bt, T),
+                  q_positions=qpos, kv_valid_len=kvl)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=3e-5, rtol=3e-5)
+
+
+def test_int8_pages_validation():
+    """int8 pools without scales, wrong-shape scales, fp pools WITH
+    scales, and mixed int8/fp pools must all be rejected loudly."""
+    from repro.core.quant import quantize_kv_pages
+    rng = np.random.default_rng(17)
+    B, T, Hkv, D, ps = 1, 16, 2, 8, 8
+    k, v, kp, vp, bt = build_paged(rng, B, T, Hkv, D, ps)
+    q = jnp.asarray(rng.standard_normal((B, 2, Hkv, D)).astype(np.float32))
+    qk, ks = quantize_kv_pages(kp)
+    qv, vs = quantize_kv_pages(vp)
+    with pytest.raises(ValueError, match="kv_scales"):
+        paged_attention(q, qk, qv, bt, interpret=True)
+    with pytest.raises(ValueError, match="shape"):
+        paged_attention(q, qk, qv, bt, kv_scales=(ks, vs[:, :1]),
+                        interpret=True)
+    with pytest.raises(ValueError, match="not int8"):
+        paged_attention(q, kp, vp, bt, kv_scales=(ks, vs), interpret=True)
+    with pytest.raises(ValueError, match="dtype mismatch"):
+        paged_attention(q, qk, vp, bt, kv_scales=(ks, vs), interpret=True)
+
+
 def test_soft_cap_and_bf16():
     rng = np.random.default_rng(11)
     B, T, H, D, ps = 1, 32, 2, 16, 16

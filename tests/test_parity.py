@@ -36,6 +36,15 @@ def test_attention_backend_parity(backend, dtype, case):
     parity.check_attention_cell(backend, dtype, case)
 
 
+@pytest.mark.parametrize("case", parity.ATTN_CASES, ids=lambda c: c.name)
+def test_attention_quantized_kv_parity(case):
+    """The quantized-KV paged cells (AttentionPolicy(kv_dtype="int8")):
+    int8 pages + per-page-per-head scales, dequantized inside the kernel's
+    K/V fetch, vs mha_ref on the dequantized pool (docs/quant.md#kv-pages).
+    Same case set as the fp grid — offsets, GQA, masked rows included."""
+    parity.check_quantized_attention_cell("paged_interpret", case)
+
+
 def test_attention_fused_vs_unfused_direct():
     """The backends must also agree with *each other* (not just each
     within tolerance of the oracle) on the decode case — the cell serving

@@ -740,3 +740,127 @@ def test_paged_generate_does_not_accumulate_cache_lens(paged_setup):
     np.testing.assert_array_equal(lens2, 0)          # reset on completion
     np.testing.assert_array_equal(o1, o2)            # hence deterministic
     assert eng.pool.free_pages == eng.pool.n_pages
+
+
+# ---------------------------------------------------------------------------
+# Quantized int8 KV pages (ServeConfig.kv_dtype — docs/quant.md#kv-pages)
+# ---------------------------------------------------------------------------
+
+PAGED8_INT8 = dict(attention=PAGED8, kv_dtype="int8")
+
+
+def test_kv_int8_streams_self_consistent_and_greedy_match(paged_setup):
+    """The int8 engine's submit()/step() streams must equal its own
+    batched generate() (shared write path, shared kernel), and — on this
+    smoke model, where quantization noise stays under every argmax
+    margin — the greedy streams also match the fp paged engine's."""
+    cfg, params = paged_setup
+    prompt = [3, 1, 4, 1, 5]
+    eng = ServingEngine(cfg, params, ServeConfig(
+        batch_slots=2, max_len=32, **PAGED8_INT8))
+    h = eng.submit(prompt)
+    stream = [eng.step()[h] for _ in range(6)]
+    eng2 = ServingEngine(cfg, params, ServeConfig(
+        batch_slots=2, max_len=32, **PAGED8_INT8))
+    batch = np.asarray([prompt, prompt], np.int32)
+    gen = eng2.generate(batch, 6)
+    assert stream == list(np.asarray(gen)[0])
+    fp = ServingEngine(cfg, params, ServeConfig(
+        batch_slots=2, max_len=32, attention=PAGED8))
+    np.testing.assert_array_equal(np.asarray(fp.generate(batch, 6)),
+                                  np.asarray(gen))
+
+
+def test_kv_int8_preempt_resume_stream_identical(paged_setup):
+    """Preempt/resume exactness under the quantized pool: resume
+    re-prefills in bulk what was written token-at-a-time before the
+    preemption, so this passes ONLY because the frozen-first-row page
+    scales make the int8 payload a pure function of logical content
+    (tests/test_kv_quant.py proves that invariant bitwise)."""
+    cfg, params = paged_setup
+    sc = ServeConfig(batch_slots=2, max_len=16, cache_pages=2,
+                     **PAGED8_INT8)
+    eng = ServingEngine(cfg, params, sc)
+    prompts = [[1, 2, 3], [4, 5, 6]]
+    rids = [eng.submit(p) for p in prompts]
+    assert all(r is not None for r in rids)
+    for _ in range(60):
+        eng.step()
+        if not eng.slot_live.any() and not eng.wait:
+            break
+    assert eng.n_preemptions > 0                   # pressure actually hit
+    assert not eng.slot_live.any() and not eng.wait
+    eng.pool.check()
+    assert eng.pool.free_pages == eng.pool.n_pages
+    for rid, p in zip(rids, prompts):
+        solo = ServingEngine(cfg, params, sc)
+        r = solo.submit(p)
+        want = []
+        while solo.slot_live.any():
+            st = solo.step()
+            if r in st:
+                want.append(st[r])
+        assert eng.request_out[rid] == want, (rid, p)
+
+
+def test_kv_int8_prefix_cow_streams_identical(paged_setup):
+    """Prefix-cache COW over quantized pages: _copy_page must clone the
+    int8 slabs AND the scale rows, so a fork diverging inside a cached
+    page still matches its solo stream exactly."""
+    cfg, params = paged_setup
+    sc = ServeConfig(batch_slots=2, max_len=32, cache_pages=16,
+                     prefix_cache=True, **PAGED8_INT8)
+    eng = ServingEngine(cfg, params, sc)
+    a = [1, 2, 3, 4, 5, 6, 7, 8, 9, 10]      # one full page + tail
+    b = a[:6] + [60, 61, 62, 63]             # diverges inside page 0
+    ha = eng.submit(a)
+    hb = eng.submit(b)                       # forks the partial match
+    assert eng.prefix.cow_forks >= 1
+    for _ in range(5):
+        eng.step()
+    for prompt, h in ((a, ha), (b, hb)):
+        solo = ServingEngine(cfg, params, ServeConfig(
+            batch_slots=2, max_len=32, cache_pages=16, **PAGED8_INT8))
+        r = solo.submit(prompt)
+        want = [solo.step()[r] for _ in range(5)]
+        assert eng.request_out[h] == want, prompt
+    eng.pool.check()
+    eng.prefix.check()
+
+
+def test_kv_int8_stats_and_pool_bytes(paged_setup):
+    """stats() reports the pool's byte economics; an int8 page must cost
+    ≤ 1/1.8 of the bf16 page (2x payload minus the fp32 scale rows) —
+    the per-page form of the ≥1.8x capacity gate benchmarks/
+    serving_sweep.py::sweep_kv measures end to end."""
+    cfg, params = paged_setup
+    base = dict(batch_slots=2, max_len=32, cache_pages=8,
+                cache_dtype="bfloat16")
+    fp = ServingEngine(cfg, params, ServeConfig(**base, attention=PAGED8))
+    q8 = ServingEngine(cfg, params, ServeConfig(**base, **PAGED8_INT8))
+    st = q8.stats()
+    assert st["kv_dtype"] == "int8"
+    assert st["kv_page_bytes"] == q8.kv_page_bytes()
+    assert st["kv_pool_bytes"] == 8 * st["kv_page_bytes"]
+    assert fp.stats()["kv_dtype"] == "bfloat16"
+    assert 1.8 * q8.kv_page_bytes() <= fp.kv_page_bytes()
+    q8.submit([1, 2, 3])
+    st = q8.stats()
+    assert st["kv_bytes_in_use"] == \
+        st["kv_page_bytes"] * st["pool_pages_in_use"] > 0
+    # the pools really are int8 + fp32 scales
+    scan = q8.caches["scan"]
+    assert scan["kp"].dtype == jnp.int8 and scan["vp"].dtype == jnp.int8
+    assert scan["k_scale"].dtype == jnp.float32
+
+
+def test_kv_dtype_requires_paged_backend(paged_setup):
+    """kv_dtype on a dense backend must refuse at construction — dense
+    caches have no pages to hang scales off."""
+    cfg, params = paged_setup
+    with pytest.raises(ValueError, match="kv_dtype"):
+        ServingEngine(cfg, params, ServeConfig(
+            batch_slots=2, max_len=32, kv_dtype="int8"))
+    with pytest.raises(ValueError, match="kv_dtype"):
+        ServingEngine(cfg, params, ServeConfig(
+            batch_slots=2, max_len=32, attention=FUSED8, kv_dtype="int8"))

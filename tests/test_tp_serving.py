@@ -51,7 +51,7 @@ def test_tp2_paged_stream_equivalence():
     out = run_tp_subprocess(RUNNER, [])
     for marker in ("TP-EQUIV PASS greedy", "TP-EQUIV PASS temperature",
                    "TP-EQUIV PASS preempt-resume", "TP-EQUIV PASS prefix",
-                   "TP-EQUIV PASS all"):
+                   "TP-EQUIV PASS kv-int8", "TP-EQUIV PASS all"):
         assert marker in out, f"missing {marker!r} in runner output:\n{out}"
 
 

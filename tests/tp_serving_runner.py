@@ -160,8 +160,38 @@ def scenario_prefix(cfg, params, axes, mesh):
     print("TP-EQUIV PASS prefix")
 
 
+def scenario_kv_int8(cfg, params, axes, mesh):
+    # Quantized KV pages under TP: the int8 pools shard on Hkv (axis -2)
+    # and their (P, Hkv) scale side-tensors on Hkv (axis -1), so each
+    # shard quantizes/dequantizes its own heads with its own scales.
+    # Streams must match the single-device int8 engine token for token,
+    # including across a forced preempt/resume cycle.
+    base, tp = engines(cfg, params, axes, mesh, kv_dtype="int8")
+    prompts = np.random.default_rng(13).integers(0, 64, (2, 6)).astype(np.int32)
+    np.testing.assert_array_equal(tp.generate(prompts, 8),
+                                  base.generate(prompts, 8))
+
+    base, tp = engines(cfg, params, axes, mesh, kv_dtype="int8",
+                       max_len=16, cache_pages=2)
+    for eng in (base, tp):
+        assert eng.submit([1, 2, 3]) is not None
+        assert eng.submit([4, 5, 6]) is not None
+    for _ in range(80):
+        base.step()
+        tp.step()
+        if (not base.slot_live.any() and not base.wait
+                and not tp.slot_live.any() and not tp.wait):
+            break
+    assert tp.n_preemptions > 0, "pool pressure never hit — dead scenario"
+    assert tp.n_preemptions == base.n_preemptions
+    assert base.request_out == tp.request_out
+    tp.pool.check()
+    print("TP-EQUIV PASS kv-int8")
+
+
 SCENARIOS = {"greedy": scenario_greedy, "temperature": scenario_temperature,
-             "preempt": scenario_preempt, "prefix": scenario_prefix}
+             "preempt": scenario_preempt, "prefix": scenario_prefix,
+             "kv-int8": scenario_kv_int8}
 
 
 def main(argv=None):
