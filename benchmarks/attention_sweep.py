@@ -60,9 +60,10 @@ def sweep(backends: Sequence[str], dtype: str = "float32",
         pol = AttentionPolicy(backend=backend)
         for case in cases:
             q, k, v, qp, kl = parity.make_attention_operands(case, dtype)
-            fn = lambda: api.attention(q, k, v, q_positions=qp,
-                                       kv_valid_len=kl, causal=case.causal,
-                                       policy=pol)
+            def fn(q=q, k=k, v=v, qp=qp, kl=kl, case=case, pol=pol):
+                return api.attention(q, k, v, q_positions=qp,
+                                     kv_valid_len=kl, causal=case.causal,
+                                     policy=pol)
             t = time_fn(fn, warmup=1, iters=3)
             if case.name not in refs:
                 refs[case.name] = np.asarray(parity.mha_ref(

@@ -15,7 +15,6 @@ import os
 
 from benchmarks.common import emit
 from repro.core import sysmodel as SM
-from repro.roofline.analysis import HW
 
 
 def run():
@@ -37,7 +36,7 @@ def run():
                   "dryrun_single.jsonl"):
         path = os.path.join(repo, fname)
         if os.path.exists(path):
-            rows = [json.loads(l) for l in open(path) if l.strip()]
+            rows = [json.loads(line) for line in open(path) if line.strip()]
             break
     rows = [r for r in rows
             if "roofline" in r and r.get("mesh", "16x16") == "16x16"]

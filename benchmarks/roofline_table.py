@@ -22,7 +22,7 @@ def _load_rows(mesh_label):
         path = os.path.join(REPO, fname)
         if not os.path.exists(path):
             continue
-        rows = [json.loads(l) for l in open(path) if l.strip()]
+        rows = [json.loads(line) for line in open(path) if line.strip()]
         rows = [r for r in rows
                 if r.get("mesh", mesh_label) == mesh_label or r.get("skipped")]
         if rows:

@@ -12,15 +12,14 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs.registry import get_config, get_smoke_config
 from repro.models import transformer as T
 
 
 def tree_bytes(tree):
-    return sum(l.size * l.dtype.itemsize
-               for l in jax.tree_util.tree_leaves(tree))
+    return sum(x.size * x.dtype.itemsize
+               for x in jax.tree_util.tree_leaves(tree))
 
 
 def main():

@@ -4,7 +4,7 @@ import sys
 
 
 def main(path="dryrun_final.jsonl"):
-    rows = [json.loads(l) for l in open(path) if l.strip()]
+    rows = [json.loads(line) for line in open(path) if line.strip()]
     for mesh in ("16x16", "2x16x16"):
         sel = [r for r in rows if r.get("mesh") == mesh and "roofline" in r]
         print(f"\n### Mesh {mesh} ({sel[0]['n_chips'] if sel else '?'} chips)\n")

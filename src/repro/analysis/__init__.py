@@ -1,0 +1,44 @@
+"""Static analysis for the MatrixFlow kernel substrate.
+
+Two passes, both *ahead of execution*:
+
+  * :mod:`repro.analysis.kernel_contracts` — declarative
+    :class:`~repro.analysis.kernel_contracts.KernelContract`\\ s registered
+    by each Pallas kernel (and the blockflow oracle), plus a checker that
+    exhaustively enumerates the kernel grid and verifies coverage, bounds,
+    divisibility preconditions, and write-ordering (the paper's dc/dm
+    block-revisit discipline — checked, not assumed).
+  * :mod:`repro.analysis.trace_lint` — a jaxpr linter for the serving hot
+    path: host callbacks/syncs, silent fp64 promotions, weak-type retrace
+    triggers, and int8 KV pools flowing into a kernel without scales.
+
+``python -m repro.analysis --all-backends`` sweeps every registered
+GEMM/attention backend over the parity shape×dtype grid and the configs/
+registry and prints a violation report (docs/analysis.md).
+"""
+from repro.analysis.kernel_contracts import (
+    ContractViolation,
+    ContractViolationError,
+    KernelContract,
+    OperandSpec,
+    Precondition,
+    check_contract,
+    get_contract_builder,
+    load_builtin_contracts,
+    register_contract,
+    registered_contracts,
+    require,
+)
+from repro.analysis.trace_lint import (
+    LintFinding,
+    lint_engine,
+    lint_jaxpr,
+)
+
+__all__ = [
+    "ContractViolation", "ContractViolationError", "KernelContract",
+    "OperandSpec", "Precondition", "check_contract", "get_contract_builder",
+    "load_builtin_contracts", "register_contract", "registered_contracts",
+    "require",
+    "LintFinding", "lint_engine", "lint_jaxpr",
+]

@@ -1,0 +1,68 @@
+"""``python -m repro.analysis`` — the static-analysis gate.
+
+Sweeps every registered kernel contract over the backend registry × the
+parity shape/dtype grid (and the configs/ registry), printing a violation
+report; optionally lints a live serving engine's prefill/decode jaxprs.
+Exit status is the violation count clamped to 1 — CI's ``static-analysis``
+job fails on any finding (docs/analysis.md).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from typing import Optional, Sequence
+
+from repro.analysis import sweep as S
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description=__doc__.splitlines()[0])
+    ap.add_argument("--all-backends", action="store_true",
+                    help="sweep every backend in the registry (default "
+                         "sweeps them too; the flag is the explicit CI "
+                         "spelling)")
+    ap.add_argument("--backends", nargs="+", default=None,
+                    help="restrict the GEMM sweep to these backends")
+    ap.add_argument("--dtypes", nargs="+", default=list(S.GEMM_DTYPES),
+                    choices=list(S.GEMM_DTYPES))
+    ap.add_argument("--no-configs", action="store_true",
+                    help="skip the configs/ registry sweep")
+    ap.add_argument("--lint-engine", metavar="ARCH", default=None,
+                    help="additionally build a smoke ServingEngine for "
+                         "ARCH (configs/ registry) and lint its traced "
+                         "prefill/decode jaxprs (repro.analysis.trace_lint)")
+    args = ap.parse_args(argv)
+
+    backends = None if args.all_backends else args.backends
+    _, n_bad = S.run_sweep(gemm_backends=backends, dtypes=args.dtypes,
+                           include_configs=not args.no_configs)
+
+    if args.lint_engine:
+        n_bad += _lint_engine(args.lint_engine)
+
+    return 1 if n_bad else 0
+
+
+def _lint_engine(arch: str) -> int:
+    """Build a tiny engine for ``arch`` and lint its hot-path traces."""
+    import jax
+
+    from repro.analysis.trace_lint import lint_engine
+    from repro.configs.registry import get_smoke_config
+    from repro.models import transformer as T
+    from repro.serving.engine import ServeConfig, ServingEngine
+
+    cfg = get_smoke_config(arch, n_layers=2, vocab=64)
+    params, _ = T.init_model(jax.random.PRNGKey(0), cfg)
+    eng = ServingEngine(cfg, params, ServeConfig(batch_slots=2, max_len=32))
+    findings = lint_engine(eng)
+    for f in findings:
+        print(f"lint FAIL {f}")
+    print(f"lint: {arch} prefill+decode, {len(findings)} finding(s)")
+    return len(findings)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

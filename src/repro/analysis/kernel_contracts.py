@@ -1,0 +1,427 @@
+"""Declarative kernel contracts + a static BlockSpec/grid checker.
+
+MatrixFlow's correctness story (paper §3.3) rests on a *provably correct
+dataflow mapping*: every operand block is fetched exactly when the schedule
+needs it, every output block is written by a deterministic revisit sequence
+along the K-stream, and nothing ever reads past the blocked array. Our
+Pallas kernels encode that mapping as BlockSpec index-map lambdas — which
+nothing checked until a runtime test happened to hit the broken cell (the
+PR 7 ``nb == 0`` uninitialized output, the PR 2 cross-slot cache
+corruption were both exactly this defect class).
+
+This module makes the mapping a first-class, checkable object:
+
+  * each kernel registers a **contract builder**
+    (:func:`register_contract`) that, for concrete shapes, produces a
+    :class:`KernelContract` — the grid, the per-operand block geometry and
+    *the kernel's own index-map callables* (the builders live in the
+    kernel modules and close over the very functions ``pallas_call``
+    receives, so the checker verifies the shipped code, not a copy);
+  * :func:`check_contract` exhaustively enumerates the grid and verifies
+
+      - **preconditions** — the structured divisibility/shape guards the
+        kernels raise as ``ValueError`` (page_size == block_k, H % Hkv,
+        block-geometry agreement), evaluated without running anything;
+      - **bounds** — no index map ever exceeds the blocked array;
+      - **coverage** — every input block is fetched and every output block
+        written (a paged contract narrows coverage to the pages its block
+        table actually references — distractor pages are dead by design);
+      - **write races / revisit order** — grid points aliasing an output
+        block must differ only along declared reduction axes, those axes
+        must be sequential (``"arbitrary"`` dimension semantics — a
+        parallel axis revisiting an output block is a race), and the
+        revisit must be one contiguous run in grid-linear order (the
+        paper's dc/dm discipline: leave a C block and come back, and the
+        flush order is undefined).
+
+Violations surface as structured :class:`ContractViolation` records —
+``python -m repro.analysis`` sweeps them over the backend registry
+(docs/analysis.md), ``plan(validate=True)`` gates auto-mode block choices
+(core/plan.py), and tests/test_analysis.py's mutation suite proves each
+defect class is actually caught.
+
+This module is dependency-light on purpose (dataclasses + numpy): kernel
+modules import it at module scope to register their contracts without
+dragging in anything beyond what they already load.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Callable, Dict, FrozenSet, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+__all__ = [
+    "Precondition", "OperandSpec", "KernelContract",
+    "ContractViolation", "ContractViolationError",
+    "check_contract", "require",
+    "register_contract", "registered_contracts", "get_contract_builder",
+    "load_builtin_contracts",
+]
+
+# Kinds a ContractViolation can carry (the violation catalog —
+# docs/analysis.md#violation-catalog documents each with its defect class).
+VIOLATION_KINDS = (
+    "precondition",    # a structured divisibility/shape guard failed
+    "grid",            # degenerate grid: an output exists but never runs
+    "bounds",          # an index map exceeded the blocked array
+    "coverage",        # an input/output block is never fetched/written
+    "write_race",      # output block aliased across non-reduction axes
+    "revisit_order",   # output revisit is not one contiguous sequential run
+    "semantics",       # a reduction/carry axis is declared "parallel"
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class Precondition:
+    """One structured kernel precondition, evaluated at contract build.
+
+    The kernel modules build these from the same predicates their runtime
+    ``ValueError`` guards raise (:func:`require`), so the static checker
+    and the runtime cite identical conditions.
+    """
+
+    name: str          # short predicate, e.g. "H % Hkv == 0"
+    ok: bool
+    message: str       # full diagnostic with the concrete values
+
+    @classmethod
+    def check(cls, name: str, ok: bool, message: str) -> "Precondition":
+        return cls(name=name, ok=bool(ok), message=message)
+
+
+def require(*preconditions: Precondition) -> None:
+    """Raise ``ValueError`` listing every failed precondition.
+
+    The runtime twin of the static pass: kernels call this where a bare
+    ``assert`` used to sit (asserts vanish under ``python -O``; these
+    don't), and their contract builders hand the same Precondition tuple
+    to the checker.
+    """
+    bad = [p for p in preconditions if not p.ok]
+    if bad:
+        raise ValueError("; ".join(p.message for p in bad))
+
+
+@dataclasses.dataclass(frozen=True)
+class OperandSpec:
+    """One kernel operand: blocked geometry + the kernel's index map.
+
+    nblocks        blocked-array shape — blocks per dim, the index map's
+                   codomain (bounds: 0 <= idx[d] < nblocks[d]).
+    block_shape    elements per block per dim (documentation + divisibility
+                   context in reports; the checker works at block
+                   granularity — padding to block multiples is the
+                   kernels' own precondition).
+    index_map      the callable handed to ``pl.BlockSpec`` (grid indices →
+                   block indices). Paged operands close over the concrete
+                   block table, exactly like the kernel's scalar-prefetch
+                   lambda.
+    role           "input" | "output".
+    reduction_axes grid axes along which an *output* block may legally be
+                   revisited (the accumulation stream; e.g. the GEMM K
+                   axis). Inputs ignore this.
+    expected_blocks  when set, coverage requires exactly this set of block
+                   indices to be touched instead of the full cartesian
+                   product — the paged pool's contract, where distractor
+                   pages are intentionally never fetched.
+    check_coverage False skips the coverage pass for this operand (e.g.
+                   scalar-prefetch operands the grid consumes wholesale).
+    """
+
+    name: str
+    role: str
+    nblocks: Tuple[int, ...]
+    block_shape: Tuple[int, ...]
+    index_map: Callable[..., Tuple[int, ...]]
+    reduction_axes: Tuple[int, ...] = ()
+    expected_blocks: Optional[FrozenSet[Tuple[int, ...]]] = None
+    check_coverage: bool = True
+
+    def __post_init__(self):
+        if self.role not in ("input", "output"):
+            raise ValueError(f"operand role must be input/output, "
+                             f"got {self.role!r}")
+        if len(self.nblocks) != len(self.block_shape):
+            raise ValueError(
+                f"operand {self.name!r}: nblocks rank {len(self.nblocks)} "
+                f"!= block_shape rank {len(self.block_shape)}")
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelContract:
+    """The declarative dataflow mapping of one kernel instance.
+
+    grid                 the pallas grid (already concrete).
+    dimension_semantics  "parallel"/"arbitrary" per grid axis, exactly as
+                         handed to the TPU compiler params.
+    sequential_axes      grid axes that carry VMEM state across steps
+                         (accumulators, the SSD chunk scan) and therefore
+                         must be "arbitrary" — checked even when no output
+                         block is revisited along them.
+    preconditions        the structured guards (see :class:`Precondition`).
+    """
+
+    kernel: str
+    grid: Tuple[int, ...]
+    operands: Tuple[OperandSpec, ...]
+    dimension_semantics: Tuple[str, ...]
+    sequential_axes: Tuple[int, ...] = ()
+    preconditions: Tuple[Precondition, ...] = ()
+    description: str = ""
+
+    def __post_init__(self):
+        if len(self.dimension_semantics) != len(self.grid):
+            raise ValueError(
+                f"contract {self.kernel!r}: {len(self.grid)} grid axes but "
+                f"{len(self.dimension_semantics)} dimension semantics")
+
+    def outputs(self) -> Tuple[OperandSpec, ...]:
+        return tuple(op for op in self.operands if op.role == "output")
+
+
+@dataclasses.dataclass(frozen=True)
+class ContractViolation:
+    """One structured defect found by the static pass."""
+
+    kernel: str
+    kind: str                          # one of VIOLATION_KINDS
+    detail: str
+    operand: Optional[str] = None
+    grid_point: Optional[Tuple[int, ...]] = None
+
+    def __str__(self) -> str:
+        loc = f" operand={self.operand}" if self.operand else ""
+        at = f" at grid{self.grid_point}" if self.grid_point else ""
+        return f"[{self.kind}] {self.kernel}{loc}{at}: {self.detail}"
+
+
+class ContractViolationError(ValueError):
+    """Raised by callers that want violations to be fatal (plan validate)."""
+
+    def __init__(self, violations: Sequence[ContractViolation]):
+        self.violations = tuple(violations)
+        super().__init__(
+            f"{len(self.violations)} contract violation(s):\n  "
+            + "\n  ".join(str(v) for v in self.violations))
+
+
+# Exhaustive enumeration is the point — but guard against a pathological
+# contract (a serving-scale grid) locking up the analysis run.
+MAX_GRID_POINTS = 1 << 20
+
+
+def _grid_points(grid: Tuple[int, ...]) -> np.ndarray:
+    """All grid points in TPU execution order (row-major, last axis
+    innermost) as an (n_points, rank) int array."""
+    return np.stack(np.meshgrid(*[np.arange(g) for g in grid],
+                                indexing="ij"),
+                    axis=-1).reshape(-1, len(grid))
+
+
+def check_contract(contract: KernelContract, *,
+                   max_grid_points: int = MAX_GRID_POINTS,
+                   ) -> List[ContractViolation]:
+    """Statically verify one contract; returns every violation found.
+
+    Nothing is executed: the checker walks the grid exactly as the Mosaic
+    pipeline would, evaluates each operand's index map at every point, and
+    compares the resulting fetch/write pattern against the declared
+    dataflow. An empty list is the proof obligation every registered
+    kernel must meet (python -m repro.analysis).
+    """
+    v: List[ContractViolation] = []
+    name = contract.kernel
+
+    # -- preconditions: if the declared guards fail, the geometry below is
+    # meaningless — report them and stop (the kernel would have raised).
+    for p in contract.preconditions:
+        if not p.ok:
+            v.append(ContractViolation(name, "precondition",
+                                       f"{p.name}: {p.message}"))
+    if v:
+        return v
+
+    # -- grid sanity: a zero-extent axis means the flush step never runs —
+    # outputs would be returned uninitialized (the PR 7 nb==0 regression).
+    if any(g == 0 for g in contract.grid) and contract.outputs():
+        v.append(ContractViolation(
+            name, "grid",
+            f"grid {contract.grid} has a zero-extent axis but the kernel "
+            f"has outputs: the flush step never runs and the output "
+            f"buffer is returned uninitialized"))
+        return v
+
+    n_points = int(np.prod([max(g, 1) for g in contract.grid], dtype=np.int64))
+    if n_points > max_grid_points:
+        raise ValueError(
+            f"contract {name!r}: grid {contract.grid} has {n_points} points "
+            f"(> {max_grid_points}); check a reduced shape — the contract "
+            f"is shape-generic, the enumeration is not")
+
+    # -- declared semantics: reduction/carry axes must be sequential.
+    seq_axes = set(contract.sequential_axes)
+    for op in contract.operands:
+        if op.role == "output":
+            seq_axes.update(op.reduction_axes)
+    for ax in sorted(seq_axes):
+        if ax >= len(contract.grid):
+            v.append(ContractViolation(
+                name, "semantics",
+                f"declared sequential/reduction axis {ax} is outside the "
+                f"{len(contract.grid)}-axis grid"))
+        elif contract.dimension_semantics[ax] != "arbitrary":
+            v.append(ContractViolation(
+                name, "semantics",
+                f"grid axis {ax} carries accumulation/state but is "
+                f"declared {contract.dimension_semantics[ax]!r}; a "
+                f"parallel axis gives the compiler license to reorder "
+                f"revisits — it must be 'arbitrary'"))
+
+    points = _grid_points(contract.grid)
+
+    for op in contract.operands:
+        rank = len(op.nblocks)
+        touched: Dict[Tuple[int, ...], List[int]] = {}
+        bounds_bad = 0
+        for step, pt in enumerate(points):
+            gp = tuple(int(x) for x in pt)
+            idx = op.index_map(*gp)
+            if not isinstance(idx, tuple):
+                idx = (idx,)
+            idx = tuple(int(i) for i in idx)
+            if len(idx) != rank:
+                v.append(ContractViolation(
+                    name, "bounds",
+                    f"index map returned rank {len(idx)} for a rank-{rank} "
+                    f"blocked array", operand=op.name, grid_point=gp))
+                return v  # geometry broken; everything below is noise
+            if any(i < 0 or i >= n for i, n in zip(idx, op.nblocks)):
+                bounds_bad += 1
+                if bounds_bad <= 3:     # cap the per-operand spam
+                    v.append(ContractViolation(
+                        name, "bounds",
+                        f"index map hit block {idx}, outside the blocked "
+                        f"array {op.nblocks} (block_shape="
+                        f"{op.block_shape})", operand=op.name,
+                        grid_point=gp))
+                continue
+            touched.setdefault(idx, []).append(step)
+        if bounds_bad > 3:
+            v.append(ContractViolation(
+                name, "bounds",
+                f"... and {bounds_bad - 3} more out-of-bounds fetches",
+                operand=op.name))
+        if bounds_bad:
+            continue                    # coverage/races would double-count
+
+        # -- coverage
+        if op.check_coverage:
+            required = (op.expected_blocks if op.expected_blocks is not None
+                        else None)
+            if required is None:
+                total = int(np.prod(op.nblocks, dtype=np.int64))
+                if len(touched) != total:
+                    missing = _first_missing(op.nblocks, touched)
+                    verb = ("written" if op.role == "output" else "fetched")
+                    v.append(ContractViolation(
+                        name, "coverage",
+                        f"{total - len(touched)} of {total} blocks never "
+                        f"{verb} (first missing: {missing})",
+                        operand=op.name))
+            else:
+                missing_set = required - set(touched)
+                if missing_set:
+                    verb = ("written" if op.role == "output" else "fetched")
+                    v.append(ContractViolation(
+                        name, "coverage",
+                        f"{len(missing_set)} required blocks never {verb} "
+                        f"(first: {sorted(missing_set)[0]})",
+                        operand=op.name))
+
+        # -- write races + revisit order (outputs only)
+        if op.role != "output":
+            continue
+        red = set(op.reduction_axes)
+        for blk, steps in touched.items():
+            if len(steps) == 1:
+                continue
+            pts = points[steps]
+            varying = {ax for ax in range(len(contract.grid))
+                       if len(np.unique(pts[:, ax])) > 1}
+            illegal = varying - red
+            if illegal:
+                v.append(ContractViolation(
+                    name, "write_race",
+                    f"block {blk} is written from {len(steps)} grid points "
+                    f"that differ along non-reduction axes "
+                    f"{sorted(illegal)} (declared reduction axes: "
+                    f"{sorted(red)}) — concurrent grid points would race "
+                    f"on the same output window",
+                    operand=op.name))
+                continue
+            lo, hi = steps[0], steps[-1]
+            if hi - lo + 1 != len(steps):
+                v.append(ContractViolation(
+                    name, "revisit_order",
+                    f"block {blk} is revisited non-contiguously (grid-"
+                    f"linear steps {steps[:4]}...): the block is flushed, "
+                    f"left, and re-entered — the dc/dm revisit order must "
+                    f"be one sequential run",
+                    operand=op.name))
+    return v
+
+
+def _first_missing(nblocks: Tuple[int, ...], touched) -> Tuple[int, ...]:
+    for idx in np.ndindex(*nblocks):
+        if tuple(int(i) for i in idx) not in touched:
+            return tuple(int(i) for i in idx)
+    return ()
+
+
+# ---------------------------------------------------------------------------
+# Registry: kernels register a builder; the sweep/CLI resolves by name
+# ---------------------------------------------------------------------------
+
+_CONTRACTS: Dict[str, Callable[..., KernelContract]] = {}
+
+# Modules whose import registers the built-in contracts (each kernel
+# registers its own builder at import time, next to its index maps).
+_BUILTIN_MODULES = (
+    "repro.core.blockflow",
+    "repro.kernels.matrixflow_gemm",
+    "repro.kernels.flash_attention",
+    "repro.kernels.paged_attention",
+    "repro.kernels.ssd_scan",
+)
+
+
+def register_contract(name: str, *, overwrite: bool = False):
+    """Decorator: register ``fn(**shape_kwargs) -> KernelContract``."""
+    def deco(fn):
+        if name in _CONTRACTS and not overwrite:
+            raise ValueError(f"contract {name!r} already registered")
+        _CONTRACTS[name] = fn
+        return fn
+    return deco
+
+
+def load_builtin_contracts() -> None:
+    """Import every kernel module so its contract builder registers."""
+    for mod in _BUILTIN_MODULES:
+        importlib.import_module(mod)
+
+
+def get_contract_builder(name: str) -> Callable[..., KernelContract]:
+    if name not in _CONTRACTS:
+        load_builtin_contracts()
+    if name not in _CONTRACTS:
+        raise ValueError(f"unknown kernel contract {name!r}; registered: "
+                         f"{sorted(_CONTRACTS)}")
+    return _CONTRACTS[name]
+
+
+def registered_contracts() -> Tuple[str, ...]:
+    load_builtin_contracts()
+    return tuple(sorted(_CONTRACTS))

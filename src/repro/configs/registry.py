@@ -3,9 +3,8 @@ from __future__ import annotations
 
 import dataclasses
 import importlib
-from typing import Dict, Optional, Tuple
+from typing import Dict
 
-import jax.numpy as jnp
 
 from repro.models.config import ModelConfig, reduced
 

@@ -20,7 +20,84 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.analysis.kernel_contracts import (KernelContract, OperandSpec,
+                                             Precondition, register_contract,
+                                             require)
 from repro.core import layout as L
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 1's block addressing, stated once: the fori_loop body below
+# walks these functions, and the registered KernelContract hands the same
+# callables to the static checker. The conceptual grid is
+# (i, j, k) = (nbm, nbn, nbk) with the K-stream innermost and sequential.
+# ---------------------------------------------------------------------------
+
+BLOCKFLOW_DIMENSION_SEMANTICS = ("parallel", "parallel", "arbitrary")
+
+
+def _a_block_index(i, j, k):
+    return (i, k)
+
+
+def _b_block_index(i, j, k):
+    return (j, k)
+
+
+def _c_block_index(i, j, k):
+    return (i, j)
+
+
+def blockflow_preconditions(a_shape, b, blk, b_shape):
+    """Structured entry guards shared between the runtime ``require`` and
+    the static contract (``b`` may be a 4-D block-major array)."""
+    M, K = a_shape
+    pre = []
+    if getattr(b, "ndim", 2) == 4:
+        pre.append(Precondition.check(
+            "block-major b metadata",
+            blk is not None and b_shape is not None,
+            "block-major b needs an explicit blk and b_shape=(K, N) giving "
+            "the logical (unpadded) dims"))
+        if blk is not None:
+            pre.append(Precondition.check(
+                "b blocks match layout",
+                tuple(b.shape[-2:]) == (blk.bk, blk.bn),
+                f"block-major b {tuple(b.shape)} carries "
+                f"({b.shape[-2]}, {b.shape[-1]}) blocks but the BlockLayout "
+                f"says (bk={blk.bk}, bn={blk.bn})"))
+        K2 = b_shape[0] if b_shape is not None else K
+    else:
+        K2 = b.shape[0]
+    pre.append(Precondition.check(
+        "A/B contraction agreement", K == K2,
+        f"a has K={K} columns but b has K={K2} rows; C = A @ B needs the "
+        f"contraction dims to agree"))
+    return tuple(pre)
+
+
+@register_contract("blockflow")
+def blockflow_contract(*, nbm, nbn, nbk) -> KernelContract:
+    """Contract of :func:`block_matmul`'s dataflow (Algorithm 1).
+
+    The software rendering has no pallas grid, but the schedule is the
+    same: output block (i, j) accumulates along k — the declared reduction
+    axis — and every A/B block is streamed exactly where the paper's
+    dc/dm orders place it.
+    """
+    operands = (
+        OperandSpec("a_bm", "input", (nbm, nbk), (1, 1), _a_block_index),
+        OperandSpec("b_bm", "input", (nbn, nbk), (1, 1), _b_block_index),
+        OperandSpec("c_bm", "output", (nbm, nbn), (1, 1), _c_block_index,
+                    reduction_axes=(2,)),
+    )
+    return KernelContract(
+        kernel="blockflow",
+        grid=(nbm, nbn, nbk),
+        operands=operands,
+        dimension_semantics=BLOCKFLOW_DIMENSION_SEMANTICS,
+        description="paper Algorithm 1, pure-JAX rendering (fori_loop "
+                    "K-stream)")
 
 
 def acc_dtype_for(dtype: jnp.dtype) -> jnp.dtype:
@@ -66,14 +143,8 @@ def block_matmul(
     core/quant.py). With scales present the default out_dtype is float32.
     """
     M, K = a.shape
-    if b.ndim == 4:
-        assert blk is not None and b_shape is not None, \
-            "block-major b needs an explicit blk and b_shape=(K, N)"
-        assert b.shape[-2:] == (blk.bk, blk.bn), (b.shape, blk)
-        K2, N = b_shape
-    else:
-        K2, N = b.shape
-    assert K == K2, (a.shape, b.shape if b.ndim != 4 else b_shape)
+    require(*blockflow_preconditions(a.shape, b, blk, b_shape))
+    N = b_shape[1] if b.ndim == 4 else b.shape[1]
     if blk is None:
         blk = L.choose_layout(M, N, K, a.dtype)
     acc_dtype = jnp.dtype(acc_dtype or acc_dtype_for(a.dtype))
@@ -97,12 +168,14 @@ def block_matmul(
         c0 = jnp.zeros((blk.bm, blk.bn), acc_dtype)
 
         def body(k, c_blk):
+            ai, ak = _a_block_index(i, j, k)
+            bj, bk_ = _b_block_index(i, j, k)
             a_blk = jax.lax.dynamic_index_in_dim(
-                jax.lax.dynamic_index_in_dim(a_bm, i, 0, keepdims=False),
-                k, 0, keepdims=False)
+                jax.lax.dynamic_index_in_dim(a_bm, ai, 0, keepdims=False),
+                ak, 0, keepdims=False)
             b_blk = jax.lax.dynamic_index_in_dim(
-                jax.lax.dynamic_index_in_dim(b_bm, j, 0, keepdims=False),
-                k, 0, keepdims=False)
+                jax.lax.dynamic_index_in_dim(b_bm, bj, 0, keepdims=False),
+                bk_, 0, keepdims=False)
             return multi_acc(a_blk.astype(acc_dtype), b_blk.astype(acc_dtype), c_blk)
 
         c_blk = jax.lax.fori_loop(0, nbk, body, c0)

@@ -24,12 +24,10 @@ returns the paper-exact block geometry where a block is one 4 KB page.
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 PAGE_BYTES = 4096          # the paper's memory-page transfer unit
 MXU_DIM = 128              # TPU MXU systolic dimension (paper's SA is 16×16)

@@ -419,10 +419,47 @@ def _plan_cached(M: int, N: int, K: int, dtype: str,
 
 
 def plan(M: int, N: int, K: int, dtype: Any,
-         policy: Optional[GemmPolicy] = None) -> ExecutionPlan:
-    """Resolve ``policy`` for one GEMM problem; memoized on all arguments."""
-    return _plan_cached(int(M), int(N), int(K), jnp.dtype(dtype).name,
-                        policy if policy is not None else GemmPolicy())
+         policy: Optional[GemmPolicy] = None, *,
+         validate: bool = False) -> ExecutionPlan:
+    """Resolve ``policy`` for one GEMM problem; memoized on all arguments.
+
+    ``validate=True`` additionally runs the resolved block choice through
+    the static contract checker (repro/analysis): the auto-mode layout is
+    instantiated as the kernel's registered :class:`KernelContract` and
+    checked for coverage/bounds/race violations before anything executes.
+    Raises :class:`~repro.analysis.kernel_contracts.ContractViolationError`
+    on the first bad plan — the gate ``python -m repro.analysis`` sweeps.
+    """
+    p = _plan_cached(int(M), int(N), int(K), jnp.dtype(dtype).name,
+                     policy if policy is not None else GemmPolicy())
+    if validate:
+        _validate_plan(p)
+    return p
+
+
+def _validate_plan(p: ExecutionPlan) -> None:
+    """Check a resolved plan's block geometry against the kernel contract
+    it will dispatch to (lazy import: analysis is optional at runtime)."""
+    if p.layout is None:
+        return                      # layout-free backend (xla): no contract
+    from repro.analysis.kernel_contracts import (ContractViolationError,
+                                                 check_contract,
+                                                 get_contract_builder)
+    blk = p.layout
+    nbm = -(-p.M // blk.bm)
+    nbn = -(-p.N // blk.bn)
+    nbk = -(-p.K // blk.bk)
+    if p.backend == "blockflow":
+        contract = get_contract_builder("blockflow")(
+            nbm=nbm, nbn=nbn, nbk=nbk)
+    else:
+        contract = get_contract_builder("matrixflow_gemm")(
+            a_shape=(nbm, nbk, blk.bm, blk.bk),
+            b_shape=(nbn, nbk, blk.bk, blk.bn),
+            blk=blk, fused=p.policy.weight_dtype == "int8")
+    violations = check_contract(contract)
+    if violations:
+        raise ContractViolationError(violations)
 
 
 def plan_cache_info():

@@ -6,7 +6,7 @@ layernorm / residual / transpose).
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Optional
 
 from repro.core.sysmodel import Elementwise, Gemm, Workload
 

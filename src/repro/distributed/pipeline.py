@@ -19,13 +19,12 @@ Design notes:
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 
 def stack_for_stages(layer_params, n_stages: int):

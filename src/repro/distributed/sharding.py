@@ -19,7 +19,6 @@ import threading
 from typing import Dict, Optional, Sequence, Tuple, Union
 
 import jax
-import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.models.module import AxisLeaf, is_axis_leaf

@@ -54,7 +54,95 @@ except ImportError:  # pragma: no cover
     pltpu = None
     _CompilerParams = None
 
+from repro.analysis.kernel_contracts import (KernelContract, OperandSpec,
+                                             Precondition, register_contract,
+                                             require)
+
 NEG_INF = -1e30
+
+# ---------------------------------------------------------------------------
+# The dataflow mapping, stated once: these index maps are handed to
+# pl.BlockSpec below AND cited by the registered KernelContract, so the
+# static checker verifies the very callables the kernel executes.
+# ---------------------------------------------------------------------------
+
+ATTN_DIMENSION_SEMANTICS = ("parallel", "parallel", "parallel", "arbitrary")
+
+
+def _qpos_index_map(b, h, i, j):
+    return (b, i, 0)
+
+
+def _kvlen_index_map(b, h, i, j):
+    return (b, 0)
+
+
+def _q_index_map(b, h, i, j):
+    return (b, h, i, 0)
+
+
+def _make_kv_index_map(rep: int):
+    """K/V fetch under GQA: query head h reads kv head h // rep — the
+    BlockSpec expression of grouped heads (no HBM repeat)."""
+    def _kv_index_map(b, h, i, j):
+        return (b, h // rep, j, 0)
+    return _kv_index_map
+
+
+def _o_index_map(b, h, i, j):
+    return (b, h, i, 0)
+
+
+def attention_preconditions(H: int, Hkv: int):
+    """Structured entry guards shared between the runtime ``require`` and
+    the static contract."""
+    return (
+        Precondition.check(
+            "GQA head divisibility", Hkv > 0 and H % Hkv == 0,
+            f"H={H} query heads must be an integer multiple of Hkv={Hkv} "
+            f"kv heads (GQA groups of H // Hkv); got remainder "
+            f"{H % Hkv if Hkv else 'undefined'}"),
+    )
+
+
+@register_contract("flash_attention")
+def flash_attention_contract(*, B, H, Hkv, Sq, Sk, D, Dv,
+                             block_q: int = 128,
+                             block_k: int = 128) -> KernelContract:
+    """Contract of :func:`flash_attention` for one logical shape.
+
+    Mirrors the kernel's own derivation: bq/bk clamp to Sq/Sk, the padded
+    extents round up to block multiples, and the output o is revisited
+    along grid axis 3 (the key stream) — the declared reduction axis.
+    K/V coverage under GQA is partial by construction (each kv head is
+    fetched rep times; every (b, hkv, j) block is still touched).
+    """
+    rep = H // Hkv if Hkv and H % Hkv == 0 else 1
+    bq, bk = min(block_q, Sq), min(block_k, Sk)
+    pq, pk = (-Sq) % bq, (-Sk) % bk
+    nq, nk = (Sq + pq) // bq, (Sk + pk) // bk
+    kv_map = _make_kv_index_map(rep)
+    operands = (
+        OperandSpec("q_positions", "input", (B, nq, 1), (1, bq, 1),
+                    _qpos_index_map, expected_blocks=None),
+        OperandSpec("kv_valid_len", "input", (B, 1), (1, 1),
+                    _kvlen_index_map),
+        OperandSpec("q", "input", (B, H, nq, 1), (1, 1, bq, D),
+                    _q_index_map),
+        OperandSpec("k", "input", (B, Hkv, nk, 1), (1, 1, bk, D),
+                    kv_map),
+        OperandSpec("v", "input", (B, Hkv, nk, 1), (1, 1, bk, Dv),
+                    kv_map),
+        OperandSpec("o", "output", (B, H, nq, 1), (1, 1, bq, Dv),
+                    _o_index_map, reduction_axes=(3,)),
+    )
+    return KernelContract(
+        kernel="flash_attention",
+        grid=(B, H, nq, nk),
+        operands=operands,
+        dimension_semantics=ATTN_DIMENSION_SEMANTICS,
+        preconditions=attention_preconditions(H, Hkv),
+        description="fused online-softmax attention, K innermost")
 
 
 # ---------------------------------------------------------------------------
@@ -159,7 +247,7 @@ def flash_attention(
 ) -> jax.Array:
     B, H, Sq, D = q.shape
     _, Hkv, Sk, Dv = v.shape
-    assert H % Hkv == 0, (H, Hkv)
+    require(*attention_preconditions(H, Hkv))
     rep = H // Hkv
     scale = scale if scale is not None else 1.0 / math.sqrt(D)
     bq, bk = min(block_q, Sq), min(block_k, Sk)
@@ -198,21 +286,19 @@ def flash_attention(
     kwargs = {}
     if _CompilerParams is not None and not interpret:
         kwargs["compiler_params"] = _CompilerParams(
-            dimension_semantics=("parallel", "parallel", "parallel",
-                                 "arbitrary"))
+            dimension_semantics=ATTN_DIMENSION_SEMANTICS)
+    kv_index_map = _make_kv_index_map(rep)
     out = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((1, bq, 1), lambda b, h, i, j: (b, i, 0)),
-            pl.BlockSpec((1, 1), lambda b, h, i, j: (b, 0)),
-            pl.BlockSpec((1, 1, bq, D), lambda b, h, i, j: (b, h, i, 0)),
-            pl.BlockSpec((1, 1, bk, D),
-                         lambda b, h, i, j, rep=rep: (b, h // rep, j, 0)),
-            pl.BlockSpec((1, 1, bk, Dv),
-                         lambda b, h, i, j, rep=rep: (b, h // rep, j, 0)),
+            pl.BlockSpec((1, bq, 1), _qpos_index_map),
+            pl.BlockSpec((1, 1), _kvlen_index_map),
+            pl.BlockSpec((1, 1, bq, D), _q_index_map),
+            pl.BlockSpec((1, 1, bk, D), kv_index_map),
+            pl.BlockSpec((1, 1, bk, Dv), kv_index_map),
         ],
-        out_specs=pl.BlockSpec((1, 1, bq, Dv), lambda b, h, i, j: (b, h, i, 0)),
+        out_specs=pl.BlockSpec((1, 1, bq, Dv), _o_index_map),
         out_shape=jax.ShapeDtypeStruct((B, H, Sq_p, Dv), q.dtype),
         scratch_shapes=[
             pltpu.VMEM((bq, 1), jnp.float32),

@@ -34,6 +34,9 @@ except ImportError:  # pragma: no cover
     pltpu = None
     _CompilerParams = None
 
+from repro.analysis.kernel_contracts import (KernelContract, OperandSpec,
+                                             Precondition, register_contract,
+                                             require)
 from repro.core import layout as L
 
 
@@ -41,6 +44,94 @@ def _acc_dtype(dtype) -> jnp.dtype:
     if jnp.issubdtype(jnp.dtype(dtype), jnp.integer):
         return jnp.dtype(jnp.int32)
     return jnp.dtype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# The dataflow mapping, stated once: these index maps are handed to
+# pl.BlockSpec below AND cited by the registered KernelContract, so the
+# static checker (repro/analysis/kernel_contracts.py) verifies the very
+# callables the kernel executes — coverage, bounds, and the K-revisit
+# discipline of the paper's Algorithm 1.
+# ---------------------------------------------------------------------------
+
+GEMM_DIMENSION_SEMANTICS = ("parallel", "parallel", "arbitrary")
+
+
+def _a_index_map(i, j, k):
+    return (i, k, 0, 0)
+
+
+def _b_index_map(i, j, k):
+    return (j, k, 0, 0)
+
+
+def _c_index_map(i, j, k):
+    return (i, j, 0, 0)
+
+
+def _sa_index_map(i, j, k):
+    return (i, 0)
+
+
+def _sb_index_map(i, j, k):
+    return (0, j)
+
+
+def gemm_preconditions(a_shape, b_shape, blk: L.BlockLayout):
+    """The kernel's structured entry guards, shared verbatim between the
+    runtime ``require`` below and the static contract."""
+    nbm, nbk, bm, bk = a_shape
+    nbn, nbk2, bk2, bn = b_shape
+    return (
+        Precondition.check(
+            "A/B K-stream agreement",
+            (nbk, bk) == (nbk2, bk2),
+            f"block-major operands disagree on the K stream: a_bm "
+            f"{tuple(a_shape)} walks {nbk} blocks of bk={bk}, b_bm "
+            f"{tuple(b_shape)} walks {nbk2} blocks of bk={bk2}"),
+        Precondition.check(
+            "blocks match layout",
+            (bm, bn, bk) == (blk.bm, blk.bn, blk.bk),
+            f"operand blocks (bm={bm}, bn={bn}, bk={bk}) do not match the "
+            f"BlockLayout (bm={blk.bm}, bn={blk.bn}, bk={blk.bk}); "
+            f"re-layout with core.layout.to_block_major_* under this blk"),
+    )
+
+
+@register_contract("matrixflow_gemm")
+def gemm_contract(*, a_shape, b_shape, blk: L.BlockLayout,
+                  fused: bool = False) -> KernelContract:
+    """Contract of :func:`matrixflow_gemm_block_major` for one instance.
+
+    ``a_shape``/``b_shape`` are the block-major operand shapes
+    ``(nbm, nbk, bm, bk)`` / ``(nbn, nbk, bk, bn)``; ``fused`` adds the
+    W8A8 dequant scale panels. The C output is revisited along grid axis 2
+    (the K stream) — the declared reduction axis the checker verifies.
+    """
+    nbm, nbk, bm, bk = a_shape
+    nbn, _, _, bn = b_shape
+    operands = [
+        OperandSpec("a_bm", "input", (nbm, nbk, 1, 1), (1, 1, bm, bk),
+                    _a_index_map),
+        OperandSpec("b_bm", "input", (nbn, nbk, 1, 1), (1, 1, bk, bn),
+                    _b_index_map),
+        OperandSpec("c_bm", "output", (nbm, nbn, 1, 1), (1, 1, bm, bn),
+                    _c_index_map, reduction_axes=(2,)),
+    ]
+    if fused:
+        operands += [
+            OperandSpec("scale_a", "input", (nbm, 1), (bm, 1),
+                        _sa_index_map),
+            OperandSpec("scale_b", "input", (1, nbn), (1, bn),
+                        _sb_index_map),
+        ]
+    return KernelContract(
+        kernel="matrixflow_gemm",
+        grid=(nbm, nbn, nbk),
+        operands=tuple(operands),
+        dimension_semantics=GEMM_DIMENSION_SEMANTICS,
+        preconditions=gemm_preconditions(a_shape, b_shape, blk),
+        description="paper Algorithm 1 on the TPU grid (K innermost)")
 
 
 def _kernel(a_ref, b_ref, o_ref, acc_ref, *, nbk: int, acc_dtype):
@@ -111,9 +202,8 @@ def matrixflow_gemm_block_major(
     HBM write. With scales present the default out_dtype is float32.
     """
     nbm, nbk, bm, bk = a_bm.shape
-    nbn, nbk2, bk2, bn = b_bm.shape
-    assert (nbk, bk) == (nbk2, bk2), (a_bm.shape, b_bm.shape)
-    assert (bm, bn, bk) == (blk.bm, blk.bn, blk.bk)
+    nbn, _, _, bn = b_bm.shape
+    require(*gemm_preconditions(a_bm.shape, b_bm.shape, blk))
     acc_dtype = jnp.dtype(acc_dtype or _acc_dtype(a_bm.dtype))
     fused = scale_a is not None or scale_b is not None
     out_dtype = jnp.dtype(out_dtype or
@@ -123,13 +213,13 @@ def matrixflow_gemm_block_major(
     kwargs = {}
     if _CompilerParams is not None and not interpret:
         kwargs["compiler_params"] = _CompilerParams(
-            dimension_semantics=("parallel", "parallel", "arbitrary"),
+            dimension_semantics=GEMM_DIMENSION_SEMANTICS,
         )
     scratch = [pltpu.VMEM((bm, bn), acc_dtype)]
 
     in_specs = [
-        pl.BlockSpec((1, 1, bm, bk), lambda i, j, k: (i, k, 0, 0)),
-        pl.BlockSpec((1, 1, bk, bn), lambda i, j, k: (j, k, 0, 0)),
+        pl.BlockSpec((1, 1, bm, bk), _a_index_map),
+        pl.BlockSpec((1, 1, bk, bn), _b_index_map),
     ]
     operands = [a_bm, b_bm]
     if fused:
@@ -142,8 +232,8 @@ def matrixflow_gemm_block_major(
               else jnp.pad(scale_b.astype(jnp.float32),
                            (0, nbn * bn - scale_b.shape[0])))
         in_specs += [
-            pl.BlockSpec((bm, 1), lambda i, j, k: (i, 0)),
-            pl.BlockSpec((1, bn), lambda i, j, k: (0, j)),
+            pl.BlockSpec((bm, 1), _sa_index_map),
+            pl.BlockSpec((1, bn), _sb_index_map),
         ]
         operands += [sa.reshape(nbm * bm, 1), sb.reshape(1, nbn * bn)]
         kernel = functools.partial(_kernel_fused_dequant, nbk=nbk,
@@ -155,7 +245,7 @@ def matrixflow_gemm_block_major(
         kernel,
         grid=grid,
         in_specs=in_specs,
-        out_specs=pl.BlockSpec((1, 1, bm, bn), lambda i, j, k: (i, j, 0, 0)),
+        out_specs=pl.BlockSpec((1, 1, bm, bn), _c_index_map),
         out_shape=jax.ShapeDtypeStruct((nbm, nbn, bm, bn), out_dtype),
         scratch_shapes=scratch,
         interpret=interpret,
@@ -185,7 +275,10 @@ def matrixflow_gemm(
     """
     M, K = a.shape
     K2, N = b.shape
-    assert K == K2
+    require(Precondition.check(
+        "A/B contraction agreement", K == K2,
+        f"a has K={K} columns but b has K={K2} rows; C = A @ B needs the "
+        f"contraction dims to agree (a {a.shape}, b {b.shape})"))
     if blk is None:
         blk = L.choose_layout(M, N, K, a.dtype, mode=mode)
     a_bm = L.to_block_major_a(a, blk.bm, blk.bk)

@@ -10,7 +10,6 @@ backends); tests call these directly for shape/dtype sweeps.
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax

@@ -40,6 +40,7 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 
 try:
@@ -50,9 +51,130 @@ except ImportError:  # pragma: no cover
     pltpu = None
     _CompilerParams = None
 
-from repro.kernels.flash_attention import (attention_block_flush,
+from repro.analysis.kernel_contracts import (KernelContract, OperandSpec,
+                                             Precondition, register_contract,
+                                             require)
+from repro.kernels.flash_attention import (ATTN_DIMENSION_SEMANTICS,
+                                           attention_block_flush,
                                            attention_block_init,
                                            attention_block_step)
+
+
+# ---------------------------------------------------------------------------
+# The dataflow mapping, stated once. All maps take the scalar-prefetch
+# signature (b, h, i, j, bt, kvl); the registered contract binds a concrete
+# block table and hands the checker the very callables pallas_call runs.
+# ---------------------------------------------------------------------------
+
+def _pg_qpos_index_map(b, h, i, j, bt, kvl):
+    return (b, i, 0)
+
+
+def _pg_q_index_map(b, h, i, j, bt, kvl):
+    return (b, i, h, 0)
+
+
+def _make_page_index_map(rep: int):
+    """The paged indirection: logical key block j of batch row b lives in
+    physical page ``bt[b, j]``; GQA folds the query head to kv head
+    h // rep. The block-table entry IS the index."""
+    def _page_index_map(b, h, i, j, bt, kvl):
+        return (bt[b, j], 0, h // rep, 0)
+    return _page_index_map
+
+
+def _make_page_scale_index_map(rep: int):
+    """Each int8 page's (1, 1) fp32 scale rides the same indirection."""
+    def _page_scale_index_map(b, h, i, j, bt, kvl):
+        return (bt[b, j], h // rep)
+    return _page_scale_index_map
+
+
+def _pg_o_index_map(b, h, i, j, bt, kvl):
+    return (b, i, h, 0)
+
+
+def paged_preconditions(H, Hkv, k_pages_shape, v_pages_shape, nb):
+    """Structured entry guards shared between runtime and static checker."""
+    P, ps, Hkv_v = v_pages_shape[0], v_pages_shape[1], v_pages_shape[2]
+    return (
+        Precondition.check(
+            "GQA head divisibility", Hkv > 0 and H % Hkv == 0,
+            f"H={H} query heads must be an integer multiple of Hkv={Hkv} "
+            f"kv heads"),
+        Precondition.check(
+            "K/V pool agreement",
+            tuple(k_pages_shape[:3]) == (P, ps, Hkv_v),
+            f"k_pages {tuple(k_pages_shape)} and v_pages "
+            f"{tuple(v_pages_shape)} disagree on (P, page_size, Hkv); the "
+            f"pools must be allocated as one paged cache"),
+        Precondition.check(
+            "populated block table", nb > 0,
+            f"block table has {nb} blocks: the grid's key axis would have "
+            f"zero extent and the flush step would never run (the caller "
+            f"must short-circuit nb == 0 to zeros)"),
+    )
+
+
+@register_contract("paged_attention")
+def paged_attention_contract(*, B, Sq, H, Hkv, D, Dv, P, page_size,
+                             block_tables, block_q: int = 128,
+                             quantized: bool = False) -> KernelContract:
+    """Contract of :func:`paged_attention` for one concrete block table.
+
+    ``block_tables`` is the actual (B, nb) int array: the checker evaluates
+    the kernel's scalar-prefetch index maps against it, so out-of-range
+    page indices surface as bounds violations and pool coverage narrows to
+    exactly the pages the table references (distractor pages are dead by
+    design). Output o is revisited along grid axis 3 (the key stream).
+    """
+    bt = np.asarray(block_tables, dtype=np.int64)
+    nb = bt.shape[1] if bt.ndim == 2 else 0
+    rep = H // Hkv if Hkv and H % Hkv == 0 else 1
+    ps = page_size
+    bq = min(block_q, Sq)
+    nq = (Sq + (-Sq) % bq) // bq
+    page_map = _make_page_index_map(rep)
+    scale_map = _make_page_scale_index_map(rep)
+
+    def bind(m):
+        # close over the concrete table, exactly like PrefetchScalarGridSpec
+        return lambda b, h, i, j: m(b, h, i, j, bt, None)
+
+    referenced = frozenset(
+        (int(bt[b, j]), 0, hk, 0)
+        for b in range(bt.shape[0]) for j in range(nb)
+        for hk in range(Hkv))
+    operands = [
+        OperandSpec("q_positions", "input", (B, nq, 1), (1, bq, 1),
+                    bind(_pg_qpos_index_map)),
+        OperandSpec("q", "input", (B, nq, H, 1), (1, bq, 1, D),
+                    bind(_pg_q_index_map)),
+        OperandSpec("k_pages", "input", (P, 1, Hkv, 1), (1, ps, 1, D),
+                    bind(page_map), expected_blocks=referenced),
+        OperandSpec("v_pages", "input", (P, 1, Hkv, 1), (1, ps, 1, Dv),
+                    bind(page_map), expected_blocks=referenced),
+        OperandSpec("o", "output", (B, nq, H, 1), (1, bq, 1, Dv),
+                    bind(_pg_o_index_map), reduction_axes=(3,)),
+    ]
+    if quantized:
+        scale_blocks = frozenset(
+            (p, hk) for (p, _z, hk, _w) in referenced)
+        operands += [
+            OperandSpec("k_scales", "input", (P, Hkv), (1, 1),
+                        bind(scale_map), expected_blocks=scale_blocks),
+            OperandSpec("v_scales", "input", (P, Hkv), (1, 1),
+                        bind(scale_map), expected_blocks=scale_blocks),
+        ]
+    k_shape = (P, ps, Hkv, D)
+    v_shape = (P, ps, Hkv, Dv)
+    return KernelContract(
+        kernel="paged_attention",
+        grid=(B, H, nq, nb),
+        operands=tuple(operands),
+        dimension_semantics=ATTN_DIMENSION_SEMANTICS,
+        preconditions=paged_preconditions(H, Hkv, k_shape, v_shape, nb),
+        description="block-table paged flash attention (scalar prefetch)")
 
 
 def _kernel(bt_ref, kvlen_ref, qpos_ref, q_ref, k_ref, v_ref, *rest,
@@ -137,8 +259,11 @@ def paged_attention(
     """
     B, Sq, H, D = q.shape
     P, ps, Hkv, Dv = v_pages.shape
-    assert H % Hkv == 0, (H, Hkv)
-    assert k_pages.shape[:3] == (P, ps, Hkv), (k_pages.shape, v_pages.shape)
+    nb_early = block_tables.shape[1]
+    pre = paged_preconditions(H, Hkv, k_pages.shape, v_pages.shape, nb_early)
+    # nb == 0 is legal here (short-circuited below); the other two guards
+    # are hard errors shared verbatim with the static contract.
+    require(*pre[:2])
     quantized = k_pages.dtype == jnp.int8
     if quantized != (v_pages.dtype == jnp.int8):
         raise ValueError(
@@ -160,7 +285,7 @@ def paged_attention(
     elif kv_scales is not None:
         raise ValueError(
             f"kv_scales given but pages are {k_pages.dtype}, not int8")
-    nb = block_tables.shape[1]
+    nb = nb_early
     if nb == 0:
         # Empty block table: no key block is visible (kv_valid_len is
         # clamped to nb * ps == 0 below), so every query row is fully
@@ -194,33 +319,26 @@ def paged_attention(
     kernel = functools.partial(_kernel, scale=scale, causal=causal,
                                soft_cap=soft_cap, bq=bq, ps=ps, nb=nb,
                                quantized=quantized)
+    page_index_map = _make_page_index_map(rep)
     in_specs = [
-        pl.BlockSpec((1, bq, 1), lambda b, h, i, j, bt, kvl: (b, i, 0)),
-        pl.BlockSpec((1, bq, 1, D),
-                     lambda b, h, i, j, bt, kvl: (b, i, h, 0)),
+        pl.BlockSpec((1, bq, 1), _pg_qpos_index_map),
+        pl.BlockSpec((1, bq, 1, D), _pg_q_index_map),
         # the paged indirection: the block table entry IS the index
-        pl.BlockSpec((1, ps, 1, D),
-                     lambda b, h, i, j, bt, kvl, rep=rep:
-                     (bt[b, j], 0, h // rep, 0)),
-        pl.BlockSpec((1, ps, 1, Dv),
-                     lambda b, h, i, j, bt, kvl, rep=rep:
-                     (bt[b, j], 0, h // rep, 0)),
+        pl.BlockSpec((1, ps, 1, D), page_index_map),
+        pl.BlockSpec((1, ps, 1, Dv), page_index_map),
     ]
     operands = [block_tables, kv_valid_len, qpos_in, q, k_pages, v_pages]
     if quantized:
         # each page's scale rides the same block-table indirection as the
         # page itself: one (1, 1) fp32 element per (page, kv head).
-        scale_spec = pl.BlockSpec((1, 1),
-                                  lambda b, h, i, j, bt, kvl, rep=rep:
-                                  (bt[b, j], h // rep))
+        scale_spec = pl.BlockSpec((1, 1), _make_page_scale_index_map(rep))
         in_specs += [scale_spec, scale_spec]
         operands += [k_scales, v_scales]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,              # block_tables, kv_valid_len
         grid=(B, H, nq, nb),
         in_specs=in_specs,
-        out_specs=pl.BlockSpec((1, bq, 1, Dv),
-                               lambda b, h, i, j, bt, kvl: (b, i, h, 0)),
+        out_specs=pl.BlockSpec((1, bq, 1, Dv), _pg_o_index_map),
         scratch_shapes=[
             pltpu.VMEM((bq, 1), jnp.float32),
             pltpu.VMEM((bq, 1), jnp.float32),
@@ -230,8 +348,7 @@ def paged_attention(
     kwargs = {}
     if _CompilerParams is not None and not interpret:
         kwargs["compiler_params"] = _CompilerParams(
-            dimension_semantics=("parallel", "parallel", "parallel",
-                                 "arbitrary"))
+            dimension_semantics=ATTN_DIMENSION_SEMANTICS)
     out = pl.pallas_call(
         kernel,
         grid_spec=grid_spec,

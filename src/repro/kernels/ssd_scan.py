@@ -22,7 +22,6 @@ models/ssm.py::ssd_chunked.
 from __future__ import annotations
 
 import functools
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp
@@ -35,6 +34,84 @@ try:
 except ImportError:  # pragma: no cover
     pltpu = None
     _CompilerParams = None
+
+from repro.analysis.kernel_contracts import (KernelContract, OperandSpec,
+                                             Precondition, register_contract)
+
+
+# ---------------------------------------------------------------------------
+# The dataflow mapping, stated once: handed to pl.BlockSpec below AND cited
+# by the registered KernelContract. The chunk axis carries the (P, N) state
+# scratch, so the contract declares it sequential even though no output
+# block is revisited along it.
+# ---------------------------------------------------------------------------
+
+SSD_DIMENSION_SEMANTICS = ("parallel", "parallel", "arbitrary")
+
+
+def _x_index_map(b, h, k):
+    return (b, h, k, 0, 0)
+
+
+def _a_index_map(b, h, k):
+    return (b, h, k, 0)
+
+
+def _bc_index_map(b, h, k):
+    # B/C are shared across heads: fetched once per (batch, chunk)
+    return (b, k, 0, 0)
+
+
+def _y_index_map(b, h, k):
+    return (b, h, k, 0, 0)
+
+
+def ssd_chunk_size(S: int, chunk: int) -> int:
+    """The kernel's chunk derivation: clamp to S, then shrink until the
+    sequence divides evenly (the contract's divisibility precondition is
+    satisfied by construction — this is where)."""
+    Q = min(chunk, S)
+    while S % Q:
+        Q -= 1
+    return Q
+
+
+@register_contract("ssd_scan")
+def ssd_contract(*, B, S, H, P, N, chunk: int = 128) -> KernelContract:
+    """Contract of :func:`ssd_scan` for one logical shape.
+
+    No output block is revisited (each (b, h, k) writes its own chunk), but
+    the chunk axis threads the carried (P, N) state through VMEM scratch —
+    ``sequential_axes=(2,)`` makes the checker reject a "parallel"
+    declaration there (the recurrence would be reordered).
+    """
+    Q = ssd_chunk_size(S, chunk)
+    nc = S // Q
+    operands = (
+        OperandSpec("x", "input", (B, H, nc, 1, 1), (1, 1, 1, Q, P),
+                    _x_index_map),
+        OperandSpec("a", "input", (B, H, nc, 1), (1, 1, 1, Q),
+                    _a_index_map),
+        OperandSpec("Bc", "input", (B, nc, 1, 1), (1, 1, Q, N),
+                    _bc_index_map),
+        OperandSpec("Cc", "input", (B, nc, 1, 1), (1, 1, Q, N),
+                    _bc_index_map),
+        OperandSpec("y", "output", (B, H, nc, 1, 1), (1, 1, 1, Q, P),
+                    _y_index_map),
+    )
+    return KernelContract(
+        kernel="ssd_scan",
+        grid=(B, H, nc),
+        operands=operands,
+        dimension_semantics=SSD_DIMENSION_SEMANTICS,
+        sequential_axes=(2,),
+        preconditions=(
+            Precondition.check(
+                "chunk divides sequence", S % Q == 0,
+                f"derived chunk Q={Q} does not divide S={S}; "
+                f"ssd_chunk_size guarantees this by construction"),
+        ),
+        description="Mamba-2 SSD chunked scan, state carried along chunks")
 
 
 def _kernel(x_ref, a_ref, b_ref, c_ref, o_ref, state_ref, *, nc: int, Q: int):
@@ -95,9 +172,7 @@ def ssd_scan(
     across heads via the BlockSpec index map (fetched once per (b, chunk))."""
     B, S, H, P = x.shape
     N = Bc.shape[-1]
-    Q = min(chunk, S)
-    while S % Q:
-        Q -= 1
+    Q = ssd_chunk_size(S, chunk)
     nc = S // Q
 
     # pre-scale x by dt and form per-step log-decay a = dt * A
@@ -115,17 +190,17 @@ def ssd_scan(
     kwargs = {}
     if _CompilerParams is not None and not interpret:
         kwargs["compiler_params"] = _CompilerParams(
-            dimension_semantics=("parallel", "parallel", "arbitrary"))
+            dimension_semantics=SSD_DIMENSION_SEMANTICS)
     out = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((1, 1, 1, Q, P), lambda b, h, k: (b, h, k, 0, 0)),
-            pl.BlockSpec((1, 1, 1, Q), lambda b, h, k: (b, h, k, 0)),
-            pl.BlockSpec((1, 1, Q, N), lambda b, h, k: (b, k, 0, 0)),
-            pl.BlockSpec((1, 1, Q, N), lambda b, h, k: (b, k, 0, 0)),
+            pl.BlockSpec((1, 1, 1, Q, P), _x_index_map),
+            pl.BlockSpec((1, 1, 1, Q), _a_index_map),
+            pl.BlockSpec((1, 1, Q, N), _bc_index_map),
+            pl.BlockSpec((1, 1, Q, N), _bc_index_map),
         ],
-        out_specs=pl.BlockSpec((1, 1, 1, Q, P), lambda b, h, k: (b, h, k, 0, 0)),
+        out_specs=pl.BlockSpec((1, 1, 1, Q, P), _y_index_map),
         out_shape=jax.ShapeDtypeStruct((B, H, nc, Q, P), x.dtype),
         scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
         interpret=interpret,

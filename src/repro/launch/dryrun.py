@@ -39,8 +39,6 @@ import time
 import traceback
 
 import jax
-import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.registry import (SHAPES, all_cells, cell_applicable,
                                     get_config)
@@ -48,8 +46,6 @@ from repro.distributed import sharding as shd
 from repro.launch import specs as SP
 from repro.launch import steps as ST
 from repro.launch.mesh import make_production_mesh
-from repro.models import transformer as T
-from repro.models.module import count_params
 from repro.optim import adamw_init
 from repro.roofline import analysis as RA
 from repro.serving.engine import make_decode_step, make_prefill_step
@@ -211,13 +207,13 @@ def dryrun_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
 def count_params_abstract_cfg(cfg) -> int:
     import numpy as np
     params_abs, _ = SP.abstract_params_and_axes(cfg)
-    return int(sum(np.prod(l.shape) for l in
+    return int(sum(np.prod(leaf.shape) for leaf in
                    jax.tree_util.tree_leaves(params_abs)))
 
 
 def count_params_abstract(params_abs) -> int:
     import numpy as np
-    return int(sum(np.prod(l.shape) for l in
+    return int(sum(np.prod(leaf.shape) for leaf in
                    jax.tree_util.tree_leaves(params_abs)))
 
 

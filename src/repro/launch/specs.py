@@ -6,7 +6,7 @@ EnCodec token ids, internvl2 gets 256 precomputed patch embeddings.
 """
 from __future__ import annotations
 
-from typing import Dict, Optional, Tuple
+from typing import Dict
 
 import jax
 import jax.numpy as jnp

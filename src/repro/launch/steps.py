@@ -1,8 +1,7 @@
 """pjit-able step functions + sharding trees for the dry-run and launchers."""
 from __future__ import annotations
 
-import dataclasses
-from typing import Any, Dict, Optional, Tuple
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -12,8 +11,7 @@ from repro.configs.registry import ShapeCell
 from repro.distributed import sharding as shd
 from repro.models import transformer as T
 from repro.models.config import ModelConfig
-from repro.optim import AdamWConfig, adamw_init, adamw_update, cosine_schedule
-from repro.serving.engine import make_decode_step, make_prefill_step
+from repro.optim import AdamWConfig, adamw_update, cosine_schedule
 
 
 def make_train_step_fn(cfg: ModelConfig, opt_cfg: Optional[AdamWConfig] = None,
@@ -51,9 +49,9 @@ def make_train_step_fn(cfg: ModelConfig, opt_cfg: Optional[AdamWConfig] = None,
 
             def acc_body(carry, mbatch):
                 g_acc, l_acc = carry
-                (l, _), g = grad_of(params, mbatch)
+                (loss_mb, _), g = grad_of(params, mbatch)
                 g_acc = jax.tree_util.tree_map(jnp.add, g_acc, g)
-                return (g_acc, l_acc + l), None
+                return (g_acc, l_acc + loss_mb), None
 
             g0 = jax.tree_util.tree_map(
                 lambda p: jnp.zeros(p.shape, jnp.float32), params)

@@ -12,7 +12,7 @@ softmax/norm/transpose (§4.4). See docs/attention.md.
 from __future__ import annotations
 
 import math
-from typing import Any, Dict, Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -369,13 +369,17 @@ def mla_attention(p, cfg: ModelConfig, x, *, positions, cache=None,
             T = cache["ckv"].shape[1]
             bi = jnp.broadcast_to(jnp.arange(B)[:, None], (B, S))
             pos_safe = jnp.where(positions >= 0, positions, T)  # OOB → drop
-            up = lambda buf, new: buf.at[bi, pos_safe].set(new, mode="drop")
+
+            def up(buf, new):
+                return buf.at[bi, pos_safe].set(new, mode="drop")
         else:
             # masked update, not scatter — shard-local under seq sharding
             # (same rationale as the GQA path, §Perf H2)
             T = cache["ckv"].shape[1]
             at_pos = (jnp.arange(T)[None, :] == positions)[..., None]
-            up = lambda buf, new: jnp.where(at_pos, new[:, 0][:, None], buf)
+
+            def up(buf, new):
+                return jnp.where(at_pos, new[:, 0][:, None], buf)
         written = _written_per_row(positions, cache["len"].dtype)
         cache = {"ckv": up(cache["ckv"], c_kv),
                  "krope": up(cache["krope"], k_rope),

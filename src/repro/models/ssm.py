@@ -12,7 +12,6 @@ Shapes: x (B,S,H,P) heads×head-dim; B/C projections shared across heads
 from __future__ import annotations
 
 import math
-from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -7,13 +7,11 @@ compile time stays flat in depth (essential for the 512-device dry-run of
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import api
 from repro.distributed import tp as TP
 from repro.distributed.sharding import shard, stack_axes
 from repro.models import layers as Lyr

@@ -8,7 +8,7 @@ sharded, updates run sharded, no parameter-sized replication anywhere.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -26,7 +26,9 @@ class AdamWConfig:
 
 
 def adamw_init(params):
-    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    def zeros(p):
+        return jnp.zeros(p.shape, jnp.float32)
+
     state = {
         "mu": jax.tree_util.tree_map(zeros, params),
         "nu": jax.tree_util.tree_map(zeros, params),

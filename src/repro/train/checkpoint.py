@@ -14,7 +14,6 @@ from __future__ import annotations
 
 import json
 import os
-import pickle
 import shutil
 import threading
 import time
@@ -131,7 +130,7 @@ class CheckpointManager:
                 a = z[k]
                 want = dtypes.get(k)
                 if want and str(a.dtype) != want:
-                    import ml_dtypes  # registers bfloat16/float8 with numpy
+                    import ml_dtypes  # noqa: F401  # registers bfloat16/float8 with numpy
                     a = a.view(np.dtype(want))
                 flat[k] = a
         tree = _unflatten_into(template, flat)

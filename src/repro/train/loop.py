@@ -11,12 +11,10 @@ from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core import api
 from repro.core.plan import GemmPolicy
 from repro.data.pipeline import DataConfig, TokenPipeline
-from repro.distributed import sharding as shd
 from repro.models import transformer as T
 from repro.models.config import ModelConfig
 from repro.optim import AdamWConfig, adamw_init, adamw_update, cosine_schedule

@@ -4,7 +4,6 @@ oracle (kernels/ref.py), executed in interpret mode on CPU.
 Also cross-checks the three implementations of the paper's Algorithm 1
 against each other: Pallas kernel ≡ blockflow (lax) ≡ jnp oracle.
 """
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -14,7 +14,6 @@ logical content — the bitwise write-granularity test below is the
 invariant the serving engine's preempt/resume and prefix-COW stream
 identity rests on (tests/test_serving.py asserts it end to end).
 """
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -5,7 +5,6 @@ The paper's C1 data structure must be (a) invertible, (b) transfer-contiguous
 in DMA descriptors than the conventional row-major feed. Hypothesis sweeps
 geometry; numpy asserts exact equality (layout transforms are pure moves).
 """
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

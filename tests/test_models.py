@@ -155,6 +155,6 @@ def test_param_counts_in_family_ballpark():
                 "internvl2-76b": (68, 80), "musicgen-medium": (1.2, 2.4)}
     for arch, (lo, hi) in expect_b.items():
         params, _ = abstract_params_and_axes(get_config(arch))
-        n = sum(int(np.prod(l.shape))
-                for l in jax.tree_util.tree_leaves(params)) / 1e9
+        n = sum(int(np.prod(leaf.shape))
+                for leaf in jax.tree_util.tree_leaves(params)) / 1e9
         assert lo <= n <= hi, f"{arch}: {n:.2f}B not in [{lo},{hi}]"

@@ -1,17 +1,14 @@
 """Registry cell enumeration, dry-run helpers, data memmap source,
 pipeline stacking helpers — the long tail of framework coverage."""
-import json
 import os
 import subprocess
 import sys
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs.registry import (ARCHS, SHAPES, all_cells,
-                                    cell_applicable, get_config)
+from repro.configs.registry import ARCHS, SHAPES, all_cells, get_config
 from repro.data.pipeline import DataConfig, TokenPipeline
 
 

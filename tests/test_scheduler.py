@@ -9,7 +9,6 @@ stream order within a priority class is still preserved when everything
 fits.
 """
 import jax
-import numpy as np
 import pytest
 
 from repro.configs.registry import get_smoke_config

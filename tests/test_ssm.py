@@ -3,7 +3,6 @@ decode-step recurrence vs chunked prefill, and conv cache behavior."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from hypcompat import given, settings, st
 
 from repro.configs.registry import get_smoke_config

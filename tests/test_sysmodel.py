@@ -7,8 +7,7 @@ regressions in the calibration are caught.
 import pytest
 
 from repro.core import sysmodel as SM
-from repro.core.workloads import (PAPER_MODELS, PAPER_TABLE3, paper_workload,
-                                  transformer_workload)
+from repro.core.workloads import PAPER_TABLE3, paper_workload
 
 
 def gemm_square(n, tag="gemm"):

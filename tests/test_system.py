@@ -5,13 +5,11 @@ The 512-device production dry-run lives in launch/dryrun.py (it must own
 the process to set XLA_FLAGS); here we prove the same code path lowers and
 *runs* on the host mesh, which is what guards refactors.
 """
-import dataclasses
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.registry import SHAPES, ShapeCell, get_smoke_config
 from repro.distributed import sharding as shd
@@ -78,7 +76,7 @@ def test_input_specs_cover_cells(shape_name):
         cell = SHAPES[shape_name]
         specs = SP.input_specs(cfg, cell)
         leaves = jax.tree_util.tree_leaves(specs)
-        assert all(isinstance(l, jax.ShapeDtypeStruct) for l in leaves)
+        assert all(isinstance(x, jax.ShapeDtypeStruct) for x in leaves)
         if cell.kind == "train":
             toks = specs["batch"]["tokens"]
             assert toks.shape[0] == cell.batch

@@ -1,6 +1,5 @@
 """Training substrate: optimizer math, schedules, checkpoint fault tolerance,
 data pipeline determinism, loss-goes-down integration."""
-import dataclasses
 import os
 
 import jax
