@@ -126,6 +126,8 @@ def serve_workload(cfg, params, sc: ServeConfig, prompts: List[List[int]],
     live_handles: dict = {}
     arrive_t: dict = {}
     ttft: dict = {}
+    last_t: dict = {}
+    itls: List[float] = []
     total_done = 0
     n_finished = 0
     peak_live = 0
@@ -152,9 +154,13 @@ def serve_workload(cfg, params, sc: ServeConfig, prompts: List[List[int]],
             done[h] = done.get(h, 0) + 1
             if done[h] == 1:
                 ttft[i] = now - arrive_t[i]
+            else:
+                itls.append(now - last_t[i])   # inter-token latency
+            last_t[i] = now
             if done[h] >= gen_len:
                 eng.cancel(h)
                 del live_handles[h]
+                last_t.pop(i, None)
                 total_done += done.pop(h)   # contiguous handles (slot ids)
                 n_finished += 1             # recycle — don't inherit counts
         # paged: waiting requests are parked host-side, resident = pool use
@@ -175,16 +181,20 @@ def serve_workload(cfg, params, sc: ServeConfig, prompts: List[List[int]],
     budget_tokens = (eng.pool.n_pages * eng.pool.page_size if eng.paged
                      else eng.sc.batch_slots * eng.sc.max_len)
     kv_shards = eng.kv_shards()
+
+    def pct(xs, q):
+        return round(float(np.percentile(xs, q)), 4) if xs else 0.0
     waits = sorted(ttft.values())
-    ttft_p50, ttft_p95 = ((float(np.percentile(waits, 50)),
-                           float(np.percentile(waits, 95)))
-                          if waits else (0.0, 0.0))
     return {
         "tokens": total,
         "finished": n_finished,
         "tok_per_s": total / max(dt, 1e-9),
-        "ttft_p50_s": round(ttft_p50, 4),
-        "ttft_p95_s": round(ttft_p95, 4),
+        "ttft_p50_s": pct(waits, 50),
+        "ttft_p95_s": pct(waits, 95),
+        "ttft_p99_s": pct(waits, 99),
+        "itl_p50_s": pct(itls, 50),
+        "itl_p95_s": pct(itls, 95),
+        "itl_p99_s": pct(itls, 99),
         "peak_cache_bytes": peak_tokens * per_tok,
         # what each model shard actually holds resident: the pool splits
         # on the KV-head dim, the page *count* is identical per shard

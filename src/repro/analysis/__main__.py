@@ -52,11 +52,17 @@ def _lint_engine(arch: str) -> int:
     from repro.analysis.trace_lint import lint_engine
     from repro.configs.registry import get_smoke_config
     from repro.models import transformer as T
+    from repro.obs import Observability
     from repro.serving.engine import ServeConfig, ServingEngine
 
     cfg = get_smoke_config(arch, n_layers=2, vocab=64)
     params, _ = T.init_model(jax.random.PRNGKey(0), cfg)
-    eng = ServingEngine(cfg, params, ServeConfig(batch_slots=2, max_len=32))
+    # obs enabled on purpose: the lint proves the instrumented engine's
+    # jitted prefill/decode closures stayed free of host callbacks — all
+    # telemetry must live host-side of the jit boundary
+    eng = ServingEngine(cfg, params,
+                        ServeConfig(batch_slots=2, max_len=32,
+                                    obs=Observability()))
     findings = lint_engine(eng)
     for f in findings:
         print(f"lint FAIL {f}")

@@ -8,7 +8,7 @@ from __future__ import annotations
 
 import argparse
 import asyncio
-import time
+import json
 
 import jax
 import numpy as np
@@ -17,6 +17,7 @@ from repro.configs.registry import get_config, get_smoke_config
 from repro.core.plan import AttentionPolicy, GemmPolicy
 from repro.launch.mesh import make_host_mesh
 from repro.models import transformer as T
+from repro.obs import NULL_OBS, Observability, Timer
 from repro.serving.engine import ServeConfig, ServingEngine
 from repro.serving.frontend import AsyncServingEngine
 from repro.serving.scheduler import Scheduler
@@ -93,6 +94,16 @@ def main(argv=None):
                     help="also run N concurrent requests through the "
                          "AsyncServingEngine streaming frontend "
                          "(serving/frontend.py)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="enable observability (repro/obs) and write a "
+                         "Perfetto/Chrome trace of the serving engines to "
+                         "PATH — one track per engine phase plus one async "
+                         "track per request id; open at ui.perfetto.dev "
+                         "(docs/observability.md)")
+    ap.add_argument("--metrics-json", default=None, metavar="PATH",
+                    help="enable observability and write the metrics "
+                         "registry snapshot (counters/gauges/histograms) "
+                         "to PATH as JSON")
     args = ap.parse_args(argv)
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -105,6 +116,10 @@ def main(argv=None):
     mesh = make_host_mesh(model=args.tp) if args.tp > 1 else None
     scheduler = (Scheduler(prefill_chunk=args.prefill_chunk)
                  if args.prefill_chunk else None)
+    # one recorder across the continuous-batching and async engines: their
+    # phase spans land on shared tracks, request ids on async tracks
+    obs = (Observability() if (args.trace_out or args.metrics_json)
+           else NULL_OBS)
     print(f"[serve] arch={cfg.name} slots={args.batch_slots} "
           f"max_len={args.max_len} gemm={policy.resolved_backend()}/"
           f"{policy.mode} attn={attn.resolved_backend()} "
@@ -134,9 +149,9 @@ def main(argv=None):
     # batched generate path (one full batch)
     prompts = rng.integers(0, cfg.vocab,
                            (args.batch_slots, args.prompt_len)).astype(np.int32)
-    t0 = time.perf_counter()
-    out = engine.generate(prompts, args.gen_len)
-    dt = time.perf_counter() - t0
+    with Timer() as tm:
+        out = engine.generate(prompts, args.gen_len)
+    dt = tm.dt
     tput = args.batch_slots * args.gen_len / dt
     print(f"[serve] batched generate: {out.shape} in {dt:.2f}s "
           f"({tput:.1f} tok/s)")
@@ -147,6 +162,7 @@ def main(argv=None):
     if cfg.family in ("ssm", "hybrid") and args.batch_slots > 1:
         print("[serve] continuous batching skipped: ssm/hybrid families "
               "support slot admission only with --batch-slots 1")
+        _write_obs(args, obs)
         return 0
     sc2 = ServeConfig(
         batch_slots=args.batch_slots, max_len=args.max_len, gemm=policy,
@@ -154,7 +170,8 @@ def main(argv=None):
         weight_dtype=args.weight_dtype, kv_dtype=args.kv_dtype,
         cache_pages=args.cache_pages,
         mesh=mesh, prefix_cache=args.prefix_cache and sc.paged(),
-        prefix_watermark=args.prefix_watermark, scheduler=scheduler)
+        prefix_watermark=args.prefix_watermark, scheduler=scheduler,
+        obs=obs)
     engine2 = ServingEngine(cfg, params, sc2, axes=axes)
     lo = max(1, min(4, args.prompt_len))
     shared = rng.integers(0, cfg.vocab, args.shared_prefix_len).tolist()
@@ -162,26 +179,27 @@ def main(argv=None):
                                      rng.integers(lo, args.prompt_len + 1))
                .tolist() for _ in range(args.n_requests)]
     done_tokens = 0
-    t0 = time.perf_counter()
     live = 0
-    while pending or live:
-        while pending:
-            slot = engine2.submit(pending[0])
-            if slot is None:
+    with Timer() as tm:
+        while pending or live:
+            while pending:
+                slot = engine2.submit(pending[0])
+                if slot is None:
+                    break
+                pending.pop(0)
+                live += 1
+            stepped = engine2.step()
+            done_tokens += len(stepped)
+            # retire a random live request occasionally to exercise
+            # recycling (cancel frees the slot — and, when paged, its
+            # pool pages)
+            if live and done_tokens % 29 == 0 and stepped:
+                engine2.cancel(next(iter(stepped)))
+                live -= 1
+            if done_tokens > args.n_requests * args.gen_len:
                 break
-            pending.pop(0)
-            live += 1
-        stepped = engine2.step()
-        done_tokens += len(stepped)
-        # retire a random live request occasionally to exercise recycling
-        # (cancel frees the slot — and, when paged, its pool pages)
-        if live and done_tokens % 29 == 0 and stepped:
-            engine2.cancel(next(iter(stepped)))
-            live -= 1
-        if done_tokens > args.n_requests * args.gen_len:
-            break
-        live = int(engine2.slot_live.sum())
-    dt = time.perf_counter() - t0
+            live = int(engine2.slot_live.sum())
+    dt = tm.dt
     print(f"[serve] continuous batching: {done_tokens} tokens in {dt:.2f}s "
           f"({done_tokens / max(dt, 1e-9):.1f} tok/s)")
     print(f"[serve] stats: {engine2.stats()}")
@@ -203,14 +221,29 @@ def main(argv=None):
             return await asyncio.gather(
                 *(one(i) for i in range(args.async_demo)))
 
-        t0 = time.perf_counter()
-        counts = asyncio.run(demo())
-        dt = time.perf_counter() - t0
+        with Timer() as tm:
+            counts = asyncio.run(demo())
+        dt = tm.dt
         print(f"[serve] async streaming: {args.async_demo} concurrent "
               f"requests, {sum(counts)} tokens in {dt:.2f}s "
               f"({sum(counts) / max(dt, 1e-9):.1f} tok/s)")
         print(f"[serve] async stats: {engine3.stats()}")
+        print(f"[serve] async slo: {json.dumps(aeng.slo_report())}")
+    _write_obs(args, obs)
     return 0
+
+
+def _write_obs(args, obs) -> None:
+    """Write the requested observability artifacts (no-op when neither
+    --trace-out nor --metrics-json was given)."""
+    if args.trace_out:
+        n = obs.trace.write(args.trace_out)
+        print(f"[serve] trace: {n} events -> {args.trace_out} "
+              f"(open at https://ui.perfetto.dev)")
+    if args.metrics_json:
+        with open(args.metrics_json, "w") as f:
+            json.dump(obs.metrics.snapshot(), f, indent=2, sort_keys=True)
+        print(f"[serve] metrics: snapshot -> {args.metrics_json}")
 
 
 if __name__ == "__main__":

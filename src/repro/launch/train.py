@@ -15,7 +15,6 @@ Usage:
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
 import jax.numpy as jnp
@@ -28,6 +27,7 @@ from repro.distributed import sharding as shd
 from repro.launch import steps as ST
 from repro.launch.mesh import make_host_mesh, make_production_mesh
 from repro.models import transformer as T
+from repro.obs import Timer
 from repro.optim import AdamWConfig, adamw_init
 from repro.train.checkpoint import CheckpointManager
 from repro.train.loop import TrainConfig
@@ -107,10 +107,12 @@ def main(argv=None):
 
         ema = None
         for step in range(start, args.steps):
-            t0 = time.perf_counter()
-            batch = {k: jnp.asarray(v) for k, v in data.next_batch().items()}
-            params, opt_state, metrics = jitted(params, opt_state, batch)
-            dt = time.perf_counter() - t0
+            with Timer() as tm:
+                batch = {k: jnp.asarray(v)
+                         for k, v in data.next_batch().items()}
+                params, opt_state, metrics = jitted(params, opt_state,
+                                                    batch)
+            dt = tm.dt
             ema = dt if ema is None else 0.9 * ema + 0.1 * dt
             if dt > 3.0 * ema:
                 print(f"[watchdog] step {step} straggled "

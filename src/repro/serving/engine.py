@@ -49,6 +49,7 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
+import time
 from typing import Dict, List, Optional
 
 import jax
@@ -60,6 +61,8 @@ from repro.core.plan import AttentionPolicy, GemmPolicy, ShardingPolicy
 from repro.distributed import tp as TP
 from repro.models import transformer as T
 from repro.models.config import ModelConfig
+from repro.obs import NULL_OBS, Observability, RequestTrace
+from repro.obs.metrics import TIME_BUCKETS_S, json_scalars
 from repro.serving.kv_pool import BlockTable, PagePool
 from repro.serving.prefix_cache import PrefixCache
 from repro.serving.scheduler import RequestView, Scheduler
@@ -114,6 +117,13 @@ class ServeConfig:
     # the FIFO-within-priority default that reproduces the PR 4/5
     # choreography (oldest resumes first, youngest preempts first,
     # whole-prompt prefill).
+    obs: Observability = NULL_OBS
+    # observability (repro/obs, docs/observability.md): metrics registry +
+    # trace recorder + per-request lifecycle records. The default NULL_OBS
+    # is fully disabled — hot paths pay one attribute load + branch and
+    # record/allocate nothing. Pass Observability() to collect; sharing
+    # one instance across engines merges their metrics (process-wide
+    # registry semantics) and interleaves their trace tracks.
 
     def policy(self) -> Optional[GemmPolicy]:
         """The effective GemmPolicy: ``gemm`` with ``weight_dtype`` folded
@@ -271,6 +281,39 @@ class ServingEngine:
                 "stores quantized K/V (docs/quant.md#kv-pages)")
         self.scheduler = sc.scheduler if sc.scheduler is not None \
             else Scheduler()
+        # Observability: instruments are registered once here (the slow
+        # phase) and held as direct references — the per-token paths only
+        # ever do `if obs.enabled:` plus an int add. With NULL_OBS every
+        # instrument is the shared no-op and nothing is recorded.
+        self.obs = sc.obs if sc.obs is not None else NULL_OBS
+        obs = self.obs
+        if obs.enabled:
+            m = obs.metrics
+            self._m_prefill_tokens = m.counter("engine_tokens_total",
+                                               stage="prefill")
+            self._m_decode_tokens = m.counter("engine_tokens_total",
+                                              stage="decode")
+            self._m_admissions = m.counter("engine_admissions_total",
+                                           kind="fresh")
+            self._m_resumes = m.counter("engine_admissions_total",
+                                        kind="resume")
+            self._m_preemptions = m.counter("engine_preemptions_total")
+            self._m_retired = m.counter("engine_retired_total")
+            self._m_live = m.gauge("engine_live_requests")
+            self._m_waiting = m.gauge("engine_waiting_requests")
+            self._h_prefill = m.histogram("engine_prefill_chunk_s",
+                                          TIME_BUCKETS_S)
+            self._h_decode = m.histogram("engine_decode_step_s",
+                                         TIME_BUCKETS_S)
+            self._h_ttft = m.histogram("request_ttft_s", TIME_BUCKETS_S)
+            self._h_itl = m.histogram("request_itl_s", TIME_BUCKETS_S)
+            self.scheduler.bind_metrics(m)
+        # handle → lifecycle record (RequestTrace), built only when obs is
+        # enabled; persists past retirement so finished streams stay
+        # readable via request_trace(). Paged handles (request ids) are
+        # unique per engine; contiguous handles are slot ids, so a slot's
+        # next request replaces the previous record.
+        self.request_traces: Dict[int, RequestTrace] = {}
         self.prefix: Optional[PrefixCache] = None
         if sc.prefix_cache and not self.paged:
             raise ValueError(
@@ -289,8 +332,12 @@ class ServingEngine:
                     f" request (ceil(max_len/page_size) = {self.n_blocks} "
                     f"pages); a preempted request could never resume")
             self.pool = PagePool(n_pages, ps)
+            if obs.enabled:
+                self.pool.bind_metrics(obs.metrics)
             if sc.prefix_cache:
-                self.prefix = PrefixCache(self.pool)
+                self.prefix = PrefixCache(
+                    self.pool,
+                    metrics=obs.metrics if obs.enabled else None)
             self.caches = T.init_paged_caches(cfg, B, n_pages, ps,
                                               jnp.dtype(sc.cache_dtype),
                                               tpctx=self.tp,
@@ -564,6 +611,9 @@ class ServingEngine:
                 return type(node)(rec(v) for v in node)
             return node
         self.caches = rec(self.caches)
+        # in-flight lifecycle records die with their requests (their open
+        # async spans are auto-closed at export time)
+        self.request_traces.clear()
         self.block_tables[:] = 0
         self.slot_rid[:] = -1
         self.slot_live[:] = False
@@ -635,6 +685,8 @@ class ServingEngine:
         prompt = [int(t) for t in prompt]
         self.tick += 1
         arrival = self.tick
+        obs = self.obs
+        t0 = time.perf_counter() if obs.enabled else 0.0
         if not self.paged:
             free = np.where(~self.slot_live)[0]
             if free.size == 0:
@@ -644,6 +696,10 @@ class ServingEngine:
             self.slot_deadline[slot] = deadline
             self.slot_arrival[slot] = arrival
             self._begin_admit(slot, prompt, key=key)
+            if obs.enabled:
+                obs.trace.complete("admit", f"admit {slot}", t0,
+                                   args={"handle": slot,
+                                         "prompt_len": len(prompt)})
             return slot
         incoming = RequestView(rid=self._next_rid, priority=priority,
                                deadline=deadline, arrival=arrival,
@@ -656,6 +712,10 @@ class ServingEngine:
                     arrival=arrival):
                 rid = self._next_rid
                 self._next_rid += 1
+                if obs.enabled:
+                    obs.trace.complete("admit", f"admit rid={rid}", t0,
+                                       args={"rid": rid,
+                                             "prompt_len": len(prompt)})
                 return rid
             # no slot, or not enough pages even after cold-cache eviction:
             # ask the policy whether this request may displace a live one
@@ -695,6 +755,32 @@ class ServingEngine:
         self.slot_pf_restore[slot] = restore
         self.slot_pf_key[slot] = key
         self.slot_out[slot] = restore.out if restore is not None else []
+        obs = self.obs
+        if obs.enabled:
+            h = self._handle(slot)
+            now = time.perf_counter()
+            if restore is None:
+                rt = RequestTrace(
+                    rid=h, prompt_len=len(tokens),
+                    priority=int(self.slot_priority[slot]),
+                    deadline=self.slot_deadline[slot], submit_s=now,
+                    prefix_hit_tokens=start)
+                self.request_traces[h] = rt
+                self._m_admissions.inc()
+                obs.trace.async_begin(h, {"prompt_len": len(tokens),
+                                          "priority": rt.priority})
+                if start:
+                    obs.trace.async_instant(h, "prefix-hit",
+                                            {"tokens": start})
+            else:
+                self._m_resumes.inc()
+                obs.trace.async_instant(h, "resume",
+                                        {"restart_tokens": len(tokens)})
+                rt = self.request_traces.get(h)
+                if rt is not None and rt.preempted_at_s is not None:
+                    rt.wait_s += now - rt.preempted_at_s
+                    rt.preempted_at_s = None
+            self._m_live.set(int(self.slot_live.sum()))
         self._prefill_slot_chunk(slot)
 
     def _prefill_slot_chunk(self, slot: int) -> bool:
@@ -705,6 +791,8 @@ class ServingEngine:
         tokens = self.slot_pf_tokens[slot]
         L = len(tokens)
         p0 = int(self.slot_pos[slot])
+        obs = self.obs
+        t0 = time.perf_counter() if obs.enabled else 0.0
         budget = self.scheduler.prefill_chunk or (L - p0)
         n = min(budget, L - p0)
         B = self.sc.batch_slots
@@ -727,6 +815,22 @@ class ServingEngine:
         logits, self.caches = self.prefill(self.params, batch, self.caches)
         self.prefill_tokens += n
         self.slot_pos[slot] = p0 + n
+        if obs.enabled:
+            # timing covers host assembly + dispatch (the device call is
+            # async; nothing here forces a sync the uninstrumented engine
+            # wouldn't do)
+            t1 = time.perf_counter()
+            h = self._handle(slot)
+            self._m_prefill_tokens.inc(n)
+            self._h_prefill.observe(t1 - t0)
+            obs.trace.complete("prefill-chunk",
+                               f"prefill rid={h} [{p0}:{p0 + n})", t0, t1,
+                               args={"rid": h, "start": p0, "tokens": n})
+            rt = self.request_traces.get(h)
+            if rt is not None:
+                rt.prefill_chunks.append(
+                    {"start_pos": p0, "tokens": n,
+                     "dt_s": round(t1 - t0, 6)})
         if p0 + n < L:
             return False               # more chunks on later steps
         self.slot_prefilling[slot] = False
@@ -760,7 +864,14 @@ class ServingEngine:
         if self.pool.can_alloc(n):
             return True
         if self.prefix is not None:
-            self.prefix.evict(n - self.pool.free_pages)
+            obs = self.obs
+            t0 = time.perf_counter() if obs.enabled else 0.0
+            short = n - self.pool.free_pages
+            freed = self.prefix.evict(short)
+            if obs.enabled:
+                obs.trace.complete("evict", f"evict {freed}p on-demand",
+                                   t0, args={"requested": short,
+                                             "freed": freed})
         return self.pool.can_alloc(n)
 
     def _paged_admit(self, slot: int, rid: int, prompt: List[int],
@@ -799,7 +910,7 @@ class ServingEngine:
                 hit.cow_page = None
                 pages.append(dst)
                 start += hit.cow_tokens
-                self.prefix.cow_forks += 1
+                self.prefix.note_cow_fork()
         tbl = BlockTable(self.pool, pages=pages)
         tbl.ensure(len(tokens))
         self.slot_tables[slot] = tbl
@@ -821,6 +932,10 @@ class ServingEngine:
         recycled; resume re-prefills prompt+out — through the prefix cache
         when enabled, so a preempted request's shared prefix re-admits
         without re-prefilling (docs/serving.md)."""
+        obs = self.obs
+        if obs.enabled:
+            t0 = time.perf_counter()
+            h = self._handle(slot)   # before slot_rid resets below
         if self.slot_prefilling[slot]:
             # mid-chunked-prefill: no pending token was sampled yet; park
             # the sampling key (and any carried token from an earlier
@@ -849,6 +964,17 @@ class ServingEngine:
         self.slot_pf_restore[slot] = None
         self.slot_pf_key[slot] = None
         # slot_pos stays nonzero → the next admission resets this slot's lens
+        if obs.enabled:
+            self._m_preemptions.inc()
+            self._m_live.set(int(self.slot_live.sum()))
+            self._m_waiting.set(len(self.wait))
+            obs.trace.complete("preempt", f"preempt rid={h}", t0,
+                               args={"rid": h})
+            obs.trace.async_instant(h, "preempt")
+            rt = self.request_traces.get(h)
+            if rt is not None:
+                rt.n_preemptions += 1
+                rt.preempted_at_s = time.perf_counter()
 
     def _try_resume(self):
         """Re-admit waiting requests into free slots in the scheduler's
@@ -863,18 +989,25 @@ class ServingEngine:
                              n_tokens=len(w.prompt) + len(w.out))
                  for w in self.wait]
         admitted = []
+        obs = self.obs
         for i in self.scheduler.resume_order(views):
             free = np.where(~self.slot_live)[0]
             if free.size == 0:
                 break
             w = self.wait[i]
+            t0 = time.perf_counter() if obs.enabled else 0.0
             if self._paged_admit(int(free[0]), w.rid, w.prompt,
                                  w.prompt + w.out, restore=w, key=w.key,
                                  priority=w.priority, deadline=w.deadline,
                                  arrival=w.arrival):
                 admitted.append(i)
+                if obs.enabled:
+                    obs.trace.complete("resume", f"resume rid={w.rid}", t0,
+                                       args={"rid": w.rid})
         for i in sorted(admitted, reverse=True):
             self.wait.pop(i)
+        if obs.enabled and admitted:
+            self._m_waiting.set(len(self.wait))
 
     def _grow_pages_for_decode(self):
         """Back every decodable slot's next position with a page, oldest
@@ -909,6 +1042,14 @@ class ServingEngine:
                                        out=self.block_tables[s])
 
     def _retire(self, slot: int):
+        obs = self.obs
+        if obs.enabled:
+            h = self._handle(slot)   # before slot_rid resets below
+            self._m_retired.inc()
+            obs.trace.async_end(h, {"n_tokens": len(self.slot_out[slot])})
+            rt = self.request_traces.get(h)
+            if rt is not None and rt.retire_s is None:
+                rt.retire_s = time.perf_counter()
         self.slot_live[slot] = False
         self.slot_drain[slot] = False
         self.slot_prefilling[slot] = False
@@ -920,6 +1061,8 @@ class ServingEngine:
             self.slot_tables[slot] = None
             self.block_tables[slot] = 0
             self.slot_rid[slot] = -1
+        if obs.enabled:
+            self._m_live.set(int(self.slot_live.sum()))
 
     def cancel(self, handle: int) -> bool:
         """Abort a request by the handle submit() returned (request id in
@@ -939,6 +1082,12 @@ class ServingEngine:
             if w.rid == handle:
                 self.wait.pop(i)
                 self.request_out.pop(handle, None)
+                if self.obs.enabled:
+                    self._m_waiting.set(len(self.wait))
+                    self.obs.trace.async_end(handle, {"cancelled": True})
+                    rt = self.request_traces.get(handle)
+                    if rt is not None and rt.retire_s is None:
+                        rt.retire_s = time.perf_counter()
                 return True
         return False
 
@@ -968,11 +1117,17 @@ class ServingEngine:
         retires, so no token of the stream is ever dropped at retirement.
         """
         self.tick += 1
+        obs = self.obs
         if self.paged:
             if self.prefix is not None and self.sc.prefix_watermark > 0:
                 short = self.sc.prefix_watermark - self.pool.free_pages
                 if short > 0:
-                    self.prefix.evict(short)
+                    t0 = time.perf_counter() if obs.enabled else 0.0
+                    freed = self.prefix.evict(short)
+                    if obs.enabled:
+                        obs.trace.complete(
+                            "evict", f"evict {freed}p watermark", t0,
+                            args={"requested": short, "freed": freed})
             self._try_resume()
         if not self.slot_live.any():
             return {}
@@ -991,6 +1146,7 @@ class ServingEngine:
                      & ~self.slot_prefilling)
         nxt = None
         if decodable.any():
+            t0 = time.perf_counter() if obs.enabled else 0.0
             tok = self._dev(np.asarray(self.slot_next)[:, None])
             pos = self._dev(np.where(decodable, self.slot_pos,
                                      -1).astype(np.int32)[:, None])
@@ -998,14 +1154,27 @@ class ServingEngine:
             logits, self.caches = self.decode(self.params, tok, pos,
                                               self.caches, bt)
             nxt = np.asarray(self._sample(logits, key))
-            self.decode_tokens += int(decodable.sum())
+            n_dec = int(decodable.sum())
+            self.decode_tokens += n_dec
+            if obs.enabled:
+                # np.asarray above synced the sampled ids, so this span is
+                # honest wall time for the whole batched decode
+                t1 = time.perf_counter()
+                self._m_decode_tokens.inc(n_dec)
+                self._h_decode.observe(t1 - t0)
+                obs.trace.complete("decode-step", f"decode x{n_dec}",
+                                   t0, t1,
+                                   args={"slots": n_dec, "tick": self.tick})
         out = {}
         for s in range(self.sc.batch_slots):
             if not self.slot_live[s] or self.slot_prefilling[s]:
                 continue
             t = int(self.slot_next[s])
             self.slot_out[s].append(t)
-            out[self._handle(s)] = t
+            h = self._handle(s)
+            out[h] = t
+            if obs.enabled:
+                self._obs_token(s, h, t)
             if self.slot_drain[s]:      # final pending token flushed above
                 self._retire(s)
                 continue
@@ -1016,11 +1185,51 @@ class ServingEngine:
         return out
 
     # -- observability -------------------------------------------------------
+    def _obs_token(self, slot: int, h: int, tok: int):
+        """Per-reported-token trace/metrics. Called only when observability
+        is enabled — the disabled step() loop pays one branch per token and
+        never enters here."""
+        now = time.perf_counter()
+        rt = self.request_traces.get(h)
+        if rt is not None:
+            if rt.first_token_s is None:
+                rt.first_token_s = now
+                self._h_ttft.observe(now - rt.submit_s)
+                self.obs.trace.async_instant(h, "first-token")
+            else:
+                gap = now - rt.token_s[-1]
+                rt.itl.observe(gap)
+                self._h_itl.observe(gap)
+            rt.tokens.append(tok)
+            rt.token_s.append(now)
+            if self.paged:
+                tbl = self.slot_tables[slot]
+                pages = len(tbl.pages) if tbl is not None else 0
+                tl = rt.pages_timeline
+                if not tl or tl[-1][1] != pages:
+                    tl.append((self.tick, pages))
+
+    def request_trace(self, handle: int, pop: bool = False
+                      ) -> Optional[RequestTrace]:
+        """The lifecycle record for ``handle`` (repro.obs.RequestTrace):
+        queue/preemption waits, prefill chunks, TTFT, the exact reported
+        token stream with per-token timestamps, the inter-token-latency
+        histogram, and the pages-held timeline. None when observability is
+        disabled or the handle is unknown. Records persist past
+        retirement; ``pop=True`` removes the record after returning it (a
+        long-running server's analogue of ``request_out.pop``)."""
+        if pop:
+            return self.request_traces.pop(handle, None)
+        return self.request_traces.get(handle)
+
     def stats(self) -> Dict[str, object]:
         """One flat observability snapshot: scheduling churn, prefill vs
         decode token split, pool pressure, and (when enabled) the prefix
         cache's hit/miss/eviction counters. Printed by launch/serve.py and
-        recorded per-row in benchmarks/serving_sweep.py JSONL."""
+        recorded per-row in benchmarks/serving_sweep.py JSONL — every
+        value is coerced to a plain JSON type (json_scalars), so the dict
+        round-trips through json.dumps unchanged (tests/test_obs.py pins
+        the schema)."""
         d: Dict[str, object] = {
             "tick": self.tick,
             "live_requests": int(self.slot_live.sum()),
@@ -1041,4 +1250,4 @@ class ServingEngine:
             d["kv_bytes_in_use"] = page_bytes * self.pool.pages_in_use
             if self.prefix is not None:
                 d.update(self.prefix.stats())
-        return d
+        return json_scalars(d)

@@ -34,8 +34,10 @@ from __future__ import annotations
 
 import asyncio
 import itertools
+import time
 from typing import AsyncIterator, Dict, List, Optional
 
+from repro.obs.metrics import quantile
 from repro.serving.engine import ServingEngine
 
 __all__ = ["AsyncServingEngine"]
@@ -43,10 +45,13 @@ __all__ = ["AsyncServingEngine"]
 
 class _Flight:
     """One in-flight request: its submission parameters until admitted,
-    its token queue and progress after."""
+    its token queue and progress after. ``t_submit``/``t_admit``/``t_last``
+    are ``time.perf_counter`` marks feeding the SLO accounting
+    (:meth:`AsyncServingEngine.slo_report`)."""
 
     __slots__ = ("prompt", "n_tokens", "key", "priority", "deadline",
-                 "seq", "queue", "handle", "got")
+                 "seq", "queue", "handle", "got", "t_submit", "t_admit",
+                 "t_last")
 
     def __init__(self, prompt, n_tokens, key, priority, deadline, seq):
         self.prompt = prompt
@@ -58,6 +63,9 @@ class _Flight:
         self.queue: asyncio.Queue = asyncio.Queue()
         self.handle: Optional[int] = None
         self.got = 0
+        self.t_submit = time.perf_counter()
+        self.t_admit: Optional[float] = None
+        self.t_last: Optional[float] = None
 
 
 class AsyncServingEngine:
@@ -83,6 +91,20 @@ class AsyncServingEngine:
         self._active: Dict[int, _Flight] = {}  # engine handle → flight
         self._pump_task: Optional[asyncio.Task] = None
         self._seq = itertools.count()
+        # SLO accounting (slo_report): raw samples on the perf_counter
+        # clock — stream()-call → admission, → first token, and
+        # token-to-token gaps. Deadlines are interpreted on the same
+        # clock: an absolute perf_counter time the first token must beat
+        # (the engine itself only ever *compares* deadlines; the meaning
+        # lives here, docs/observability.md#slo-definitions).
+        self._queue_waits: List[float] = []
+        self._ttfts: List[float] = []
+        self._itls: List[float] = []
+        self._deadline_misses = 0
+        self._completed = 0
+        obs = engine.obs
+        self._m_misses = (obs.metrics.counter("frontend_deadline_misses_total")
+                          if obs.enabled else None)
 
     # -- public API ---------------------------------------------------------
     async def stream(self, prompt: List[int], n_tokens: int,
@@ -123,6 +145,29 @@ class AsyncServingEngine:
     def in_flight(self) -> int:
         return len(self._waiting) + len(self._active)
 
+    def slo_report(self) -> Dict[str, object]:
+        """Aggregated SLO accounting over everything this frontend has
+        streamed: exact p50/p95/p99 of queue wait, TTFT (stream() call →
+        first token, engine queue wait included) and ITL, plus the
+        deadline-miss count (first token after the request's absolute
+        ``deadline`` on the perf_counter clock). Plain-JSON dict; all
+        times in seconds. Cumulative — a long-running server may snapshot
+        it repeatedly."""
+        def pcts(xs: List[float]) -> Dict[str, Optional[float]]:
+            if not xs:
+                return {"p50": None, "p95": None, "p99": None}
+            return {"p50": round(quantile(xs, 0.50), 6),
+                    "p95": round(quantile(xs, 0.95), 6),
+                    "p99": round(quantile(xs, 0.99), 6)}
+        return {
+            "n_completed": self._completed,
+            "n_first_tokens": len(self._ttfts),
+            "queue_wait_s": pcts(self._queue_waits),
+            "ttft_s": pcts(self._ttfts),
+            "itl_s": pcts(self._itls),
+            "deadline_misses": self._deadline_misses,
+        }
+
     # -- pump ---------------------------------------------------------------
     def _ensure_pump(self):
         if self._pump_task is None or self._pump_task.done():
@@ -141,6 +186,12 @@ class AsyncServingEngine:
             flight.handle = handle
             self._waiting.remove(flight)
             self._active[handle] = flight
+            flight.t_admit = time.perf_counter()
+            wait = flight.t_admit - flight.t_submit
+            self._queue_waits.append(wait)
+            rt = self.engine.request_traces.get(handle)
+            if rt is not None:
+                rt.queue_wait_s = wait
 
     async def _pump(self):
         eng = self.engine
@@ -157,13 +208,31 @@ class AsyncServingEngine:
                     flight.queue.put_nowait(None)
                 break
             produced = eng.step()
+            now = time.perf_counter()
             for handle, tok in produced.items():
                 flight = self._active.get(handle)
                 if flight is None:
                     continue           # cancelled while its step ran
                 flight.got += 1
                 flight.queue.put_nowait(tok)
+                if flight.got == 1:
+                    self._ttfts.append(now - flight.t_submit)
+                    if flight.deadline is not None and now > flight.deadline:
+                        self._deadline_misses += 1
+                        if self._m_misses is not None:
+                            self._m_misses.inc()
+                        rt = eng.request_traces.get(handle)
+                        if rt is not None:
+                            rt.deadline_missed = True
+                    elif flight.deadline is not None:
+                        rt = eng.request_traces.get(handle)
+                        if rt is not None:
+                            rt.deadline_missed = False
+                else:
+                    self._itls.append(now - flight.t_last)
+                flight.t_last = now
                 if flight.got >= flight.n_tokens:
+                    self._completed += 1
                     self._finish(flight)
             # a request that retired at max_len stops producing: close its
             # stream so consumers don't wait forever. Live means: in a slot,

@@ -45,6 +45,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, List, Optional, Sequence, Tuple
 
+from repro.obs.metrics import Counter
 from repro.serving.kv_pool import PagePool
 
 __all__ = ["PrefixCache", "PrefixHit"]
@@ -113,7 +114,8 @@ class PrefixCache:
     cached chain walkable from the root).
     """
 
-    def __init__(self, pool: PagePool, page_size: Optional[int] = None):
+    def __init__(self, pool: PagePool, page_size: Optional[int] = None,
+                 metrics=None):
         self.pool = pool
         self.page_size = int(page_size or pool.page_size)
         if self.page_size != pool.page_size:
@@ -123,13 +125,18 @@ class PrefixCache:
         self._root = _Node((), -1, hash(("prefix-root",)), None)
         self._tick = 0
         self.n_nodes = 0
-        # counters (surfaced by ServingEngine.stats())
-        self.hits = 0           # lookups reusing >= 1 token
-        self.misses = 0
-        self.evictions = 0
-        self.cow_forks = 0      # filled in by the engine after each fork
-        self.hit_tokens = 0     # tokens served from cache
-        self.lookup_tokens = 0  # tokens presented to lookup
+        # Counters (surfaced by ServingEngine.stats() and, with ``metrics``
+        # — a repro.obs.Metrics registry — in its snapshot()). First-class
+        # Counter instruments either way; the int-valued properties below
+        # keep the historical ``cache.hits == 1`` comparisons working.
+        reg = metrics.counter if metrics is not None \
+            else (lambda name: Counter(name))
+        self._hits = reg("prefix_hits_total")
+        self._misses = reg("prefix_misses_total")
+        self._evictions = reg("prefix_evictions_total")
+        self._cow_forks = reg("prefix_cow_forks_total")
+        self._hit_tokens = reg("prefix_hit_tokens_total")
+        self._lookup_tokens = reg("prefix_lookup_tokens_total")
 
     # -- internals ----------------------------------------------------------
     def _child_matching(self, node: _Node, span: Tuple[int, ...]
@@ -195,12 +202,18 @@ class PrefixCache:
         engine calls this once per successful admit; lookups whose admission
         falls through (pool full, preempt-retry loops) count nothing, so
         the reported rate reflects tokens actually served from cache."""
-        self.lookup_tokens += n_tokens
-        self.hit_tokens += hit.tokens_reusable
+        self._lookup_tokens.inc(n_tokens)
+        self._hit_tokens.inc(hit.tokens_reusable)
         if hit.tokens_reusable:
-            self.hits += 1
+            self._hits.inc()
         else:
-            self.misses += 1
+            self._misses.inc()
+
+    def note_cow_fork(self) -> None:
+        """Count one committed copy-on-write fork. The engine calls this
+        after the fork + device copy succeed (the pool's own fork counter
+        fires at allocation; this one counts prefix-cache-driven forks)."""
+        self._cow_forks.inc()
 
     def insert(self, tokens: Sequence[int], pages: Sequence[int]) -> int:
         """Index every *full* page of ``tokens`` (``pages[j]`` backing
@@ -284,7 +297,7 @@ class PrefixCache:
         assert not node.children, "evict only detaches leaves"
         del node.parent.children[node.chain_hash]
         self.n_nodes -= 1
-        self.evictions += 1
+        self._evictions.inc()
         was_last = self.pool.refcount[node.page] == 1
         self.pool.release([node.page])
         return int(was_last)
@@ -298,6 +311,33 @@ class PrefixCache:
         return freed
 
     # -- stats / invariants -------------------------------------------------
+    @property
+    def hits(self) -> int:
+        """Committed admissions reusing >= 1 cached token."""
+        return self._hits.value
+
+    @property
+    def misses(self) -> int:
+        return self._misses.value
+
+    @property
+    def evictions(self) -> int:
+        return self._evictions.value
+
+    @property
+    def cow_forks(self) -> int:
+        return self._cow_forks.value
+
+    @property
+    def hit_tokens(self) -> int:
+        """Tokens served from cache across committed admissions."""
+        return self._hit_tokens.value
+
+    @property
+    def lookup_tokens(self) -> int:
+        """Tokens presented across committed admissions."""
+        return self._lookup_tokens.value
+
     @property
     def cached_pages(self) -> int:
         return self.n_nodes

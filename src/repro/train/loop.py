@@ -6,7 +6,6 @@ from __future__ import annotations
 import contextlib
 import dataclasses
 import signal
-import time
 from typing import Any, Dict, Optional
 
 import jax
@@ -17,6 +16,7 @@ from repro.core.plan import GemmPolicy
 from repro.data.pipeline import DataConfig, TokenPipeline
 from repro.models import transformer as T
 from repro.models.config import ModelConfig
+from repro.obs import Timer
 from repro.optim import AdamWConfig, adamw_init, adamw_update, cosine_schedule
 from repro.train.checkpoint import CheckpointManager
 
@@ -107,12 +107,12 @@ class Trainer:
         history = []
         try:
             for step in range(self.start_step, self.tc.steps):
-                t0 = time.perf_counter()
-                batch = {k: jnp.asarray(v)
-                         for k, v in self.data.next_batch().items()}
-                self.params, self.opt_state, metrics = self._step_fn(
-                    self.params, self.opt_state, batch)
-                dt = time.perf_counter() - t0
+                with Timer() as tm:
+                    batch = {k: jnp.asarray(v)
+                             for k, v in self.data.next_batch().items()}
+                    self.params, self.opt_state, metrics = self._step_fn(
+                        self.params, self.opt_state, batch)
+                dt = tm.dt
                 ema = dt if ema is None else 0.9 * ema + 0.1 * dt
                 if dt > self.tc.straggler_factor * ema:
                     print(f"[watchdog] step {step} straggled: "
