@@ -32,6 +32,9 @@ SUITES = {
     # quantized-KV capacity: bf16 vs int8 KV pages at an equal pool-byte
     # budget (gate: >=1.8x peak resident requests under int8)
     "serving-kv": serving_sweep.run_kv,
+    # speculative decoding: greedy vs n-gram self-speculation at
+    # token-identical streams (gate: >=1.5x tokens/s for the spec cell)
+    "serving-spec": serving_sweep.run_spec,
 }
 
 

@@ -29,9 +29,15 @@ pool (``ServeConfig(kv_dtype="int8")``, docs/quant.md#kv-pages) holding at
 most the same pool *bytes* — the gate is ≥1.8× peak resident requests
 under int8.
 
+``--spec-suite`` runs the speculative-decoding cells instead
+(``sweep_spec``): plain greedy vs n-gram self-speculation
+(``ServeConfig(spec=NGramDrafter(k))``, docs/serving.md
+#speculative-decoding) over one request set, asserting the streams are
+token-identical and the spec cell clears ≥1.5× tokens/s.
+
 Rows go to the shared CSV (benchmarks/common.py) and, matching
 benchmarks/hillclimb.py, to ``serving_sweep.jsonl`` (``serving_kv.jsonl``
-for the kv suite).
+/ ``serving_spec.jsonl`` for the kv / spec suites).
 
   python -m benchmarks.serving_sweep
   python -m benchmarks.serving_sweep --max-len 128 --n-requests 24 \
@@ -56,6 +62,7 @@ from repro.core.plan import AttentionPolicy
 from repro.models import transformer as T
 from repro.serving.engine import ServeConfig, ServingEngine
 from repro.serving.scheduler import Scheduler
+from repro.serving.spec_decode import NGramDrafter
 
 
 def skewed_prompts(rng, n: int, max_len: int, short_frac: float = 0.9
@@ -446,6 +453,138 @@ def sweep_kv(arch: str = "smollm-135m", n_layers: int = 2,
     return rows
 
 
+def _serve_spec_streams(cfg, params, sc: ServeConfig,
+                        prompts: List[List[int]], gen_len: int, axes=None):
+    """Serve every prompt for exactly ``gen_len`` tokens, collecting the
+    FULL per-request stream. A speculative engine's step() returns
+    multi-token *bursts* per handle — ``serve_workload``'s one-token-per-
+    step accounting would undercount them, and the spec gate needs the
+    literal token sequences to prove stream identity anyway. Returns
+    ({prompt index: stream}, stats)."""
+    eng = ServingEngine(cfg, params, sc, axes=axes)
+    streams = {i: [] for i in range(len(prompts))}
+    hmap: dict = {}
+    queue = list(range(len(prompts)))
+    n_steps = 0
+    t0 = time.perf_counter()
+    while queue or hmap:
+        while queue:
+            h = eng.submit(list(prompts[queue[0]]))
+            if h is None:
+                break
+            hmap[h] = queue.pop(0)
+        stepped = eng.step()
+        n_steps += 1
+        for h, t in stepped.items():
+            i = hmap.get(h)
+            if i is None:
+                continue
+            streams[i].extend(t if isinstance(t, list) else [t])
+            if len(streams[i]) >= gen_len:
+                eng.cancel(h)
+                del hmap[h]
+        assert n_steps <= 10_000, "spec workload failed to converge"
+    dt = time.perf_counter() - t0
+    streams = {i: s[:gen_len] for i, s in streams.items()}
+    st = eng.stats()
+    total = sum(len(s) for s in streams.values())
+    return streams, {
+        "tokens": total,
+        "steps": n_steps,
+        "wall_s": round(dt, 3),
+        "tok_per_s": total / max(dt, 1e-9),
+        "spec_acceptance_rate": st.get("spec_acceptance_rate"),
+        "spec_accepted_tokens": st.get("spec_accepted_tokens", 0),
+        "spec_rejected_tokens": st.get("spec_rejected_tokens", 0),
+        "spec_rollback_pages": st.get("spec_rollback_pages", 0),
+        "rollback_pages_per_s": round(
+            st.get("spec_rollback_pages", 0) / max(dt, 1e-9), 3),
+    }
+
+
+def sweep_spec(arch: str = "smollm-135m", n_layers: int = 2,
+               max_len: Optional[int] = None, batch_slots: int = 4,
+               n_requests: int = 4, gen_len: int = 384, page_size: int = 8,
+               draft_k: int = 8, seed: int = 0,
+               jsonl_path: Optional[str] = None):
+    """Speculative-decoding acceptance sweep (docs/serving.md
+    #speculative-decoding): the same greedy request set served by the
+    paged engine with and without n-gram self-speculation
+    (``ServeConfig(spec=NGramDrafter(k))``). Asserted gates:
+
+    * **stream identity** — every spec stream equals the non-spec stream
+      token for token (the tentpole invariant, end to end through the
+      benchmark's own submit/step/cancel loop);
+    * **>=1.5x tokens/s** for the spec cell on this workload.
+
+    Long greedy generations from the smoke model are eventually periodic
+    (tiny vocab + deterministic argmax -> the streams fall into constant
+    runs and short cycles), which is exactly the regime prompt-lookup
+    drafting exploits: the drafter locks onto the period and the verify
+    pass accepts near-full bursts, so one fixed-shape Sq=1+k forward
+    replaces up to k+1 sequential decode steps. The ~1.5x+ here is the
+    *host-interpret* win (fewer Pallas interpret passes); on real
+    hardware the same step reduction applies to the memory-bound decode
+    loop. Also reported: acceptance rate and rollback pages/s — the cost
+    side of speculation (rejected drafts shedding their tail pages)."""
+    cfg = get_smoke_config(arch, n_layers=n_layers, vocab=64)
+    params, axes = T.init_model(jax.random.PRNGKey(seed), cfg)
+    rng = np.random.default_rng(seed)
+    prompts = [rng.integers(0, 64, int(rng.integers(6, 13))).tolist()
+               for _ in range(n_requests)]
+    if max_len is None:
+        # headroom for the longest prompt + gen_len with pages to spare
+        max_len = gen_len + 16
+    paged_attn = AttentionPolicy(backend="paged_interpret",
+                                 page_size=page_size, block_q=16)
+    base = dict(batch_slots=batch_slots, max_len=max_len,
+                attention=paged_attn)
+    cells = {
+        "greedy": ServeConfig(**base),
+        "spec_ngram": ServeConfig(**base, spec=NGramDrafter(k=draft_k)),
+    }
+    rows, streams = [], {}
+    for name, sc in cells.items():
+        s, stats = _serve_spec_streams(cfg, params, sc, prompts, gen_len,
+                                       axes=axes)
+        streams[name] = s
+        row = {"engine": name, "arch": cfg.name, "max_len": max_len,
+               "batch_slots": batch_slots, "page_size": page_size,
+               "n_requests": n_requests, "gen_len": gen_len,
+               "draft_k": draft_k if name != "greedy" else None, **stats}
+        rows.append(row)
+        emit("serving-spec", f"{name}_tok_per_s",
+             round(stats["tok_per_s"], 2), "tok/s",
+             steps=stats["steps"],
+             acceptance=stats["spec_acceptance_rate"],
+             rollback_pages_per_s=stats["rollback_pages_per_s"])
+    for i in range(n_requests):
+        assert streams["spec_ngram"][i] == streams["greedy"][i], (
+            f"stream identity violated for request {i}: speculative "
+            f"greedy decoding must be token-identical to plain greedy")
+    out = jsonl_path or os.path.join(os.path.dirname(__file__),
+                                     "serving_spec.jsonl")
+    with open(out, "w") as f:
+        for r in rows:
+            f.write(json.dumps(r) + "\n")
+    print(f"[serving-spec] wrote {len(rows)} rows to {out}")
+    by = {r["engine"]: r for r in rows}
+    ratio = (by["spec_ngram"]["tok_per_s"]
+             / max(by["greedy"]["tok_per_s"], 1e-9))
+    print(f"[serving-spec] identical streams over {n_requests} requests x "
+          f"{gen_len} tokens: {ratio:.2f}x tokens/s "
+          f"({by['greedy']['tok_per_s']:.1f} -> "
+          f"{by['spec_ngram']['tok_per_s']:.1f}; "
+          f"{by['greedy']['steps']} -> {by['spec_ngram']['steps']} steps), "
+          f"acceptance {by['spec_ngram']['spec_acceptance_rate']:.1%}, "
+          f"rollback {by['spec_ngram']['rollback_pages_per_s']:.1f} "
+          f"pages/s [gate: >=1.5x]")
+    assert ratio >= 1.5, (
+        f"speculative decoding gate failed: {ratio:.2f}x tokens/s < 1.5x "
+        f"(acceptance {by['spec_ngram']['spec_acceptance_rate']:.1%})")
+    return rows
+
+
 def run():
     """Default suite entry (benchmarks.run): CPU-safe sizes."""
     sweep()
@@ -461,6 +600,13 @@ def run_kv():
     """Quantized-KV suite entry (benchmarks.run serving-kv): the
     equal-pool-byte bf16-vs-int8 capacity cells at CPU-safe sizes."""
     sweep_kv()
+
+
+def run_spec():
+    """Speculative-decoding suite entry (benchmarks.run serving-spec):
+    the identical-streams throughput gate (>=1.5x tokens/s with n-gram
+    self-speculation) at CPU-safe sizes."""
+    sweep_spec()
 
 
 def run_tp():
@@ -503,6 +649,12 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                     help="run the quantized-KV capacity sweep instead: "
                          "bf16 vs int8 KV pages at an equal pool-byte "
                          "budget (docs/quant.md#kv-pages)")
+    ap.add_argument("--spec-suite", action="store_true",
+                    help="run the speculative-decoding sweep instead: "
+                         "greedy vs n-gram self-speculation at identical "
+                         "streams (docs/serving.md#speculative-decoding)")
+    ap.add_argument("--draft-k", type=int, default=None,
+                    help="spec suite: per-step draft budget k")
     args = ap.parse_args(argv)
     shape = {k: v for k, v in (("max_len", args.max_len),
                                ("batch_slots", args.batch_slots),
@@ -518,6 +670,12 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     if args.kv_suite:
         sweep_kv(arch=args.arch, n_layers=args.n_layers,
                  page_size=args.page_size, seed=args.seed, **shape)
+        return 0
+    if args.spec_suite:
+        if args.draft_k is not None:
+            shape["draft_k"] = args.draft_k
+        sweep_spec(arch=args.arch, n_layers=args.n_layers,
+                   page_size=args.page_size, seed=args.seed, **shape)
         return 0
     sweep(arch=args.arch, n_layers=args.n_layers, page_size=args.page_size,
           cache_pages_frac=args.cache_pages_frac, seed=args.seed,

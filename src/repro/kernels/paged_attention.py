@@ -28,6 +28,14 @@ Unallocated block-table entries must simply be *valid* page indices (the
 engine leaves them at 0): the length mask already gives their keys zero
 weight, so the fetched bytes are dead — they only have to be fetchable.
 
+The offset/mask semantics buy speculative decoding for free: the
+engine's verify pass (docs/serving.md#speculative-decoding) runs this
+same kernel at ``Sq = 1 + k`` with ``q_positions`` starting at the
+slot's current offset (−1 padding for unused rows), scoring a pending
+token plus ``k`` drafted tokens in one call — chunked prefill, plain
+decode, and speculative verify are all just different ``(Sq,
+q_positions)`` shapes of one contract.
+
 Validated in interpret mode against kernels/ref.py::mha_ref (the pool is
 gathered back to a dense cache for the oracle) in tests/parity.py and
 tests/test_paged_attention.py.

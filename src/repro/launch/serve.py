@@ -82,6 +82,15 @@ def main(argv=None):
                     help="with --prefix-cache: evict cold cached entries "
                          "each step until this many pool pages are free "
                          "(0 = evict only on demand)")
+    ap.add_argument("--spec", default=None, metavar="DRAFTER",
+                    help="speculative decoding on the continuous-batching "
+                         "path: 'ngram' (prompt-lookup self-speculation) or "
+                         "'draft:<arch>' (a registry draft model, e.g. "
+                         "draft:smollm-135m) — greedy only; step() then "
+                         "emits bursts of verified tokens "
+                         "(docs/serving.md#speculative-decoding)")
+    ap.add_argument("--spec-k", type=int, default=4,
+                    help="with --spec: draft budget per request per step")
     ap.add_argument("--prefill-chunk", type=int, default=None,
                     help="tokens of prefill per engine step (chunked "
                          "prefill, interleaved with decode to bound decode "
@@ -164,6 +173,15 @@ def main(argv=None):
               "support slot admission only with --batch-slots 1")
         _write_obs(args, obs)
         return 0
+    spec = None
+    if args.spec:
+        if args.temperature > 0:
+            ap.error("--spec requires greedy sampling (--temperature 0)")
+        from repro.serving.spec_decode import make_drafter
+        spec = make_drafter(args.spec, k=args.spec_k,
+                            max_len=args.max_len, smoke=args.smoke,
+                            seed=args.seed + 1)
+        print(f"[serve] speculative decoding: {args.spec} k={args.spec_k}")
     sc2 = ServeConfig(
         batch_slots=args.batch_slots, max_len=args.max_len, gemm=policy,
         attention=attn, pack_weights=args.pack_weights,
@@ -171,7 +189,7 @@ def main(argv=None):
         cache_pages=args.cache_pages,
         mesh=mesh, prefix_cache=args.prefix_cache and sc.paged(),
         prefix_watermark=args.prefix_watermark, scheduler=scheduler,
-        obs=obs)
+        spec=spec, obs=obs)
     engine2 = ServingEngine(cfg, params, sc2, axes=axes)
     lo = max(1, min(4, args.prompt_len))
     shared = rng.integers(0, cfg.vocab, args.shared_prefix_len).tolist()
@@ -189,7 +207,11 @@ def main(argv=None):
                 pending.pop(0)
                 live += 1
             stepped = engine2.step()
-            done_tokens += len(stepped)
+            # spec engines emit {handle: [tokens]} bursts, plain ones
+            # {handle: token}
+            done_tokens += sum(
+                len(t) if isinstance(t, list) else 1
+                for t in stepped.values())
             # retire a random live request occasionally to exercise
             # recycling (cancel frees the slot — and, when paged, its
             # pool pages)

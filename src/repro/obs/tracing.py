@@ -56,6 +56,7 @@ __all__ = [
 # thread_sort_index in this order; unknown tracks append after).
 PHASE_TRACKS: Tuple[str, ...] = (
     "admit", "prefill-chunk", "decode-step", "preempt", "resume", "evict",
+    "draft", "verify",   # speculative decoding (serving/spec_decode.py)
 )
 
 _ENGINE_PID = 1

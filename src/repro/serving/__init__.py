@@ -5,3 +5,5 @@ from repro.serving.kv_pool import (BlockTable, PagePool,  # noqa: F401
 from repro.serving.prefix_cache import PrefixCache, PrefixHit  # noqa: F401
 from repro.serving.scheduler import (RequestView, Scheduler,  # noqa: F401
                                      SLOScheduler)
+from repro.serving.spec_decode import (DraftModelDrafter,  # noqa: F401
+                                       Drafter, NGramDrafter, make_drafter)

@@ -117,6 +117,16 @@ class ServeConfig:
     # the FIFO-within-priority default that reproduces the PR 4/5
     # choreography (oldest resumes first, youngest preempts first,
     # whole-prompt prefill).
+    spec: Optional[object] = None
+    # speculative decoding (serving/spec_decode.py): a Drafter proposing
+    # up to ``spec.k`` continuation tokens per request per step; the
+    # engine verifies all of them in ONE masked forward (Sq = 1 + k at
+    # each slot's offset), keeps the longest target-agreeing prefix plus
+    # the bonus token, and rolls rejected tokens back (valid-length
+    # reset; paged: BlockTable.truncate). Greedy streams stay
+    # token-identical to spec=None; step() returns {handle: [tokens]}
+    # bursts instead of single tokens. Greedy only (temperature == 0) —
+    # docs/serving.md#speculative-decoding.
     obs: Observability = NULL_OBS
     # observability (repro/obs, docs/observability.md): metrics registry +
     # trace recorder + per-request lifecycle records. The default NULL_OBS
@@ -201,6 +211,29 @@ def make_prefill_step(cfg: ModelConfig, policy: Optional[GemmPolicy] = None,
     return prefill_step
 
 
+def make_verify_step(cfg: ModelConfig, policy: Optional[GemmPolicy] = None,
+                     attn: Optional[AttentionPolicy] = None,
+                     tpctx: Optional[TP.TPContext] = None):
+    """(params, batch{tokens (B,Sq), positions (B,Sq)[, block_tables]},
+    caches) → (greedy (B,Sq) int32, caches). The speculative-verification
+    forward: Sq = 1 + k tokens per row — the pending token plus up to k
+    drafts — at each slot's current offset, under the same masked-write
+    contract as chunked prefill (position −1 rows neither write KV nor
+    bump the valid length; the offset-aware kernels already causal-mask
+    Sq > 1 at arbitrary offsets, so no new kernel is needed). Unlike
+    make_prefill_step this returns the argmax at EVERY query position:
+    column i is the target's greedy choice after consuming the row's
+    tokens [0..i], which is exactly what acceptance compares drafts
+    against. Greedy-only by design — distribution-preserving rejection
+    sampling for temperature > 0 is out of scope here."""
+    def verify_step(params, batch, caches):
+        with _policy_scope(policy, attn, tpctx):
+            logits, caches, _ = T.forward(params, cfg, batch, caches=caches,
+                                          remat=False)
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), caches
+    return verify_step
+
+
 def make_decode_step(cfg: ModelConfig, policy: Optional[GemmPolicy] = None,
                      attn: Optional[AttentionPolicy] = None,
                      tpctx: Optional[TP.TPContext] = None):
@@ -272,6 +305,26 @@ class ServingEngine:
         attn = sc.attn_policy()   # validates kv_dtype via AttentionPolicy
         self.decode = jax.jit(make_decode_step(cfg, pol, attn, self.tp))
         self.prefill = jax.jit(make_prefill_step(cfg, pol, attn, self.tp))
+        self.spec = sc.spec
+        if self.spec is not None:
+            if sc.temperature > 0:
+                raise ValueError(
+                    "ServeConfig.spec requires greedy sampling "
+                    "(temperature == 0): acceptance compares drafts "
+                    "against the target's argmax, and the rollback path "
+                    "implements no distribution-preserving rejection "
+                    "sampling (docs/serving.md#speculative-decoding)")
+            if cfg.family in ("ssm", "hybrid"):
+                raise ValueError(
+                    "ServeConfig.spec requires position-masked multi-"
+                    "token cache writes; SSD/conv recurrent state has no "
+                    "positions to mask or roll back")
+            if int(getattr(self.spec, "k", 0)) < 1:
+                raise ValueError(
+                    f"ServeConfig.spec drafter needs k >= 1 "
+                    f"(got {getattr(self.spec, 'k', None)!r}); see "
+                    f"serving/spec_decode.py")
+            self.verify = jax.jit(make_verify_step(cfg, pol, attn, self.tp))
         B = sc.batch_slots
         self.paged = sc.paged()
         if sc.kv_dtype is not None and not self.paged:
@@ -299,6 +352,7 @@ class ServingEngine:
                                         kind="resume")
             self._m_preemptions = m.counter("engine_preemptions_total")
             self._m_retired = m.counter("engine_retired_total")
+            self._m_cancelled = m.counter("engine_cancelled_total")
             self._m_live = m.gauge("engine_live_requests")
             self._m_waiting = m.gauge("engine_waiting_requests")
             self._h_prefill = m.histogram("engine_prefill_chunk_s",
@@ -307,6 +361,17 @@ class ServingEngine:
                                          TIME_BUCKETS_S)
             self._h_ttft = m.histogram("request_ttft_s", TIME_BUCKETS_S)
             self._h_itl = m.histogram("request_itl_s", TIME_BUCKETS_S)
+            if self.spec is not None:
+                self._m_spec_accepted = m.counter("spec_tokens_total",
+                                                  verdict="accepted")
+                self._m_spec_rejected = m.counter("spec_tokens_total",
+                                                  verdict="rejected")
+                self._m_spec_rollback = m.counter(
+                    "spec_rollback_pages_total")
+                self._h_spec_accept = m.histogram(
+                    "spec_acceptance_rate",
+                    buckets=(0.125, 0.25, 0.375, 0.5,
+                             0.625, 0.75, 0.875, 1.0))
             self.scheduler.bind_metrics(m)
         # handle → lifecycle record (RequestTrace), built only when obs is
         # enabled; persists past retirement so finished streams stay
@@ -345,7 +410,6 @@ class ServingEngine:
             self.block_tables = np.zeros((B, self.n_blocks), np.int32)
             self.slot_tables: List[Optional[BlockTable]] = [None] * B
             self.slot_rid = np.full(B, -1, np.int64)
-            self.slot_prompt: List[List[int]] = [[] for _ in range(B)]
             self.wait: List[_Waiting] = []
             # rid → accumulated output stream. Entries persist past natural
             # retirement so the caller can read the finished stream; a
@@ -360,6 +424,10 @@ class ServingEngine:
         self.slot_pos = np.zeros(B, np.int32)
         self.slot_live = np.zeros(B, bool)
         self.slot_out: List[List[int]] = [[] for _ in range(B)]
+        # The ORIGINAL prompt per slot: prefix-cache indexing (paged) and
+        # the drafter's context (spec) both need it; dense engines fill it
+        # too so speculation works on contiguous caches.
+        self.slot_prompt: List[List[int]] = [[] for _ in range(B)]
         # Next sampled token per slot, already decoded but not yet reported:
         # seeded by submit() from the prefill logits, advanced by step().
         self.slot_next = np.zeros(B, np.int32)
@@ -384,6 +452,12 @@ class ServingEngine:
         self.n_preemptions = 0
         self.prefill_tokens = 0
         self.decode_tokens = 0
+        # Speculative-decoding counters (stats()): drafted tokens the
+        # target's greedy choice confirmed vs rejected, and pool pages
+        # returned by rejection rollback (BlockTable.truncate).
+        self.spec_accepted = 0
+        self.spec_rejected = 0
+        self.spec_rollback_pages = 0
 
     # -- shared helpers -----------------------------------------------------
     def _sample(self, logits: jax.Array,
@@ -428,6 +502,30 @@ class ServingEngine:
                 out = {k: rec(v) for k, v in node.items()}
                 if "len" in out:
                     out["len"] = out["len"].at[..., slot].set(n)
+                return out
+            if isinstance(node, (list, tuple)):
+                return type(node)(rec(v) for v in node)
+            return node
+        self.caches = rec(self.caches)
+
+    def _set_slot_lens(self, updates: Dict[int, int]):
+        """Batched :meth:`_set_slot_len`: one cache-tree pass setting
+        several slots' valid lengths at once. The speculative-decoding
+        rollback path uses this — a verify pass wrote 1 + k tokens per
+        slot (the len update is additive inside the jitted forward), and
+        every slot with rejected drafts must shrink back to its accepted
+        count before the next forward reads kv_valid_len."""
+        if not updates:
+            return
+        idx = np.fromiter(updates.keys(), np.int32, count=len(updates))
+        val = jnp.asarray(
+            np.fromiter(updates.values(), np.int32, count=len(updates)))
+
+        def rec(node):
+            if isinstance(node, dict):
+                out = {k: rec(v) for k, v in node.items()}
+                if "len" in out:
+                    out["len"] = out["len"].at[..., idx].set(val)
                 return out
             if isinstance(node, (list, tuple)):
                 return type(node)(rec(v) for v in node)
@@ -516,14 +614,40 @@ class ServingEngine:
         return int(self.slot_rid[slot]) if self.paged else slot
 
     def _view(self, slot: int) -> RequestView:
-        """The read-only snapshot the scheduler judges a live slot by."""
+        """The read-only snapshot the scheduler judges a live slot by.
+        ``lookahead`` tells the policy how many *speculated* positions
+        this request may additionally claim pages for next step — its
+        page appetite under ServeConfig.spec is 1 + lookahead, not 1."""
+        spec_ahead = (int(self.spec.k)
+                      if self.spec is not None
+                      and not self.slot_prefilling[slot]
+                      and not self.slot_drain[slot] else 0)
         return RequestView(
             rid=self._handle(slot),
             priority=int(self.slot_priority[slot]),
             deadline=self.slot_deadline[slot],
             arrival=int(self.slot_arrival[slot]),
             n_tokens=int(self.slot_pos[slot]),
-            prefilling=bool(self.slot_prefilling[slot]))
+            prefilling=bool(self.slot_prefilling[slot]),
+            lookahead=spec_ahead)
+
+    def _slot_of_rid(self, rid: int) -> int:
+        """The live slot holding request ``rid``; raises a descriptive
+        RuntimeError when no live slot does. Victim resolution goes
+        through here — a Scheduler.victim subclass returning a rid that
+        is not live used to surface as a bare StopIteration from
+        ``next()``, which reads as an internal iterator bug instead of a
+        policy-contract violation."""
+        for s in range(self.sc.batch_slots):
+            if self.slot_live[s] and self._handle(s) == rid:
+                return s
+        live = sorted(self._handle(s) for s in range(self.sc.batch_slots)
+                      if self.slot_live[s])
+        raise RuntimeError(
+            f"scheduler victim() returned rid {rid}, which is not a live "
+            f"request (live rids: {live}); victim() must return the rid "
+            f"of one of the RequestViews it was passed "
+            f"(serving/scheduler.py)")
 
     # -- single-prompt helpers (used by tests/examples) ---------------------
     def generate(self, prompts: np.ndarray, n_tokens: int,
@@ -695,6 +819,7 @@ class ServingEngine:
             self.slot_priority[slot] = priority
             self.slot_deadline[slot] = deadline
             self.slot_arrival[slot] = arrival
+            self.slot_prompt[slot] = prompt
             self._begin_admit(slot, prompt, key=key)
             if obs.enabled:
                 obs.trace.complete("admit", f"admit {slot}", t0,
@@ -724,7 +849,7 @@ class ServingEngine:
             if not live:
                 return None
             vrid = self.scheduler.victim([self._view(s) for s in live])
-            vslot = next(s for s in live if self._handle(s) == vrid)
+            vslot = self._slot_of_rid(vrid)
             if not self.scheduler.should_preempt(incoming,
                                                  self._view(vslot)):
                 return None          # page/slot-bound, not worth churning
@@ -1009,11 +1134,21 @@ class ServingEngine:
         if obs.enabled and admitted:
             self._m_waiting.set(len(self.wait))
 
-    def _grow_pages_for_decode(self):
+    def _grow_pages_for_decode(self, drafts: Optional[Dict[int, List[int]]]
+                               = None):
         """Back every decodable slot's next position with a page, oldest
         request first; when the pool is dry — after cold prefix entries
         are evicted — preempt the scheduler's victim (possibly the
-        requester itself) until it isn't."""
+        requester itself) until it isn't.
+
+        ``drafts`` (speculative decoding) adds each slot's drafted
+        positions to its page budget: the verify pass writes 1 + k
+        tokens, so all of them must be page-backed up front. Speculated
+        growth is strictly opportunistic — it never preempts (churning a
+        live request for tokens that may be rejected is pure loss);
+        instead the slot's draft list is trimmed in place to the
+        positions the pool can actually back, degrading toward plain
+        one-token decode under pressure."""
         order = sorted(
             (s for s in range(self.sc.batch_slots)
              if self.slot_live[s] and not self.slot_drain[s]
@@ -1023,30 +1158,55 @@ class ServingEngine:
             if not self.slot_live[s]:
                 continue               # preempted by an older slot's growth
             pos = int(self.slot_pos[s])
-            if pos < self.slot_tables[s].capacity():
-                continue
-            while not self._ensure_free(1):
-                vrid = self.scheduler.victim(
-                    [self._view(t) for t in range(self.sc.batch_slots)
-                     if self.slot_live[t]])
-                victim = next(t for t in range(self.sc.batch_slots)
-                              if self.slot_live[t]
-                              and self._handle(t) == vrid)
-                self._preempt(victim)
-                if victim == s:
-                    break              # self-preempted: wait queue, no grow
-            if not self.slot_live[s]:
-                continue
-            self.slot_tables[s].ensure(pos + 1)
-            self.slot_tables[s].as_row(self.n_blocks,
-                                       out=self.block_tables[s])
+            if pos >= self.slot_tables[s].capacity():
+                while not self._ensure_free(1):
+                    vrid = self.scheduler.victim(
+                        [self._view(t) for t in range(self.sc.batch_slots)
+                         if self.slot_live[t]])
+                    victim = self._slot_of_rid(vrid)
+                    self._preempt(victim)
+                    if victim == s:
+                        break          # self-preempted: wait queue, no grow
+                if not self.slot_live[s]:
+                    continue
+                self.slot_tables[s].ensure(pos + 1)
+            tbl = self.slot_tables[s]
+            if drafts and drafts.get(s):
+                m = len(drafts[s])
+                need = self.pool.pages_needed(pos + 1 + m) - tbl.n_pages
+                if need > 0:
+                    if not self._ensure_free(need):
+                        # trim to what the pool backs right now (never
+                        # preempt for speculation); capacity() already
+                        # covers pos + 1, so fit >= 0
+                        fit = (tbl.capacity() + self.pool.free_pages
+                               * self.pool.page_size) - (pos + 1)
+                        drafts[s] = drafts[s][:max(fit, 0)]
+                        need = (self.pool.pages_needed(
+                            pos + 1 + len(drafts[s])) - tbl.n_pages)
+                    if need > 0:
+                        tbl.ensure(pos + 1 + len(drafts[s]))
+            tbl.as_row(self.n_blocks, out=self.block_tables[s])
 
-    def _retire(self, slot: int):
+    def _retire(self, slot: int, *, cancelled: bool = False):
+        """Release ``slot``. ``cancelled`` marks a caller-initiated abort
+        (cancel() of a live request): the trace's async span then closes
+        with ``{"cancelled": true}`` — matching the wait-queue cancel
+        branch — and the cancelled counter moves instead of the retired
+        one, so traces and slo_report() can tell an abort from a natural
+        completion."""
         obs = self.obs
         if obs.enabled:
             h = self._handle(slot)   # before slot_rid resets below
-            self._m_retired.inc()
-            obs.trace.async_end(h, {"n_tokens": len(self.slot_out[slot])})
+            if cancelled:
+                self._m_cancelled.inc()
+                obs.trace.async_end(
+                    h, {"cancelled": True,
+                        "n_tokens": len(self.slot_out[slot])})
+            else:
+                self._m_retired.inc()
+                obs.trace.async_end(h,
+                                    {"n_tokens": len(self.slot_out[slot])})
             rt = self.request_traces.get(h)
             if rt is not None and rt.retire_s is None:
                 rt.retire_s = time.perf_counter()
@@ -1070,12 +1230,12 @@ class ServingEngine:
         its pages (or its wait-queue entry). Returns True if found."""
         if not self.paged:
             if 0 <= handle < self.sc.batch_slots and self.slot_live[handle]:
-                self._retire(handle)
+                self._retire(handle, cancelled=True)
                 return True
             return False
         for s in range(self.sc.batch_slots):
             if self.slot_live[s] and self.slot_rid[s] == handle:
-                self._retire(s)
+                self._retire(s, cancelled=True)
                 self.request_out.pop(handle, None)
                 return True
         for i, w in enumerate(self.wait):
@@ -1083,6 +1243,7 @@ class ServingEngine:
                 self.wait.pop(i)
                 self.request_out.pop(handle, None)
                 if self.obs.enabled:
+                    self._m_cancelled.inc()
                     self._m_waiting.set(len(self.wait))
                     self.obs.trace.async_end(handle, {"cancelled": True})
                     rt = self.request_traces.get(handle)
@@ -1115,6 +1276,12 @@ class ServingEngine:
         index written) enters a one-round *drain*: its final pending token
         — freshly decoded last round — is still reported before the slot
         retires, so no token of the stream is ever dropped at retirement.
+
+        With ``ServeConfig.spec`` the iteration is speculative
+        (:meth:`_spec_step`) and the result is ``{handle: [tokens]}`` —
+        a burst of accepted tokens per request — instead of one token
+        each; concatenated bursts equal the non-speculative stream
+        exactly (docs/serving.md#speculative-decoding).
         """
         self.tick += 1
         obs = self.obs
@@ -1140,6 +1307,8 @@ class ServingEngine:
             s = min(pf, key=lambda t: (self.slot_priority[t],
                                        self.slot_arrival[t], t))
             self._prefill_slot_chunk(s)
+        if self.spec is not None:
+            return self._spec_step()
         if self.paged:
             self._grow_pages_for_decode()
         decodable = (self.slot_live & ~self.slot_drain
@@ -1182,6 +1351,146 @@ class ServingEngine:
             self.slot_pos[s] += 1
             if self.slot_pos[s] >= self.sc.max_len:
                 self.slot_drain[s] = True   # flush slot_next next round
+        return out
+
+    def _spec_step(self) -> Dict[int, List[int]]:
+        """One speculative iteration: draft → verify → accept → rollback.
+
+        Per decodable slot the drafter proposes up to ``spec.k`` tokens
+        (capped to the ``max_len`` horizon, then — paged — to the pages
+        the pool can back without preempting anyone). ONE verify forward
+        runs every slot's row ``[pending] + drafts`` at positions
+        ``pos..pos+m`` (fixed Sq = 1 + k, position −1 padded: a single
+        compiled shape regardless of per-slot draft counts); column ``i``
+        of its argmax is the target's greedy choice after consuming the
+        row's tokens ``[0..i]``. Acceptance keeps the longest prefix of
+        drafts the argmax agrees with, the column after the last accepted
+        draft becomes the new pending (the "bonus" token — exactly what
+        non-speculative decode would have sampled there), and rejected
+        suffixes roll back: valid lengths reset to the accepted count
+        (the jitted forward's len update is additive and counted every
+        non-masked row) and wholly-rejected tail pages return to the pool
+        (:meth:`BlockTable.truncate`). Every reported token is therefore
+        the target's argmax given exactly the tokens before it — greedy
+        streams are token-identical to ``spec=None`` by construction.
+
+        Draining slots flush their pending final token as a one-token
+        burst and retire, mirroring the non-speculative drain round.
+        """
+        obs = self.obs
+        k = int(self.spec.k)
+        decodable = (self.slot_live & ~self.slot_drain
+                     & ~self.slot_prefilling)
+        drafts: Dict[int, List[int]] = {}
+        if decodable.any():
+            t0 = time.perf_counter() if obs.enabled else 0.0
+            for s in np.nonzero(decodable)[0]:
+                s = int(s)
+                pos = int(self.slot_pos[s])
+                # verify writes positions pos..pos+m; the last writable
+                # cache index is max_len - 1, so m <= max_len - 1 - pos
+                cap = min(k, self.sc.max_len - 1 - pos)
+                d: List[int] = []
+                if cap >= 1:
+                    ctx = (self.slot_prompt[s] + self.slot_out[s]
+                           + [int(self.slot_next[s])])
+                    d = [int(t) for t in self.spec.draft(ctx, cap)][:cap]
+                drafts[s] = d
+            if obs.enabled:
+                obs.trace.complete(
+                    "draft", f"draft x{len(drafts)}", t0,
+                    args={"slots": len(drafts),
+                          "tokens": sum(len(d) for d in drafts.values()),
+                          "tick": self.tick})
+        if self.paged:
+            # may preempt for the base pos+1 page and TRIM drafts in
+            # place when speculation alone would exhaust the pool
+            self._grow_pages_for_decode(drafts)
+            decodable = (self.slot_live & ~self.slot_drain
+                         & ~self.slot_prefilling)
+        nxt = None
+        if decodable.any():
+            t0 = time.perf_counter() if obs.enabled else 0.0
+            B = self.sc.batch_slots
+            tok = np.zeros((B, 1 + k), np.int32)
+            pos2 = np.full((B, 1 + k), -1, np.int32)
+            for s in np.nonzero(decodable)[0]:
+                s = int(s)
+                d = drafts.get(s, [])
+                m = len(d)
+                p = int(self.slot_pos[s])
+                tok[s, 0] = int(self.slot_next[s])
+                tok[s, 1:1 + m] = d
+                pos2[s, :1 + m] = np.arange(p, p + 1 + m)
+            batch = {"tokens": self._dev(tok),
+                     "positions": self._dev(pos2)}
+            if self.paged:
+                batch["block_tables"] = self._bt_device()
+            greedy, self.caches = self.verify(self.params, batch,
+                                              self.caches)
+            nxt = np.asarray(greedy)
+            if obs.enabled:
+                t1 = time.perf_counter()
+                self._h_decode.observe(t1 - t0)
+                obs.trace.complete(
+                    "verify", f"verify x{int(decodable.sum())}", t0, t1,
+                    args={"slots": int(decodable.sum()),
+                          "tick": self.tick})
+        out: Dict[int, List[int]] = {}
+        len_resets: Dict[int, int] = {}
+        for s in range(self.sc.batch_slots):
+            if not self.slot_live[s] or self.slot_prefilling[s]:
+                continue
+            h = self._handle(s)
+            if self.slot_drain[s]:      # flush the final pending token
+                t = int(self.slot_next[s])
+                self.slot_out[s].append(t)
+                out[h] = [t]
+                if obs.enabled:
+                    self._obs_token(s, h, t)
+                self._retire(s)
+                continue
+            p = int(self.slot_pos[s])
+            d = drafts.get(s, [])
+            m = len(d)
+            g = nxt[s]
+            j = 0
+            while j < m and d[j] == int(g[j]):
+                j += 1
+            burst = [int(self.slot_next[s])] + d[:j]
+            for t in burst:
+                self.slot_out[s].append(t)
+                if obs.enabled:
+                    self._obs_token(s, h, t)
+            out[h] = burst
+            self.spec_accepted += j
+            self.spec_rejected += m - j
+            self.decode_tokens += 1 + j
+            new_pos = p + 1 + j
+            if j < m:
+                # rejected suffix: the verify pass wrote (and len-counted)
+                # positions new_pos..p+m — shrink the valid length back
+                # and return wholly-rejected tail pages to the pool
+                len_resets[s] = new_pos
+                if self.paged:
+                    dropped = self.slot_tables[s].truncate(new_pos)
+                    if dropped:
+                        self.spec_rollback_pages += len(dropped)
+                        if obs.enabled:
+                            self._m_spec_rollback.inc(len(dropped))
+                        self.slot_tables[s].as_row(
+                            self.n_blocks, out=self.block_tables[s])
+            if obs.enabled:
+                self._m_decode_tokens.inc(1 + j)
+                self._m_spec_accepted.inc(j)
+                self._m_spec_rejected.inc(m - j)
+                if m:
+                    self._h_spec_accept.observe(j / m)
+            self.slot_next[s] = int(g[j])
+            self.slot_pos[s] = new_pos
+            if new_pos >= self.sc.max_len:
+                self.slot_drain[s] = True   # flush slot_next next round
+        self._set_slot_lens(len_resets)
         return out
 
     # -- observability -------------------------------------------------------
@@ -1238,6 +1547,13 @@ class ServingEngine:
             "prefill_tokens": self.prefill_tokens,
             "decode_tokens": self.decode_tokens,
         }
+        if self.spec is not None:
+            seen = self.spec_accepted + self.spec_rejected
+            d["spec_accepted_tokens"] = self.spec_accepted
+            d["spec_rejected_tokens"] = self.spec_rejected
+            d["spec_rollback_pages"] = self.spec_rollback_pages
+            d["spec_acceptance_rate"] = (
+                self.spec_accepted / seen if seen else 0.0)
         if self.paged:
             d["pool_pages"] = self.pool.n_pages
             d["pool_free_pages"] = self.pool.free_pages

@@ -213,24 +213,31 @@ class AsyncServingEngine:
                 flight = self._active.get(handle)
                 if flight is None:
                     continue           # cancelled while its step ran
-                flight.got += 1
-                flight.queue.put_nowait(tok)
-                if flight.got == 1:
-                    self._ttfts.append(now - flight.t_submit)
-                    if flight.deadline is not None and now > flight.deadline:
-                        self._deadline_misses += 1
-                        if self._m_misses is not None:
-                            self._m_misses.inc()
-                        rt = eng.request_traces.get(handle)
-                        if rt is not None:
-                            rt.deadline_missed = True
-                    elif flight.deadline is not None:
-                        rt = eng.request_traces.get(handle)
-                        if rt is not None:
-                            rt.deadline_missed = False
-                else:
-                    self._itls.append(now - flight.t_last)
-                flight.t_last = now
+                # speculative engines (ServeConfig.spec) emit a *burst* of
+                # accepted tokens per request per step; plain engines one
+                burst = tok if isinstance(tok, list) else (tok,)
+                for t in burst:
+                    if flight.got >= flight.n_tokens:
+                        break          # burst overshot the request: drop
+                    flight.got += 1
+                    flight.queue.put_nowait(t)
+                    if flight.got == 1:
+                        self._ttfts.append(now - flight.t_submit)
+                        if (flight.deadline is not None
+                                and now > flight.deadline):
+                            self._deadline_misses += 1
+                            if self._m_misses is not None:
+                                self._m_misses.inc()
+                            rt = eng.request_traces.get(handle)
+                            if rt is not None:
+                                rt.deadline_missed = True
+                        elif flight.deadline is not None:
+                            rt = eng.request_traces.get(handle)
+                            if rt is not None:
+                                rt.deadline_missed = False
+                    else:
+                        self._itls.append(now - flight.t_last)
+                    flight.t_last = now
                 if flight.got >= flight.n_tokens:
                     self._completed += 1
                     self._finish(flight)

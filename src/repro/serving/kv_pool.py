@@ -243,6 +243,33 @@ class BlockTable:
         self.pool.release(self.pages)
         self.pages = []
 
+    def truncate(self, n_tokens: int) -> List[int]:
+        """Shrink the table to back only ``n_tokens`` positions, dropping
+        this table's reference on every page past them; returns the
+        dropped pages. The speculative-decoding rollback primitive
+        (docs/serving.md#speculative-decoding): rejected drafted tokens
+        live past the accepted length, so their *wholly-rejected* tail
+        pages go back to the pool while the final partial page stays —
+        its leading rows are still logical content, and stale rows beyond
+        ``n_tokens`` are masked by the cache's valid length.
+
+        Refcount/COW-safe by construction: only one *reference* per
+        dropped page is released, so a page still held by the prefix
+        cache (or any other sharer) stays resident for its other holders.
+        Like :meth:`free`, the release is all-or-nothing — a failed
+        release leaves the table's ownership record intact. Truncating to
+        a count the table already fits (including repeat truncates to the
+        same length) is a no-op returning ``[]``."""
+        if n_tokens < 0:
+            raise ValueError(f"truncate({n_tokens})")
+        keep = self.pool.pages_needed(n_tokens)
+        if keep >= len(self.pages):
+            return []
+        dropped = self.pages[keep:]
+        self.pool.release(dropped)
+        self.pages = self.pages[:keep]
+        return dropped
+
     def as_row(self, n_blocks: int, out: Optional[np.ndarray] = None
                ) -> np.ndarray:
         """The (n_blocks,) int32 device row; unallocated entries are 0."""

@@ -58,6 +58,11 @@ class RequestView:
     arrival: int = 0                  # engine tick at submit
     n_tokens: int = 0                 # prompt + generated so far
     prefilling: bool = False
+    # speculative decoding: tokens this request may *additionally* write
+    # next step (the drafter's budget). Policies costing page pressure
+    # should treat the request as n_tokens + lookahead deep — speculated
+    # positions need page backing before the verify pass runs.
+    lookahead: int = 0
 
 
 class Scheduler:

@@ -428,3 +428,144 @@ def test_prefix_cache_invariants_under_interleavings(page_size, ops):
     cache.clear()
     pool.check()
     assert pool.free_pages == pool.n_pages
+
+
+# ---------------------------------------------------------------------------
+# truncate() — the speculative-decoding rollback primitive
+# ---------------------------------------------------------------------------
+
+def test_truncate_releases_tail_pages_only():
+    pool = PagePool(8, 4)
+    tbl = BlockTable(pool)
+    tbl.ensure(14)                       # 4 pages back 14 tokens
+    assert tbl.n_pages == 4
+    dropped = tbl.truncate(6)            # keep 2 pages (positions 0..7)
+    assert len(dropped) == 2
+    assert tbl.n_pages == 2 and tbl.capacity() == 8
+    assert pool.free_pages == 6
+    pool.check()
+
+
+def test_truncate_is_noop_when_already_fits():
+    pool = PagePool(4, 4)
+    tbl = BlockTable(pool)
+    tbl.ensure(7)
+    assert tbl.truncate(8) == []         # 2 pages already cover 8
+    assert tbl.truncate(7) == []
+    assert tbl.truncate(5) == []         # same page count
+    assert tbl.n_pages == 2
+    dropped = tbl.truncate(4)
+    assert len(dropped) == 1
+    assert tbl.truncate(4) == []         # repeat truncate: no-op
+    pool.check()
+
+
+def test_truncate_to_zero_frees_everything_and_rejects_negative():
+    pool = PagePool(4, 4)
+    tbl = BlockTable(pool)
+    tbl.ensure(10)
+    assert len(tbl.truncate(0)) == 3
+    assert tbl.pages == [] and pool.free_pages == 4
+    with pytest.raises(ValueError):
+        tbl.truncate(-1)
+    pool.check()
+
+
+def test_truncate_spares_shared_pages():
+    """COW/refcount safety: truncate drops only THIS table's reference —
+    a tail page the prefix cache still retains stays resident for it."""
+    pool = PagePool(4, 4)
+    tbl = BlockTable(pool)
+    tbl.ensure(12)                       # pages for positions 0..11
+    shared = tbl.pages[2]
+    pool.retain([shared])                # the cache's hold
+    dropped = tbl.truncate(5)            # keeps 2 pages, drops index 2
+    assert dropped == [shared]
+    assert pool.refcount[shared] == 1    # cache hold survives
+    assert shared not in pool._free
+    pool.release([shared])               # cache lets go → now truly free
+    assert pool.free_pages == 2          # table still holds its 2 pages
+    pool.check()
+
+
+def test_truncate_then_regrow_reuses_fresh_pages():
+    """Rollback then decode growth: the re-grown table stays disjoint
+    from everything else and accounting balances."""
+    pool = PagePool(6, 4)
+    a, b = BlockTable(pool), BlockTable(pool)
+    a.ensure(12)
+    b.ensure(8)
+    a.truncate(5)
+    a.ensure(16)                         # regrow past the old length
+    assert not set(a.pages) & set(b.pages)
+    pool.check()
+    a.free()
+    b.free()
+    assert pool.free_pages == 6
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.integers(4, 24), st.integers(1, 8),
+       st.lists(st.tuples(st.integers(0, 5), st.integers(0, 40)),
+                min_size=1, max_size=80))
+def test_alloc_fork_truncate_free_interleavings(n_pages, page_size, ops):
+    """Satellite property: ANY interleaving of alloc / fork (COW under a
+    sharer's retain) / truncate / grow / free returns the pool to its
+    baseline free count, never double-frees, and keeps live tables
+    disjoint. Ops: (0, n) admit; (1, i) grow one token; (2, x) truncate
+    request x to a random smaller length; (3, x) COW-fork request x's
+    first page under a cache retain; (4, x) free; (5, x) cache drops one
+    of its holds."""
+    pool = PagePool(n_pages, page_size)
+    live = {}                            # rid -> [BlockTable, n_tokens]
+    cache_held = []                      # pages a pseudo prefix-cache retains
+    next_rid = 0
+    for kind, arg in ops:
+        if kind == 0:                    # admit arg%40 + 1 tokens
+            n = arg % 40 + 1
+            tbl = BlockTable(pool)
+            if pool.can_alloc(pool.pages_needed(n)):
+                tbl.ensure(n)
+                live[next_rid] = [tbl, n]
+                next_rid += 1
+        elif kind == 1 and live:         # grow one token (decode)
+            rid = sorted(live)[arg % len(live)]
+            tbl, n = live[rid]
+            if pool.can_alloc(pool.pages_needed(n + 1) - tbl.n_pages):
+                tbl.ensure(n + 1)
+                live[rid][1] = n + 1
+        elif kind == 2 and live:         # rollback (truncate)
+            rid = sorted(live)[arg % len(live)]
+            tbl, n = live[rid]
+            keep = arg % (n + 1)
+            before = tbl.n_pages
+            dropped = tbl.truncate(keep)
+            assert tbl.n_pages == before - len(dropped)
+            assert tbl.capacity() >= keep
+            live[rid][1] = keep
+        elif kind == 3 and live:         # COW fork under a cache retain
+            rid = sorted(live)[arg % len(live)]
+            tbl, _ = live[rid]
+            if tbl.pages and pool.can_alloc(1):
+                src = tbl.pages[0]
+                pool.retain([src])       # the cache becomes a sharer
+                cache_held.append(src)
+                dst = pool.fork(src)
+                tbl.pages[0] = dst       # writer swaps in the private copy
+                pool.release([src])      # …and drops its ref on the donor
+        elif kind == 4 and live:         # retire
+            rid = sorted(live)[arg % len(live)]
+            live.pop(rid)[0].free()
+        elif kind == 5 and cache_held:   # cache eviction
+            pool.release([cache_held.pop(arg % len(cache_held))])
+        # -- invariants ----------------------------------------------------
+        pool.check()
+        owned = [p for tbl, _ in live.values() for p in tbl.pages]
+        assert len(owned) == len(set(owned)), \
+            "a page is referenced by two live block tables"
+    for tbl, _ in live.values():
+        tbl.free()
+    for p in cache_held:
+        pool.release([p])
+    pool.check()
+    assert pool.free_pages == pool.n_pages   # baseline restored

@@ -328,3 +328,89 @@ def test_instrumented_engine_trace_lint_clean(setup):
     eng = ServingEngine(cfg, params, ServeConfig(
         batch_slots=2, max_len=32, obs=Observability()))
     assert lint_engine(eng) == []
+
+
+def test_cancel_live_slot_emits_cancelled_end(setup):
+    """Satellite bugfix: cancel() of a LIVE request must close its async
+    span with {"cancelled": true} and move the cancelled counter, not the
+    retired one — previously only the wait-queue branch did, so a live
+    cancel was indistinguishable from a natural completion in traces and
+    slo_report()."""
+    cfg, params = setup
+    for sc in (ServeConfig(batch_slots=2, max_len=32,
+                           obs=Observability()),
+               ServeConfig(batch_slots=2, max_len=32, attention=PAGED8,
+                           obs=Observability())):
+        eng = ServingEngine(cfg, params, sc)
+        h = eng.submit([1, 2, 3])
+        eng.step()
+        eng.step()
+        assert eng.cancel(h) is True
+        c = sc.obs.metrics.snapshot()["counters"]
+        assert c["engine_cancelled_total"] == 1
+        assert c.get("engine_retired_total", 0) == 0
+        ends = [e for e in sc.obs.trace.export()["traceEvents"]
+                if e["ph"] == "e" and e["id"] == str(h)]
+        assert len(ends) == 1
+        assert ends[0]["args"]["cancelled"] is True
+        assert ends[0]["args"]["n_tokens"] == 2
+
+
+def test_cancel_waiting_request_still_counts_cancelled(setup):
+    """The wait-queue cancel branch moves the same counter as the
+    live-slot branch — one counter, both abort paths."""
+    cfg, params = setup
+    obs = Observability()
+    eng = ServingEngine(cfg, params, ServeConfig(
+        batch_slots=2, max_len=16, attention=PAGED8, cache_pages=2,
+        obs=obs))
+    r0 = eng.submit([1, 2, 3])
+    assert r0 is not None
+    for _ in range(12):                   # decode until r0 gets preempted
+        eng.step()
+        if any(w.rid == r0 for w in eng.wait):
+            break
+    # force the queue case if pressure alone didn't park it
+    if not any(w.rid == r0 for w in eng.wait):
+        s = next(s for s in range(2) if eng.slot_live[s]
+                 and int(eng.slot_rid[s]) == r0)
+        eng._preempt(s)
+    assert eng.cancel(r0) is True
+    c = obs.metrics.snapshot()["counters"]
+    assert c["engine_cancelled_total"] == 1
+    assert c.get("engine_retired_total", 0) == 0
+
+
+def test_spec_metrics_and_phase_spans(setup):
+    """Speculative decoding telemetry: accepted/rejected counters match
+    stats(), the acceptance histogram fills, and draft/verify spans land
+    on their own phase tracks."""
+    from repro.serving.spec_decode import NGramDrafter
+    cfg, params = setup
+    obs = Observability()
+    eng = ServingEngine(cfg, params, ServeConfig(
+        batch_slots=2, max_len=48, attention=PAGED8,
+        spec=NGramDrafter(k=4), obs=obs))
+    eng.submit([7, 7, 7, 7, 7, 7])
+    eng.submit([1, 2, 3, 1, 2, 3])
+    for _ in range(10):
+        eng.step()
+    st = eng.stats()
+    assert st["spec_accepted_tokens"] + st["spec_rejected_tokens"] > 0
+    snap = obs.metrics.snapshot()
+    c = snap["counters"]
+    assert c["spec_tokens_total{verdict=accepted}"] == \
+        st["spec_accepted_tokens"]
+    assert c["spec_tokens_total{verdict=rejected}"] == \
+        st["spec_rejected_tokens"]
+    assert c.get("spec_rollback_pages_total", 0) == \
+        st["spec_rollback_pages"]
+    assert snap["histograms"]["spec_acceptance_rate"]["count"] >= 1
+    doc = obs.trace.export()
+    assert validate_trace(doc) == []
+    tracks = {e["args"]["name"] for e in doc["traceEvents"]
+              if e["ph"] == "M" and e["name"] == "thread_name"}
+    assert {"draft", "verify"} <= tracks
+    spans = {e["name"] for e in doc["traceEvents"] if e["ph"] == "X"}
+    assert any(n.startswith("draft x") for n in spans)
+    assert any(n.startswith("verify x") for n in spans)

@@ -864,3 +864,95 @@ def test_kv_dtype_requires_paged_backend(paged_setup):
     with pytest.raises(ValueError, match="kv_dtype"):
         ServingEngine(cfg, params, ServeConfig(
             batch_slots=2, max_len=32, attention=FUSED8, kv_dtype="int8"))
+
+
+def test_misbehaving_scheduler_victim_raises_descriptive_error(paged_setup):
+    """Satellite bugfix: a Scheduler.victim subclass returning a rid that
+    is not live used to surface as a bare StopIteration out of
+    _grow_pages_for_decode's next(); it must raise a RuntimeError naming
+    the offending rid and the live set."""
+    from repro.serving.scheduler import Scheduler
+
+    class Misbehaving(Scheduler):
+        def victim(self, live):
+            return 999_999               # no such request
+
+    cfg, params = paged_setup
+    sc = ServeConfig(batch_slots=2, max_len=16, attention=PAGED8,
+                     cache_pages=2, scheduler=Misbehaving())
+    eng = ServingEngine(cfg, params, sc)
+    assert eng.submit([1, 2, 3]) is not None
+    assert eng.submit([4, 5, 6]) is not None
+    with pytest.raises(RuntimeError, match=r"999999.*not a live request"):
+        for _ in range(30):              # decode until the pool runs dry
+            eng.step()
+
+
+def test_preempt_of_draining_slot_stream_identical(paged_setup):
+    """Satellite audit: preempting a slot whose FINAL token is pending
+    (slot_drain set, cache full) must still yield a token-identical
+    stream after resume — the drain flag is recomputed on resume and the
+    parked pending token is reported, not re-sampled."""
+    cfg, params = paged_setup
+    sc = ServeConfig(batch_slots=1, max_len=16, attention=PAGED8)
+    solo = ServingEngine(cfg, params, sc)
+    r = solo.submit([1, 2, 3])
+    want = []
+    while solo.slot_live.any():
+        st = solo.step()
+        if r in st:
+            want.append(st[r])
+
+    eng = ServingEngine(cfg, params, sc)
+    r2 = eng.submit([1, 2, 3])
+    got = []
+    preempted = False
+    for _ in range(60):
+        if eng.slot_drain[0] and not preempted:
+            eng._preempt(0)              # forced: drain slots are normally
+            preempted = True             # spared (no page growth needed)
+        st = eng.step()
+        if r2 in st:
+            got.append(st[r2])
+        if not eng.slot_live.any() and not eng.wait:
+            break
+    assert preempted                     # the drain state was actually hit
+    assert got == want
+    eng.pool.check()
+    assert eng.pool.free_pages == eng.pool.n_pages
+
+
+def test_bursty_cancel_during_preempt_resume_leaks_no_pages(paged_setup):
+    """Satellite: cancel() storms while requests bounce between slots and
+    the wait queue (tight pool → constant preempt/resume) must return the
+    pool to its baseline free count — no page leaks on any cancel path."""
+    cfg, params = paged_setup
+    sc = ServeConfig(batch_slots=2, max_len=16, attention=PAGED8,
+                     cache_pages=3)
+    eng = ServingEngine(cfg, params, sc)
+    rng = np.random.default_rng(11)
+    live_rids = []
+    for i in range(40):
+        if len(live_rids) < 4:
+            r = eng.submit([int(t) for t in
+                            rng.integers(0, 64, int(rng.integers(2, 9)))])
+            if r is not None:
+                live_rids.append(r)
+        eng.step()
+        if live_rids and i % 3 == 2:     # bursty cancels: live AND waiting
+            burst = [live_rids.pop(rng.integers(len(live_rids)))
+                     for _ in range(min(2, len(live_rids)))]
+            for r in burst:
+                eng.cancel(r)
+        eng.pool.check()
+    assert eng.n_preemptions > 0         # churn actually happened
+    for r in live_rids:
+        eng.cancel(r)
+    for _ in range(40):                  # drain whatever remains
+        if not eng.slot_live.any() and not eng.wait:
+            break
+        eng.step()
+        for h in list(eng.request_out):
+            eng.cancel(h)
+    eng.pool.check()
+    assert eng.pool.free_pages == eng.pool.n_pages
